@@ -1,0 +1,51 @@
+//! Head-to-head method comparison (a mini Table 2): FP32 vs
+//! Microscaling vs TetraJet vs TetraJet+Q-EMA vs TetraJet+Q-Ramping,
+//! trained from the same initialization on the same data stream.
+//!
+//! ```bash
+//! cargo run --release --example compare_methods -- --steps 150
+//! ```
+
+use anyhow::Result;
+use tetrajet::config::{MetricsCfg, Policy};
+use tetrajet::experiments::common::{print_table, ExpOpts, Runner};
+use tetrajet::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_tokens(&std::env::args().skip(1).collect::<Vec<_>>(), false)?;
+    let mut opts = ExpOpts::new(true);
+    opts.steps = args.get_usize("steps", 150)?;
+    opts.eval_samples = args.get_usize("eval-samples", 512)?;
+    let mut runner = Runner::new(&opts)?;
+
+    let m = MetricsCfg::off;
+    let runs = vec![
+        runner.run_one("FP32", "fp32", Policy::None, m(), |_| {})?,
+        runner.run_one("Microscaling", "microscaling", Policy::None, m(), |_| {})?,
+        runner.run_one("TetraJet", "tetrajet", Policy::None, m(), |_| {})?,
+        runner.run_one("TetraJet+Q-EMA", "tetrajet_qema", Policy::None, m(), |_| {})?,
+        runner.run_one(
+            "TetraJet+Q-Ramping",
+            "tetrajet",
+            Policy::qramping_default(),
+            m(),
+            |_| {},
+        )?,
+    ];
+    let rows: Vec<Vec<String>> = runs
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.clone(),
+                format!("{:.2}", r.final_acc),
+                format!("{:.4}", r.final_loss),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("method comparison ({} steps, vit-micro)", opts.steps),
+        &["method", "top-1 %", "val loss"],
+        &rows,
+    );
+    Ok(())
+}

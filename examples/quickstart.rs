@@ -1,0 +1,51 @@
+//! Quickstart: load the TetraJet artifacts, train a few steps, evaluate.
+//!
+//! ```bash
+//! make artifacts && cargo build --release
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use tetrajet::config::TrainConfig;
+use tetrajet::coordinator::Trainer;
+use tetrajet::runtime::{artifacts, cpu_client, ModelArtifacts};
+
+fn main() -> Result<()> {
+    let root = artifacts::default_root();
+    let client = cpu_client()?;
+    println!("loading AOT artifacts (compiles HLO once, ~30 s)...");
+    let arts = ModelArtifacts::load(&client, &root, "vit-micro", 16, "tetrajet")?;
+    println!(
+        "model {} | {} params ({} quantized) | batch {}",
+        arts.manifest.model.name,
+        arts.manifest.total_params,
+        arts.manifest.qw_total,
+        arts.manifest.batch
+    );
+
+    let mut cfg = TrainConfig::default_run("tetrajet");
+    cfg.steps = 40;
+    cfg.warmup = 4;
+    cfg.eval_samples = 256;
+    let params = artifacts::run_init(&client, &root, "vit-micro", cfg.init_seed)?;
+    let mut tr = Trainer::new(&arts, cfg, params)?;
+
+    println!("training 40 steps of MXFP4 (E2M1 + E8M0/32) ViT...");
+    for step in 0..40 {
+        let (loss, acc) = tr.step()?;
+        if step % 5 == 0 {
+            println!("  step {step:>3}  loss {loss:.4}  batch-acc {acc:.2}");
+        }
+    }
+    let ev = tr.eval()?;
+    println!(
+        "done: top-1 {:.2}% on {} held-out samples (val loss {:.4})",
+        ev.acc_pct, ev.samples, ev.mean_loss
+    );
+
+    // Peek at the paper's §4 oscillation statistics.
+    let (_, conf) = tr.snapshot_latents();
+    let mean_conf = tetrajet::util::stats::mean_f32(&conf);
+    println!("mean quantization confidence of weights: {mean_conf:.4}");
+    Ok(())
+}

@@ -1,0 +1,272 @@
+"""AOT exporter: lower the L2 steps to HLO **text** + JSON manifests.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids, so
+text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (run from python/, e.g. via `make artifacts`):
+
+  python -m compile.aot --out ../artifacts --core          # core set
+  python -m compile.aot --out ../artifacts --full          # + ablations
+  python -m compile.aot --out ../artifacts --variant q1    # one variant
+  python -m compile.aot --out ../artifacts --golden-only
+  python -m compile.aot --list
+
+Outputs per (model, variant):
+  artifacts/<model>/b<batch>/<variant>/{train_step,eval_step,probe}.hlo.txt
+  artifacts/<model>/b<batch>/<variant>/manifest.json
+plus per model: artifacts/<model>/init.hlo.txt + init_manifest.json
+and once:       artifacts/golden/quant_vectors.json
+"""
+
+import argparse
+import hashlib
+import json
+import os
+from dataclasses import asdict
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .formats import E2M1, E3M0
+from .kernels import ref as kref
+from .model import CORE_VARIANTS, MODELS, VARIANTS, variant
+from .train import (
+    build_eval_step,
+    build_probe,
+    build_train_step,
+    eval_io_spec,
+    probe_block_index,
+    probe_io_spec,
+    train_io_spec,
+)
+from .vit import init_params, param_spec, qw_total, total_params
+
+_DTYPES = {"f32": np.float32, "i32": np.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(io_list):
+    return [
+        jax.ShapeDtypeStruct(tuple(e["shape"]), _DTYPES[e["dtype"]])
+        for e in io_list
+    ]
+
+
+def _write(path: str, text: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+
+def _input_fingerprint() -> str:
+    """Hash of the compile-path sources, recorded in every manifest so the
+    Makefile/coordinator can detect stale artifacts."""
+    h = hashlib.sha256()
+    base = os.path.dirname(__file__)
+    for root, _, files in sorted(os.walk(base)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def export_variant(model_name: str, vname: str, batch: int, out: str):
+    mcfg = MODELS[model_name]
+    vcfg = variant(vname)
+    d = os.path.join(out, model_name, f"b{batch}", vname)
+    print(f"[aot] {model_name}/b{batch}/{vname}")
+    tspec = train_io_spec(mcfg, batch)
+    espec = eval_io_spec(mcfg, batch)
+    pspec = probe_io_spec(mcfg, batch)
+
+    lowered = jax.jit(build_train_step(mcfg, vcfg, batch), keep_unused=True).lower(
+        *_specs(tspec.inputs)
+    )
+    _write(os.path.join(d, "train_step.hlo.txt"), to_hlo_text(lowered))
+    lowered = jax.jit(build_eval_step(mcfg, vcfg, batch), keep_unused=True).lower(
+        *_specs(espec.inputs)
+    )
+    _write(os.path.join(d, "eval_step.hlo.txt"), to_hlo_text(lowered))
+    lowered = jax.jit(build_probe(mcfg, vcfg, batch), keep_unused=True).lower(
+        *_specs(pspec.inputs)
+    )
+    _write(os.path.join(d, "probe.hlo.txt"), to_hlo_text(lowered))
+
+    manifest = {
+        "schema": 1,
+        "fingerprint": _input_fingerprint(),
+        "model": {**asdict(mcfg), "seq": mcfg.seq, "patch_dim": mcfg.patch_dim},
+        "variant": {**asdict(vcfg), "enabled": list(vcfg.enabled)},
+        "batch": batch,
+        "probe_block": probe_block_index(mcfg),
+        "params": {
+            "total": total_params(mcfg),
+            "qw_total": qw_total(mcfg),
+            "segments": [
+                {
+                    "name": s.name,
+                    "shape": list(s.shape),
+                    "offset": s.offset,
+                    "size": s.size,
+                    "quantized": s.quantized,
+                    "weight_decay": s.weight_decay,
+                }
+                for s in param_spec(mcfg)
+            ],
+        },
+        "train_step": {"inputs": tspec.inputs, "outputs": tspec.outputs},
+        "eval_step": {"inputs": espec.inputs, "outputs": espec.outputs},
+        "probe": {"inputs": pspec.inputs, "outputs": pspec.outputs},
+    }
+    _write(os.path.join(d, "manifest.json"), json.dumps(manifest, indent=1))
+
+
+def export_init(model_name: str, out: str):
+    mcfg = MODELS[model_name]
+    d = os.path.join(out, model_name)
+    print(f"[aot] {model_name}/init")
+    lowered = jax.jit(lambda seed: (init_params(seed, mcfg),)).lower(
+        jax.ShapeDtypeStruct((), np.int32)
+    )
+    _write(os.path.join(d, "init.hlo.txt"), to_hlo_text(lowered))
+    manifest = {
+        "schema": 1,
+        "model": {**asdict(mcfg), "seq": mcfg.seq, "patch_dim": mcfg.patch_dim},
+        "inputs": [{"name": "seed", "dtype": "i32", "shape": []}],
+        "outputs": [
+            {"name": "params", "dtype": "f32", "shape": [total_params(mcfg)]}
+        ],
+    }
+    _write(os.path.join(d, "init_manifest.json"), json.dumps(manifest, indent=1))
+
+
+def export_golden(out: str, seed: int = 1234):
+    """Golden vectors for the Rust quant mirror (rust/tests/golden.rs)."""
+    rng = np.random.default_rng(seed)
+    cases = []
+
+    def edge_values(fmt):
+        lv = np.asarray(fmt.levels, np.float32)
+        bd = fmt.boundaries_np()
+        vals = np.concatenate(
+            [lv, bd, lv * 4.0, bd * 0.25, np.float32([0, 1e-30, -1e-30, 1e30, -1e30, 31.0])]
+        )
+        pad = (-len(vals)) % 32
+        return np.concatenate([vals, np.zeros(pad, np.float32)]).reshape(1, -1)
+
+    for fmt in (E2M1, E3M0):
+        for scaling in ("tf", "floor"):
+            for rounding in ("det", "stoch"):
+                for tag, x in (
+                    ("normal", (rng.standard_normal((4, 64)) * 2.5).astype(np.float32)),
+                    ("edge", edge_values(fmt)),
+                ):
+                    u = rng.random(x.shape).astype(np.float32)
+                    q = kref.mx_quantize_ref(
+                        x, fmt, scaling, rounding, u if rounding == "stoch" else None
+                    )
+                    cases.append(
+                        {
+                            "kind": "mx",
+                            "fmt": fmt.name,
+                            "scaling": scaling,
+                            "rounding": rounding,
+                            "tag": tag,
+                            "shape": list(x.shape),
+                            "x": x.flatten().tolist(),
+                            "u": u.flatten().tolist() if rounding == "stoch" else [],
+                            "q": np.asarray(q).flatten().tolist(),
+                        }
+                    )
+        # Q-EMA cases (always det, tf scaling).
+        x = (rng.standard_normal((4, 64)) * 2.5).astype(np.float32)
+        ema = (x + rng.standard_normal(x.shape) * 0.2).astype(np.float32)
+        q = kref.qema_quantize_ref(x, ema, fmt)
+        cases.append(
+            {
+                "kind": "qema",
+                "fmt": fmt.name,
+                "scaling": "tf",
+                "rounding": "det",
+                "tag": "normal",
+                "shape": list(x.shape),
+                "x": x.flatten().tolist(),
+                "u": ema.flatten().tolist(),  # 'u' slot carries the EMA
+                "q": np.asarray(q).flatten().tolist(),
+            }
+        )
+    # INT4 per-tensor.
+    x = (rng.standard_normal((4, 64)) * 3.0).astype(np.float32)
+    u = rng.random(x.shape).astype(np.float32)
+    for rounding, uu in (("det", None), ("stoch", u)):
+        q = kref.int4_quantize_ref(x, uu)
+        cases.append(
+            {
+                "kind": "int4",
+                "fmt": "int4",
+                "scaling": "per-tensor",
+                "rounding": rounding,
+                "tag": "normal",
+                "shape": list(x.shape),
+                "x": x.flatten().tolist(),
+                "u": u.flatten().tolist() if uu is not None else [],
+                "q": np.asarray(q).flatten().tolist(),
+            }
+        )
+    _write(
+        os.path.join(out, "golden", "quant_vectors.json"),
+        json.dumps({"schema": 1, "seed": seed, "cases": cases}),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--model", default="vit-micro", choices=sorted(MODELS))
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--variant", action="append", default=[])
+    ap.add_argument("--core", action="store_true", help="export core set")
+    ap.add_argument("--full", action="store_true", help="export all variants")
+    ap.add_argument("--golden-only", action="store_true")
+    ap.add_argument("--no-golden", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for name in sorted(VARIANTS):
+            print(name)
+        return
+    if args.golden_only:
+        export_golden(args.out)
+        return
+
+    names = list(args.variant)
+    if args.core:
+        names += [n for n in CORE_VARIANTS if n not in names]
+    if args.full:
+        names += [n for n in sorted(VARIANTS) if n not in names]
+    if not names:
+        names = [n for n in CORE_VARIANTS]
+
+    export_init(args.model, args.out)
+    for n in names:
+        export_variant(args.model, n, args.batch, args.out)
+    if not args.no_golden:
+        export_golden(args.out)
+
+
+if __name__ == "__main__":
+    main()

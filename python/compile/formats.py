@@ -1,0 +1,98 @@
+"""FP4 / INT4 numeric-format definitions shared by all quantizers.
+
+This is the single source of truth for the representable grids. The Rust
+coordinator carries a bit-exact mirror (rust/src/quant/formats.rs) that is
+golden-tested against this module via vectors exported by `aot.py`.
+
+Paper references (TetraJet, ICML 2025):
+  - §3.1: MXFP4 = E2M1 payload + shared E8M0 scale over groups of 32.
+    E2M1: Qp = 6, Qn = -6.
+  - §3.2: truncation-free scaling  s = ceil(log2(2*M / (Qp - Qn)))
+          vs. Microscaling's       s = floor(log2(M)) - Emax.
+  - Table 7: E3M0 is the alternative FP4 format (no mantissa bit).
+"""
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+GROUP = 32  # MX group size (1x32 / 32x1)
+
+# E8M0 scale-exponent clamp (8-bit biased exponent).
+SCALE_EXP_MIN = -127
+SCALE_EXP_MAX = 127
+
+# Epsilon substituted for M when a group is all-zero (paper §3.2).
+ZERO_GROUP_EPS = 1e-8
+
+
+@dataclass(frozen=True)
+class FP4Format:
+    """A 4-bit floating-point format described by its representable grid.
+
+    ``levels`` is the full ascending grid of representable values
+    (negatives, zero, positives). ``emax`` is the largest exponent, used
+    by Microscaling's floor-based shared-scale rule. ``mbits`` /
+    ``delta_min`` parameterise the closed-form rounding used by the
+    Pallas kernels: within the binade [2^(e-1), 2^e) the grid spacing is
+    ``2^(e-1-mbits)``, clamped below by the subnormal spacing
+    ``delta_min``.
+    """
+
+    name: str
+    levels: Tuple[float, ...]
+    emax: int
+    mbits: int
+    delta_min: float
+
+    @property
+    def qp(self) -> float:
+        return self.levels[-1]
+
+    @property
+    def qn(self) -> float:
+        return self.levels[0]
+
+    @property
+    def boundaries(self) -> Tuple[float, ...]:
+        """Midpoints between consecutive levels (decision thresholds)."""
+        ls = self.levels
+        return tuple((ls[i] + ls[i + 1]) / 2.0 for i in range(len(ls) - 1))
+
+    def levels_np(self) -> np.ndarray:
+        return np.asarray(self.levels, dtype=np.float32)
+
+    def boundaries_np(self) -> np.ndarray:
+        return np.asarray(self.boundaries, dtype=np.float32)
+
+
+def _sym(pos):
+    return tuple([-v for v in reversed(pos)] + [0.0] + list(pos))
+
+
+# E2M1: 1 sign, 2 exponent, 1 mantissa. Positives: 0.5,1,1.5,2,3,4,6.
+E2M1 = FP4Format(
+    "e2m1", _sym([0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]), emax=2, mbits=1,
+    delta_min=0.5,
+)
+
+# E3M0: 1 sign, 3 exponent, 0 mantissa (bias 3, exponent-0 encodes zero).
+# Positives: 2^-2 .. 2^4.
+E3M0 = FP4Format(
+    "e3m0", _sym([0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0]), emax=4, mbits=0,
+    delta_min=0.25,
+)
+
+FORMATS = {"e2m1": E2M1, "e3m0": E3M0}
+
+# INT4 per-tensor baseline (Xi et al. 2023, simplified): symmetric grid
+# {-7..7} scaled by per-tensor max/7.
+INT4_QMAX = 7
+
+
+def fp4_format(name: str) -> FP4Format:
+    try:
+        return FORMATS[name]
+    except KeyError:  # pragma: no cover - config error
+        raise ValueError(f"unknown FP4 format {name!r}; known: {sorted(FORMATS)}")

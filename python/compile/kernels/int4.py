@@ -1,0 +1,53 @@
+"""Layer-1 Pallas kernel: per-tensor symmetric INT4 fake quantization.
+
+Baseline quantizer for Table 2 ("INT4 / per-tensor" row, Xi et al. 2023
+simplified — see DESIGN.md §Substitutions). Per-tensor scaling needs a
+global max, so the kernel runs as a single grid cell over the whole
+tensor (on TPU this would be a two-pass reduce + scale kernel; the
+tensors involved are small enough that a single VMEM-resident pass is
+also realistic for the reference models).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..formats import INT4_QMAX
+
+
+def _int4_det_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(jnp.abs(x))
+    scale = jnp.where(m == 0.0, jnp.float32(1.0), m / jnp.float32(INT4_QMAX))
+    y = x / scale
+    q = jnp.clip(jnp.sign(y) * jnp.floor(jnp.abs(y) + 0.5), -INT4_QMAX, INT4_QMAX)
+    o_ref[...] = q * scale
+
+
+def _int4_stoch_kernel(x_ref, u_ref, o_ref):
+    x = x_ref[...]
+    u = u_ref[...]
+    m = jnp.max(jnp.abs(x))
+    scale = jnp.where(m == 0.0, jnp.float32(1.0), m / jnp.float32(INT4_QMAX))
+    y = x / scale
+    lo = jnp.floor(y)
+    q = jnp.clip(
+        jnp.where((y - lo) > u, lo + 1.0, lo), -INT4_QMAX, INT4_QMAX
+    )
+    o_ref[...] = q * scale
+
+
+@functools.partial(jax.jit, static_argnames=())
+def int4_quantize_pallas(x, u=None):
+    """Per-tensor INT4 fake-quantizer; stochastic when ``u`` is given."""
+    out_shape = jax.ShapeDtypeStruct(x.shape, jnp.float32)
+    if u is None:
+        return pl.pallas_call(
+            _int4_det_kernel, out_shape=out_shape, interpret=True
+        )(x)
+    assert u.shape == x.shape
+    return pl.pallas_call(
+        _int4_stoch_kernel, out_shape=out_shape, interpret=True
+    )(x, u)

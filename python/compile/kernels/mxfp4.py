@@ -1,0 +1,176 @@
+"""Layer-1 Pallas kernels: MXFP4 fake-quantization.
+
+One fused pass per tile: load a ``(block_rows, C)`` tile into VMEM,
+compute the per-1x32-group max, derive the shared E8M0 scale exponent,
+round onto the FP4 grid and write the dequantized tile back. On a real
+TPU this is exactly the HBM->VMEM schedule expressed by the BlockSpec
+(the per-group reduction and rounding are VPU element-wise work; the
+consumer matmul then feeds the MXU); here the kernels are lowered with
+``interpret=True`` because the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see DESIGN.md §Hardware-Adaptation).
+
+Numerics are defined by ``ref.py``; ``python/tests/test_kernels.py``
+asserts bit-exact agreement, and hypothesis sweeps shapes/dtypes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import exp2i
+from ..formats import (
+    GROUP,
+    SCALE_EXP_MAX,
+    SCALE_EXP_MIN,
+    ZERO_GROUP_EPS,
+    FP4Format,
+)
+
+# Default tile height. The tile is (DEFAULT_BLOCK_ROWS, C) f32; with the
+# largest activation width in the reference models (C = 1024) this is
+# 256*1024*4 B = 1 MiB in + 1 MiB out, comfortably inside the ~16 MiB
+# VMEM budget of a TPU core while amortising grid overhead.
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _scale_exponent_k(max_abs, fmt: FP4Format, scaling: str):
+    """In-kernel shared-scale exponent; mirrors ref.scale_exponent."""
+    m_t = jnp.where(max_abs == 0.0, jnp.float32(ZERO_GROUP_EPS), max_abs)
+    if scaling == "tf":
+        m, e = jnp.frexp(m_t / jnp.float32(fmt.qp))
+        s = jnp.where(m == 0.5, e - 1, e)
+    else:  # 'floor'
+        _, e = jnp.frexp(m_t)
+        s = (e - 1) - fmt.emax
+    return jnp.clip(s, SCALE_EXP_MIN, SCALE_EXP_MAX)
+
+
+def _grid_spacing_mag(a, fmt: FP4Format):
+    """Closed-form FP4 grid spacing at magnitude ``a`` (table-free).
+
+    Within the binade [2^(e-1), 2^e) of ``a`` the representable grid has
+    uniform spacing 2^(e-1-mbits); below the first normal binade the
+    subnormal spacing ``delta_min`` applies. Spacings are exact powers
+    of two, so the divisions/floors downstream are exact in f32.
+    """
+    _, e = jnp.frexp(a)
+    delta = exp2i(jnp.clip(e - 1 - fmt.mbits, -127, 127))
+    return jnp.maximum(delta, jnp.float32(fmt.delta_min))
+
+
+def _round_det_cf(y, fmt: FP4Format):
+    """Deterministic round-to-nearest, ties toward +inf (== table oracle).
+
+    All midpoints of a bracket (q1, q2) are exact multiples of the
+    spacing of |y|'s binade, so a single fused floor reproduces the
+    table-based round_D including its tie rule.
+    """
+    delta = _grid_spacing_mag(jnp.abs(y), fmt)
+    return jnp.floor(y / delta + 0.5) * delta
+
+
+def _spacing_above(level, fmt: FP4Format):
+    """Gap between grid ``level`` and the next level above it.
+
+    For a negative level whose magnitude starts a binade (e.g. -2 in
+    E2M1), moving up (toward zero) leaves the binade, so the gap is
+    halved; the subnormal clamp then restores ``delta_min`` near zero.
+    """
+    a = jnp.abs(level)
+    m, e = jnp.frexp(a)
+    delta = exp2i(jnp.clip(e - 1 - fmt.mbits, -127, 127))
+    delta = jnp.where((level < 0) & (m == 0.5), delta * 0.5, delta)
+    # frexp(0) reports e == 0; the gap above level 0 is the subnormal one.
+    delta = jnp.where(a == 0.0, jnp.float32(fmt.delta_min), delta)
+    return jnp.maximum(delta, jnp.float32(fmt.delta_min))
+
+
+def _bracket_cf(y, fmt: FP4Format):
+    """Bracketing grid values (q1, q2), q1 <= y <= q2, matching the table
+    oracle's semantics exactly: q1 is the largest level <= y, clamped to
+    the second-highest level so q2 never exceeds Qp."""
+    a = jnp.abs(y)
+    delta = _grid_spacing_mag(a, fmt)
+    q1 = jnp.where(y >= 0.0, jnp.floor(a / delta), -jnp.ceil(a / delta)) * delta
+    q1 = jnp.minimum(q1, jnp.float32(fmt.levels[-2]))
+    return q1, q1 + _spacing_above(q1, fmt)
+
+
+def _quantize_tile(x, fmt: FP4Format, scaling: str, rounding: str, u=None):
+    """Fake-quantize one (rows, C) tile; groups along the last axis."""
+    r, c = x.shape
+    g = c // GROUP
+    xg = x.reshape(r, g, GROUP)
+    max_abs = jnp.max(jnp.abs(xg), axis=-1)
+    s = _scale_exponent_k(max_abs, fmt, scaling)
+    scale = exp2i(s)[..., None]
+    y = jnp.clip(xg / scale, fmt.qn, fmt.qp)
+    if rounding == "det":
+        q = _round_det_cf(y, fmt)
+    else:  # 'stoch'
+        q1, q2 = _bracket_cf(y, fmt)
+        ug = u.reshape(r, g, GROUP)
+        q = jnp.where((y - q1) > ug * (q2 - q1), q2, q1)
+    return (q * scale).reshape(r, c)
+
+
+def _det_kernel(x_ref, o_ref, *, fmt, scaling):
+    o_ref[...] = _quantize_tile(x_ref[...], fmt, scaling, "det")
+
+
+def _stoch_kernel(x_ref, u_ref, o_ref, *, fmt, scaling):
+    o_ref[...] = _quantize_tile(x_ref[...], fmt, scaling, "stoch", u_ref[...])
+
+
+def _block_rows(rows: int, block_rows: int) -> int:
+    """Largest divisor of ``rows`` not exceeding ``block_rows``."""
+    b = min(rows, block_rows)
+    while rows % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fmt", "scaling", "rounding", "block_rows")
+)
+def mx_quantize_pallas(
+    x,
+    u=None,
+    *,
+    fmt: FP4Format,
+    scaling: str,
+    rounding: str,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+):
+    """Pallas MXFP4 fake-quantizer over ``x`` (R, C), 1x32 groups along C.
+
+    ``u``: Uniform[0,1) samples, required iff ``rounding == 'stoch'``.
+    """
+    r, c = x.shape
+    assert c % GROUP == 0, f"last dim {c} not a multiple of {GROUP}"
+    br = _block_rows(r, block_rows)
+    grid = (r // br,)
+    spec = pl.BlockSpec((br, c), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((r, c), jnp.float32)
+    if rounding == "det":
+        kernel = functools.partial(_det_kernel, fmt=fmt, scaling=scaling)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[spec],
+            out_specs=spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(x)
+    assert u is not None and u.shape == x.shape
+    kernel = functools.partial(_stoch_kernel, fmt=fmt, scaling=scaling)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=out_shape,
+        interpret=True,
+    )(x, u)

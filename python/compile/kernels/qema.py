@@ -1,0 +1,59 @@
+"""Layer-1 Pallas kernel: EMA Quantizer (Q-EMA, paper §5 / Alg. 1).
+
+Same tile schedule as ``mxfp4.py`` but with a second VMEM input stream
+carrying the EMA weights: the scale and bracketing candidates [q1, q2]
+come from the *current* weight tile, the choice between them from the
+EMA tile. Numerics defined by ``ref.qema_quantize_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..formats import GROUP, FP4Format
+from .ref import exp2i
+from .mxfp4 import DEFAULT_BLOCK_ROWS, _block_rows, _bracket_cf, _scale_exponent_k
+
+
+def _qema_kernel(w_ref, e_ref, o_ref, *, fmt, scaling):
+    w = w_ref[...]
+    ema = e_ref[...]
+    r, c = w.shape
+    g = c // GROUP
+    wg = w.reshape(r, g, GROUP)
+    eg = ema.reshape(r, g, GROUP)
+    max_abs = jnp.max(jnp.abs(wg), axis=-1)
+    s = _scale_exponent_k(max_abs, fmt, scaling)
+    scale = exp2i(s)[..., None]
+    y = jnp.clip(wg / scale, fmt.qn, fmt.qp)
+    ye = eg / scale
+    q1, q2 = _bracket_cf(y, fmt)
+    q = jnp.where(jnp.abs(ye - q1) < jnp.abs(ye - q2), q1, q2)
+    o_ref[...] = (q * scale).reshape(r, c)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "scaling", "block_rows"))
+def qema_quantize_pallas(
+    w,
+    ema,
+    *,
+    fmt: FP4Format,
+    scaling: str = "tf",
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+):
+    """Pallas Q-EMA fake-quantizer over ``w``/``ema`` (R, C), 1x32 groups."""
+    r, c = w.shape
+    assert c % GROUP == 0 and ema.shape == w.shape
+    br = _block_rows(r, block_rows)
+    spec = pl.BlockSpec((br, c), lambda i: (i, 0))
+    kernel = functools.partial(_qema_kernel, fmt=fmt, scaling=scaling)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // br,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,
+    )(w, ema)

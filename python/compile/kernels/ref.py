@@ -1,0 +1,167 @@
+"""Pure-jnp oracle for every quantizer (the CORE correctness signal).
+
+These functions define the exact numerics of the system. The Pallas
+kernels in ``mxfp4.py`` / ``qema.py`` / ``int4.py`` must match them
+bit-for-bit (asserted by ``python/tests/test_kernels.py``), and the Rust
+mirror (rust/src/quant/) is golden-tested against vectors generated from
+these functions.
+
+All quantizers here are *fake-quantizers*: they return f32 values lying
+exactly on the (scaled) MXFP4 grid. See DESIGN.md §Hardware-Adaptation.
+
+Shape convention: ``x`` is ``(R, C)`` with ``C % 32 == 0``; quantization
+groups are the 32-element runs along the last axis (the 1x32 layout).
+The 32x1 layout is obtained by the callers via transpose (quantizer.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..formats import (
+    GROUP,
+    INT4_QMAX,
+    SCALE_EXP_MAX,
+    SCALE_EXP_MIN,
+    ZERO_GROUP_EPS,
+    FP4Format,
+)
+
+
+def exp2i(s):
+    """Exact 2^s for integer s in [-127, 127], built by bit manipulation.
+
+    XLA lowers exp2 as exp(s * ln 2), which is off by ulps at large |s|
+    (e.g. exp2(98) != 2^98 in f32) — enough to break bit-exactness with
+    the Rust mirror. IEEE bit construction is exact; s = -127 needs the
+    subnormal encoding.
+    """
+    s = s.astype(jnp.int32)
+    normal = ((s + 127) << 23).astype(jnp.uint32)
+    sub = jnp.uint32(1 << 22)  # 2^-127
+    bits = jnp.where(s >= -126, normal, sub)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _group(x):
+    r, c = x.shape
+    assert c % GROUP == 0, f"last dim {c} not a multiple of {GROUP}"
+    return x.reshape(r, c // GROUP, GROUP)
+
+
+def _ceil_log2(r):
+    """Exact ceil(log2(r)) for r > 0 via frexp (no transcendental error).
+
+    frexp: r = m * 2^e with m in [0.5, 1). ceil(log2 r) = e-1 iff m == 0.5
+    (r is an exact power of two) else e.
+    """
+    m, e = jnp.frexp(r)
+    return jnp.where(m == 0.5, e - 1, e)
+
+
+def _floor_log2(r):
+    """Exact floor(log2(r)) for r > 0: frexp exponent minus one."""
+    _, e = jnp.frexp(r)
+    return e - 1
+
+
+def scale_exponent(max_abs, fmt: FP4Format, scaling: str):
+    """Shared-scale exponent s (int32) for a group with max-abs ``max_abs``.
+
+    scaling='tf'   : TetraJet truncation-free  s = ceil(log2(2M/(Qp-Qn)))
+                     = ceil(log2(M/Qp))       (paper §3.2; M=0 -> eps)
+    scaling='floor': Microscaling              s = floor(log2(M)) - Emax
+    """
+    m_t = jnp.where(max_abs == 0.0, jnp.float32(ZERO_GROUP_EPS), max_abs)
+    if scaling == "tf":
+        s = _ceil_log2(m_t / jnp.float32(fmt.qp))
+    elif scaling == "floor":
+        s = _floor_log2(m_t) - fmt.emax
+    else:  # pragma: no cover - config error
+        raise ValueError(f"unknown scaling {scaling!r}")
+    return jnp.clip(s, SCALE_EXP_MIN, SCALE_EXP_MAX)
+
+
+def round_det(y, fmt: FP4Format):
+    """Deterministic round-to-nearest on the FP4 grid (ties toward the
+    larger value, matching the paper's round_D definition)."""
+    b = jnp.asarray(fmt.boundaries_np())
+    levels = jnp.asarray(fmt.levels_np())
+    idx = jnp.sum(y[..., None] >= b, axis=-1)
+    return levels[idx]
+
+
+def _bracket(y, fmt: FP4Format):
+    """The two consecutive grid values q1 <= y <= q2 (clipped at the ends)."""
+    levels = jnp.asarray(fmt.levels_np())
+    i = jnp.clip(
+        jnp.sum(y[..., None] >= levels, axis=-1) - 1, 0, len(fmt.levels) - 2
+    )
+    return levels[i], levels[i + 1]
+
+
+def round_stoch(y, u, fmt: FP4Format):
+    """Stochastic rounding: E[round_S(y)] = y for y inside the grid.
+
+    ``u`` are i.i.d. Uniform[0,1) samples of the same shape as ``y``.
+    P(q2) = (y - q1) / (q2 - q1).
+    """
+    q1, q2 = _bracket(y, fmt)
+    take_up = (y - q1) > u * (q2 - q1)
+    return jnp.where(take_up, q2, q1)
+
+
+def mx_quantize_ref(x, fmt: FP4Format, scaling: str, rounding: str, u=None):
+    """Fake-quantize ``x`` (R, C) to MXFP4 with 1x32 groups on the last axis.
+
+    Returns f32 values on the scaled FP4 grid. With scaling='floor' the
+    scaled values can exceed [Qn, Qp] and are truncated (clipped), which is
+    exactly the Microscaling behaviour the paper criticises; with 'tf' the
+    clip is a mathematical no-op.
+    """
+    xg = _group(x)
+    max_abs = jnp.max(jnp.abs(xg), axis=-1)
+    s = scale_exponent(max_abs, fmt, scaling)
+    scale = exp2i(s)[..., None]
+    y = jnp.clip(xg / scale, fmt.qn, fmt.qp)
+    if rounding == "det":
+        q = round_det(y, fmt)
+    elif rounding == "stoch":
+        assert u is not None, "stochastic rounding needs uniforms"
+        q = round_stoch(y, _group(u), fmt)
+    else:  # pragma: no cover - config error
+        raise ValueError(f"unknown rounding {rounding!r}")
+    return (q * scale).reshape(x.shape)
+
+
+def qema_quantize_ref(w, ema, fmt: FP4Format, scaling: str = "tf"):
+    """EMA Quantizer (paper Alg. 1): scale from the *current* weight block,
+    bracket [q1, q2] from the current latent weight, but pick the candidate
+    nearer to the EMA latent weight (strictly-nearer -> q1, ties -> q2)."""
+    wg = _group(w)
+    eg = _group(ema)
+    max_abs = jnp.max(jnp.abs(wg), axis=-1)
+    s = scale_exponent(max_abs, fmt, scaling)
+    scale = exp2i(s)[..., None]
+    y = jnp.clip(wg / scale, fmt.qn, fmt.qp)
+    ye = eg / scale
+    q1, q2 = _bracket(y, fmt)
+    q = jnp.where(jnp.abs(ye - q1) < jnp.abs(ye - q2), q1, q2)
+    return (q * scale).reshape(w.shape)
+
+
+def int4_quantize_ref(x, u=None):
+    """Per-tensor symmetric INT4 fake quantization (baseline, Table 2).
+
+    scale = max|x| / 7; deterministic round-half-away-from-zero, or
+    stochastic when ``u`` is given.
+    """
+    m = jnp.max(jnp.abs(x))
+    scale = jnp.where(m == 0.0, jnp.float32(1.0), m / jnp.float32(INT4_QMAX))
+    y = x / scale
+    if u is None:
+        q = jnp.sign(y) * jnp.floor(jnp.abs(y) + 0.5)
+    else:
+        lo = jnp.floor(y)
+        q = jnp.where((y - lo) > u, lo + 1.0, lo)
+    q = jnp.clip(q, -INT4_QMAX, INT4_QMAX)
+    return q * scale

@@ -1,0 +1,99 @@
+"""TetraJet / Microscaling MXFP4 linear layer (paper §3.3–3.4).
+
+Forward (Eq. 3):            Y = Q_D^(1)(X) · Q_D^(2)(W^T)
+Backward, TetraJet (4, 5):  ∇X = Q_S^(3)(∇Y) · Q_S^(4)(Q_D^(2)(W^T)^T)
+                            ∇W = Q_S^(5)(∇Y^T) · Q_S^(6)(Q_D^(1)(X))
+Backward, Microscaling (6,7): same shapes but deterministic rounding and
+the *fresh full-precision* X / W as quantizer inputs (flow='naive'),
+which makes the gradient biased — it is the gradient of a different
+network whose operands are quantized along the wrong axes (§3.4).
+
+Group layouts follow the MX block-format rule: the first operand of each
+matmul is quantized 1x32, the second 32x1 — both along the contraction
+axis (handled by quantize_2d's ``axis`` argument).
+
+The layer is a ``jax.custom_vjp``: the forward applies the straight-
+through estimator (STE) through Q^(1)/Q^(2); the backward implements the
+papers' exact quantized-gradient recipes above.
+"""
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quantizer import IDENTITY, QuantizerCfg, qema_quantize_2d, quantize_2d
+
+
+@dataclass(frozen=True)
+class LinearQuantCfg:
+    """Full quantization recipe for one linear layer (all six Q^(i))."""
+
+    q: Tuple[QuantizerCfg, ...] = field(default_factory=lambda: (IDENTITY,) * 6)
+    flow: str = "double"  # 'double' (TetraJet) | 'naive' (Microscaling)
+    qema: bool = False  # use the EMA quantizer for Q^(2)
+    impl: str = "pallas"  # 'pallas' | 'ref'
+
+    def __post_init__(self):
+        assert len(self.q) == 6 and self.flow in ("double", "naive")
+
+
+def forward_weight_quant(w, ema_w, cfg: LinearQuantCfg):
+    """Q^(2) as used in the forward pass — the quantized weight the paper's
+    oscillation metrics track (also used by the Dampen regulariser)."""
+    if cfg.qema:
+        return qema_quantize_2d(w, ema_w, 1, cfg.q[1], impl=cfg.impl)
+    return quantize_2d(w, 1, cfg.q[1], impl=cfg.impl)
+
+
+def _float0_zeros(x):
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+def make_qlinear(cfg: LinearQuantCfg):
+    """Build the quantized linear primitive ``qlinear(x, w, ema_w, key)``.
+
+    x: (N, D) activations; w: (C, D) weight; ema_w: (C, D) EMA weight
+    (only read when cfg.qema); key: PRNG key consumed by the stochastic
+    backward quantizers. Returns (N, C).
+    """
+
+    def _fwd_operands(x, w, ema_w):
+        xq = quantize_2d(x, 1, cfg.q[0], impl=cfg.impl)
+        wq = forward_weight_quant(w, ema_w, cfg)
+        return xq, wq
+
+    @jax.custom_vjp
+    def qlinear(x, w, ema_w, key):
+        xq, wq = _fwd_operands(x, w, ema_w)
+        return xq @ wq.T
+
+    def vjp_fwd(x, w, ema_w, key):
+        xq, wq = _fwd_operands(x, w, ema_w)
+        return xq @ wq.T, (x, w, ema_w, xq, wq, key)
+
+    def vjp_bwd(res, gy):
+        x, w, ema_w, xq, wq, key = res
+        k3, k4, k5, k6 = jax.random.split(key, 4)
+        if cfg.flow == "double":
+            # Double quantization: requantize the *already quantized*
+            # forward operands along the transposed group axis (Eq. 4-5).
+            w_src, x_src = wq, xq
+        else:
+            # Microscaling: quantize the fresh full-precision tensors
+            # (wrong-axis operands; biased gradient, Eq. 6-7).
+            w_src, x_src = w, x
+        # ∇X = Q3(∇Y)[1x32 along C] · Q4(w_src)[32x1 along C]
+        gq = quantize_2d(gy, 1, cfg.q[2], key=k3, impl=cfg.impl)
+        wq4 = quantize_2d(w_src, 0, cfg.q[3], key=k4, impl=cfg.impl)
+        dx = gq @ wq4
+        # ∇W = Q5(∇Y^T)[1x32 along N] · Q6(x_src)[32x1 along N]
+        gq5 = quantize_2d(gy.T, 1, cfg.q[4], key=k5, impl=cfg.impl)
+        xq6 = quantize_2d(x_src, 0, cfg.q[5], key=k6, impl=cfg.impl)
+        dw = gq5 @ xq6
+        return dx, dw, jnp.zeros_like(ema_w), _float0_zeros(key)
+
+    qlinear.defvjp(vjp_fwd, vjp_bwd)
+    return qlinear

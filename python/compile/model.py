@@ -1,0 +1,106 @@
+"""Variant registry: every training method the paper evaluates.
+
+A *variant* fixes the quantization recipe baked into one AOT artifact.
+The names here are the interchange contract with the Rust coordinator
+(rust/src/config must list the same names; asserted by the cross-layer
+manifest test).
+
+Coordinator-side policies (Q-Ramping, Dampen, Freeze) are NOT variants:
+they reuse the ``tetrajet`` artifact, whose train step takes ``nw`` /
+``dampen_lambda`` / ``freeze_mask`` inputs (identity values = plain
+TetraJet). See DESIGN.md §7.
+"""
+
+from dataclasses import dataclass, replace
+from typing import Dict, Tuple
+
+from .linear import LinearQuantCfg
+from .quantizer import IDENTITY, QuantizerCfg
+from .vit import MODELS, ModelCfg  # re-export for aot.py  # noqa: F401
+
+
+@dataclass(frozen=True)
+class VariantCfg:
+    """One AOT-compiled training method."""
+
+    name: str
+    kind: str = "mx"  # 'fp32' | 'mx' | 'int4'
+    fwd_fmt: str = "e2m1"
+    bwd_fmt: str = "e2m1"
+    scaling: str = "tf"  # 'tf' | 'floor'
+    bwd_rounding: str = "stoch"  # 'stoch' | 'det'
+    flow: str = "double"  # 'double' | 'naive'
+    qema: bool = False
+    enabled: Tuple[bool, ...] = (True,) * 6  # per-quantizer toggles Q1..Q6
+    impl: str = "pallas"  # 'pallas' | 'ref' (bit-identical; see DESIGN.md)
+
+    def linear_cfg(self) -> LinearQuantCfg:
+        if self.kind == "fp32":
+            return LinearQuantCfg()
+        if self.kind == "int4":
+            qf = QuantizerCfg(kind="int4", rounding="det")
+            qb = QuantizerCfg(kind="int4", rounding=self.bwd_rounding)
+            qs = (qf, qf, qb, qb, qb, qb)
+        else:
+            qf = QuantizerCfg(kind="mx", fmt=self.fwd_fmt, scaling=self.scaling,
+                              rounding="det")
+            qb = QuantizerCfg(kind="mx", fmt=self.bwd_fmt, scaling=self.scaling,
+                              rounding=self.bwd_rounding)
+            qs = (qf, qf, qb, qb, qb, qb)
+        qs = tuple(q if on else IDENTITY for q, on in zip(qs, self.enabled))
+        return LinearQuantCfg(q=qs, flow=self.flow, qema=self.qema,
+                              impl=self.impl)
+
+
+def _registry() -> Dict[str, VariantCfg]:
+    v: Dict[str, VariantCfg] = {}
+
+    def add(cfg: VariantCfg):
+        assert cfg.name not in v, cfg.name
+        v[cfg.name] = cfg
+
+    tj = VariantCfg(name="tetrajet")
+    add(VariantCfg(name="fp32", kind="fp32"))
+    # Rouhani et al. 2023b: floor scaling, deterministic rounding,
+    # fresh-tensor ("naive") backward quantization.
+    add(VariantCfg(name="microscaling", scaling="floor", bwd_rounding="det",
+                   flow="naive"))
+    add(tj)
+    add(replace(tj, name="tetrajet_qema", qema=True))
+    add(VariantCfg(name="int4", kind="int4", flow="naive"))
+    # Table 1: activate a single quantizer Q^(i), TetraJet settings.
+    for i in range(6):
+        onehot = tuple(j == i for j in range(6))
+        add(replace(tj, name=f"q{i + 1}", enabled=onehot, impl="ref"))
+    # Table 5: rounding x gradient-flow x scaling ablation (8 combos).
+    for rnd in ("stoch", "det"):
+        for flow in ("double", "naive"):
+            for sc in ("tf", "floor"):
+                add(VariantCfg(name=f"abl_{rnd}_{flow}_{sc}",
+                               bwd_rounding=rnd, flow=flow, scaling=sc,
+                               impl="ref"))
+    # Table 7: FP4 format selection for forward (A&W) and backward (grad).
+    for ff in ("e2m1", "e3m0"):
+        for bf in ("e2m1", "e3m0"):
+            add(replace(tj, name=f"fmt_{ff}_{bf}", fwd_fmt=ff, bwd_fmt=bf,
+                        impl="ref"))
+    # Table 6: stability ablations (forward quantizers as identity).
+    add(replace(tj, name="tj_no_wq", enabled=(True, False) + (True,) * 4,
+                impl="ref"))
+    add(replace(tj, name="tj_no_wq_aq", enabled=(False, False) + (True,) * 4,
+                impl="ref"))
+    return v
+
+
+VARIANTS = _registry()
+
+# Variants used by the quickstart / integration tests / main experiments;
+# `make artifacts` builds exactly these plus init + golden vectors.
+CORE_VARIANTS = ("fp32", "microscaling", "tetrajet", "tetrajet_qema", "int4")
+
+
+def variant(name: str) -> VariantCfg:
+    try:
+        return VARIANTS[name]
+    except KeyError:  # pragma: no cover - config error
+        raise ValueError(f"unknown variant {name!r}; known: {sorted(VARIANTS)}")

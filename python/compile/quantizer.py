@@ -1,0 +1,117 @@
+"""Layer-2 quantizer dispatch: layout (1x32 vs 32x1), padding, RNG, impl.
+
+The MX block-format constraint (paper §3.3) says the *first* operand of a
+matmul is quantized in 1x32 groups and the *second* in 32x1 groups, i.e.
+both along the contraction axis. This module maps that onto the L1
+kernels, which always group along the last axis of a 2-D array:
+
+  * ``axis=1`` — groups along columns (the 1x32 layout), direct call;
+  * ``axis=0`` — groups along rows (the 32x1 layout), via transpose.
+
+Dimensions that are not multiples of 32 are zero-padded to the next
+multiple (zeros never win the group max and are sliced away afterwards),
+matching how MX hardware handles ragged tails.
+
+``impl`` selects the Pallas kernel ('pallas') or the pure-jnp oracle
+('ref'). Both are bit-identical (tests/test_kernels.py); 'ref' lowers to
+a smaller HLO and is used for the wide experiment sweeps, 'pallas' is
+the default for the core artifacts (DESIGN.md §Substitutions).
+"""
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .formats import GROUP, fp4_format
+from .kernels import ref as kref
+from .kernels.int4 import int4_quantize_pallas
+from .kernels.mxfp4 import mx_quantize_pallas
+from .kernels.qema import qema_quantize_pallas
+
+
+@dataclass(frozen=True)
+class QuantizerCfg:
+    """Configuration of one of the six linear-layer quantizers Q^(i)."""
+
+    kind: str = "mx"  # 'mx' | 'int4' | 'none'
+    fmt: str = "e2m1"  # 'e2m1' | 'e3m0'
+    scaling: str = "tf"  # 'tf' (truncation-free) | 'floor' (Microscaling)
+    rounding: str = "det"  # 'det' | 'stoch'
+
+    @property
+    def stochastic(self) -> bool:
+        return self.kind != "none" and self.rounding == "stoch"
+
+
+IDENTITY = QuantizerCfg(kind="none")
+
+
+def _pad_cols(x):
+    """Zero-pad the last axis of (R, C) to a multiple of GROUP."""
+    r, c = x.shape
+    pad = (-c) % GROUP
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((r, pad), x.dtype)], axis=1)
+    return x, c
+
+
+def _mx_call(x2d, cfg: QuantizerCfg, key, impl: str):
+    xp, c0 = _pad_cols(x2d)
+    u = None
+    if cfg.stochastic:
+        assert key is not None, "stochastic quantizer needs a PRNG key"
+        u = jax.random.uniform(key, xp.shape, jnp.float32)
+    fmt = fp4_format(cfg.fmt)
+    if impl == "pallas":
+        q = mx_quantize_pallas(
+            xp, u, fmt=fmt, scaling=cfg.scaling, rounding=cfg.rounding
+        )
+    else:
+        q = kref.mx_quantize_ref(xp, fmt, cfg.scaling, cfg.rounding, u)
+    return q[:, :c0]
+
+
+def quantize_2d(x, axis: int, cfg: QuantizerCfg, key=None, impl: str = "pallas"):
+    """Fake-quantize a 2-D array with groups along ``axis``.
+
+    axis=1: 1x32 groups (first-operand layout); axis=0: 32x1 groups
+    (second-operand layout). Identity for cfg.kind == 'none'.
+    """
+    assert x.ndim == 2 and axis in (0, 1)
+    if cfg.kind == "none":
+        return x
+    if cfg.kind == "int4":
+        # Per-tensor: group layout is irrelevant.
+        u = None
+        if cfg.stochastic:
+            assert key is not None
+            u = jax.random.uniform(key, x.shape, jnp.float32)
+        if impl == "pallas":
+            return int4_quantize_pallas(x, u)
+        return kref.int4_quantize_ref(x, u)
+    if axis == 0:
+        return _mx_call(x.T, cfg, key, impl).T
+    return _mx_call(x, cfg, key, impl)
+
+
+def qema_quantize_2d(
+    w,
+    ema,
+    axis: int,
+    cfg: QuantizerCfg,
+    impl: str = "pallas",
+):
+    """Q-EMA fake-quantization (always deterministic; paper Alg. 1)."""
+    assert w.ndim == 2 and axis in (0, 1) and ema.shape == w.shape
+    fmt = fp4_format(cfg.fmt)
+    if axis == 0:
+        return qema_quantize_2d(w.T, ema.T, 1, cfg, impl).T
+    wp, c0 = _pad_cols(w)
+    ep, _ = _pad_cols(ema)
+    if impl == "pallas":
+        q = qema_quantize_pallas(wp, ep, fmt=fmt, scaling=cfg.scaling)
+    else:
+        q = kref.qema_quantize_ref(wp, ep, fmt, cfg.scaling)
+    return q[:, :c0]

@@ -1,0 +1,249 @@
+"""Layer-2 training/eval/probe step builders.
+
+Each builder returns a pure jax function over *flat* f32 state vectors —
+the Rust coordinator owns all state between steps and passes it back in
+(DESIGN.md §2). The train step implements:
+
+  * cross-entropy loss over the quantized ViT forward,
+  * the optional Dampen regulariser  λ·Σ‖W − sg(Q^(2)(W))‖²  (Nagel et
+    al. 2022 baseline, Table 4),
+  * AdamW with per-element **Q-Ramping** (paper §6 / Alg. 2) on the
+    quantized segment: each quantized weight element has an amplification
+    factor N_w; its gradient is accumulated for N_w steps and applied
+    with learning rate N_w·lr — exactly "batch size and LR scaled by
+    N_w". N_w ≡ 1 reduces to standard AdamW,
+  * the **Freeze** baseline: elements with freeze_mask > 0 are pinned to
+    freeze_value after the update,
+  * an EMA of the quantized segment (consumed by the Q-EMA forward
+    quantizer and by Freeze's running average).
+
+Input/output orders here are the manifest contract with rust/src/runtime.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .linear import forward_weight_quant
+from .model import VariantCfg
+from .vit import (
+    ModelCfg,
+    forward,
+    param_spec,
+    qw_total,
+    total_params,
+    unflatten,
+    wd_mask,
+)
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+class StepSpec(NamedTuple):
+    """Name/dtype/shape triplets describing one HLO entry point."""
+
+    inputs: list
+    outputs: list
+
+
+def _io(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+def train_io_spec(mcfg: ModelCfg, batch: int) -> StepSpec:
+    p = total_params(mcfg)
+    qw = qw_total(mcfg)
+    ins = [
+        _io("params", "f32", (p,)),
+        _io("opt_m", "f32", (p,)),
+        _io("opt_v", "f32", (p,)),
+        _io("ema", "f32", (qw,)),
+        _io("accum", "f32", (qw,)),
+        _io("nw", "f32", (qw,)),
+        _io("freeze_mask", "f32", (qw,)),
+        _io("freeze_value", "f32", (qw,)),
+        _io("lr", "f32", ()),
+        _io("wd", "f32", ()),
+        _io("ema_beta", "f32", ()),
+        _io("dampen_lambda", "f32", ()),
+        _io("step", "i32", ()),
+        _io("seed", "i32", ()),
+        _io("batch_x", "f32", (batch, mcfg.img, mcfg.img, 3)),
+        _io("batch_y", "i32", (batch,)),
+    ]
+    outs = [
+        _io("params", "f32", (p,)),
+        _io("opt_m", "f32", (p,)),
+        _io("opt_v", "f32", (p,)),
+        _io("ema", "f32", (qw,)),
+        _io("accum", "f32", (qw,)),
+        _io("loss", "f32", ()),
+        _io("acc", "f32", ()),
+    ]
+    return StepSpec(ins, outs)
+
+
+def eval_io_spec(mcfg: ModelCfg, batch: int) -> StepSpec:
+    p = total_params(mcfg)
+    qw = qw_total(mcfg)
+    ins = [
+        _io("params", "f32", (p,)),
+        _io("ema", "f32", (qw,)),
+        _io("batch_x", "f32", (batch, mcfg.img, mcfg.img, 3)),
+        _io("batch_y", "i32", (batch,)),
+    ]
+    outs = [_io("loss_sum", "f32", ()), _io("correct", "f32", ())]
+    return StepSpec(ins, outs)
+
+
+def probe_io_spec(mcfg: ModelCfg, batch: int) -> StepSpec:
+    p = total_params(mcfg)
+    qw = qw_total(mcfg)
+    ins = [
+        _io("params", "f32", (p,)),
+        _io("ema", "f32", (qw,)),
+        _io("batch_x", "f32", (batch, mcfg.img, mcfg.img, 3)),
+    ]
+    outs = [_io("probe", "f32", (batch, mcfg.seq, mcfg.dim))]
+    return StepSpec(ins, outs)
+
+
+def probe_block_index(mcfg: ModelCfg) -> int:
+    """Block whose output activation the instability probe reports.
+
+    The paper probes the 9th of DeiT-T's 12 blocks (~3/4 depth).
+    """
+    return max(0, (3 * mcfg.depth) // 4 - 1)
+
+
+def _loss(params, ema, key, x, y, dampen_lambda, mcfg, qcfg, vcfg):
+    logits, _ = forward(
+        params, x, key, mcfg, qcfg, ema_flat=ema if vcfg.qema else None
+    )
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    # Dampen regulariser over the quantized weights; the quantized value
+    # is treated as a fixed bin centre (stop_gradient), so d/dW of each
+    # term is 2(W - Q(W)) as in Nagel et al. 2022.
+    dampen = jnp.float32(0.0)
+    if vcfg.kind != "fp32":
+        p = unflatten(params, mcfg)
+        e = unflatten(jnp.pad(ema, (0, total_params(mcfg) - ema.shape[0])), mcfg)
+        for s in param_spec(mcfg):
+            if not s.quantized:
+                continue
+            # Stacked (depth, C, D) -> (depth*C, D): the 1x32 group axis
+            # is the trailing dim either way.
+            w = p[s.name].reshape(-1, s.shape[-1])
+            ema_seg = e[s.name].reshape(-1, s.shape[-1])
+            # stop_gradient on the *inputs*: the quantized value is a
+            # fixed bin centre for the regulariser, and Pallas calls do
+            # not support linearization of their primals.
+            wq = forward_weight_quant(
+                jax.lax.stop_gradient(w),
+                jax.lax.stop_gradient(ema_seg),
+                qcfg,
+            )
+            dampen = dampen + jnp.sum((w - wq.reshape(w.shape)) ** 2)
+    loss = ce + dampen_lambda * dampen
+    return loss, (ce, acc)
+
+
+def build_train_step(mcfg: ModelCfg, vcfg: VariantCfg, batch: int):
+    """The AOT-exported train step; signature per ``train_io_spec``."""
+    qcfg = vcfg.linear_cfg()
+    qw = qw_total(mcfg)
+    wdm = wd_mask(mcfg)
+
+    def train_step(
+        params, m, v, ema, accum, nw, freeze_mask, freeze_value,
+        lr, wd, ema_beta, dampen_lambda, step, seed, batch_x, batch_y,
+    ):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        loss_fn = functools.partial(_loss, mcfg=mcfg, qcfg=qcfg, vcfg=vcfg)
+        grad_fn = jax.value_and_grad(loss_fn, argnums=0, has_aux=True)
+        (_, (ce, acc)), g = grad_fn(
+            params, ema, key, batch_x, batch_y, dampen_lambda
+        )
+        t1 = (step + 1).astype(jnp.float32)
+
+        # ---- quantized segment: Q-Ramping AdamW (elementwise N_w) ----
+        pq, pr = params[:qw], params[qw:]
+        gq, gr = g[:qw], g[qw:]
+        mq, mr = m[:qw], m[qw:]
+        vq, vr = v[:qw], v[qw:]
+        accum1 = accum + gq
+        upd = jnp.floor_divide(t1, nw) * nw == t1  # (t+1) mod N_w == 0
+        geff = accum1 / nw
+        mq1 = jnp.where(upd, ADAM_B1 * mq + (1 - ADAM_B1) * geff, mq)
+        vq1 = jnp.where(upd, ADAM_B2 * vq + (1 - ADAM_B2) * geff * geff, vq)
+        nupd = jnp.maximum(jnp.floor(t1 / nw), 1.0)  # updates so far
+        mhat = mq1 / (1.0 - ADAM_B1**nupd)
+        vhat = vq1 / (1.0 - ADAM_B2**nupd)
+        stepv = mhat / (jnp.sqrt(vhat) + ADAM_EPS) + wd * pq
+        pq1 = jnp.where(upd, pq - nw * lr * stepv, pq)
+        accum1 = jnp.where(upd, 0.0, accum1)
+        # Freeze baseline: pin flagged elements to the running average.
+        pq1 = jnp.where(freeze_mask > 0.5, freeze_value, pq1)
+        ema1 = ema_beta * ema + (1.0 - ema_beta) * pq1
+
+        # ---- remaining parameters: plain AdamW ----
+        mr1 = ADAM_B1 * mr + (1 - ADAM_B1) * gr
+        vr1 = ADAM_B2 * vr + (1 - ADAM_B2) * gr * gr
+        mrh = mr1 / (1.0 - ADAM_B1**t1)
+        vrh = vr1 / (1.0 - ADAM_B2**t1)
+        pr1 = pr - lr * (mrh / (jnp.sqrt(vrh) + ADAM_EPS) + wd * wdm[qw:] * pr)
+
+        return (
+            jnp.concatenate([pq1, pr1]),
+            jnp.concatenate([mq1, mr1]),
+            jnp.concatenate([vq1, vr1]),
+            ema1,
+            accum1,
+            ce,
+            acc,
+        )
+
+    return train_step
+
+
+def build_eval_step(mcfg: ModelCfg, vcfg: VariantCfg, batch: int):
+    """Deterministic eval forward; signature per ``eval_io_spec``."""
+    qcfg = vcfg.linear_cfg()
+
+    def eval_step(params, ema, batch_x, batch_y):
+        key = jax.random.PRNGKey(0)  # forward is deterministic; key unused
+        logits, _ = forward(
+            params, batch_x, key, mcfg, qcfg,
+            ema_flat=ema if vcfg.qema else None,
+        )
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss_sum = -jnp.sum(jnp.take_along_axis(logp, batch_y[:, None], axis=1))
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == batch_y).astype(jnp.float32)
+        )
+        return loss_sum, correct
+
+    return eval_step
+
+
+def build_probe(mcfg: ModelCfg, vcfg: VariantCfg, batch: int):
+    """Activation probe: output of the ~3/4-depth block for a fixed batch
+    (used for the paper's r(Y) instability metric, Fig. 2 / Table 3)."""
+    qcfg = vcfg.linear_cfg()
+    pb = probe_block_index(mcfg)
+
+    def probe(params, ema, batch_x):
+        key = jax.random.PRNGKey(0)
+        _, act = forward(
+            params, batch_x, key, mcfg, qcfg,
+            ema_flat=ema if vcfg.qema else None, probe_block=pb,
+        )
+        return (act,)
+
+    return probe

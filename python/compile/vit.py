@@ -1,0 +1,278 @@
+"""DeiT-style Vision Transformer with MXFP4-quantized linear layers.
+
+Functional definition over a *flat* f32 parameter vector. Following the
+paper (§7.1), only the linear layers inside the Attention and MLP
+modules of the transformer blocks are quantized (qkv / proj / fc1 /
+fc2); patch embedding, layernorms, and the classifier head stay in full
+precision. The flat layout places all quantized weight matrices first,
+`[0, qw_total)`, so the Rust coordinator can address the oscillation-
+tracked segment with a single slice (see train.py and DESIGN.md §2).
+"""
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .linear import LinearQuantCfg, make_qlinear
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    """Down-scaled DeiT configuration (DESIGN.md §Substitutions)."""
+
+    name: str = "vit-micro"
+    img: int = 32
+    patch: int = 4
+    dim: int = 64
+    depth: int = 4
+    heads: int = 4
+    mlp_ratio: int = 4
+    classes: int = 10
+
+    @property
+    def n_patches(self) -> int:
+        return (self.img // self.patch) ** 2
+
+    @property
+    def seq(self) -> int:
+        return self.n_patches + 1  # + cls token
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * 3
+
+    @property
+    def hidden(self) -> int:
+        return self.dim * self.mlp_ratio
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+
+MODELS = {
+    # ~0.22M params; the experiment-suite proxy for DeiT-T.
+    "vit-micro": ModelCfg(),
+    # ~0.8M params; proxy for the larger DeiT variants.
+    "vit-tiny": ModelCfg(name="vit-tiny", dim=128, depth=6, heads=4),
+    # ~103M params; the e2e-scale config (examples/train_vit_e2e.rs).
+    "vit-100m": ModelCfg(
+        name="vit-100m", img=32, patch=4, dim=768, depth=14, heads=12,
+        classes=10,
+    ),
+}
+
+
+@dataclass(frozen=True)
+class ParamSeg:
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+    quantized: bool
+    weight_decay: bool
+    init: str  # 'trunc_normal' | 'zeros' | 'ones'
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+def param_spec(cfg: ModelCfg) -> List[ParamSeg]:
+    """Ordered flat-layout spec: quantized weight matrices first.
+
+    Per-block parameters are *stacked* along a leading depth axis so the
+    forward can run as a single `lax.scan` over blocks — this keeps the
+    lowered HLO size independent of depth (one block body in a loop),
+    which is what makes AOT compilation on xla_extension 0.5.1 fast
+    (see DESIGN.md §Perf). The 1x32 quantization group axis is still the
+    trailing (contiguous) dimension of each stacked weight.
+    """
+    d = cfg.depth
+    segs: List[Tuple[str, Tuple[int, ...], bool, bool, str]] = [
+        ("blocks.qkv_w", (d, 3 * cfg.dim, cfg.dim), True, True, "trunc_normal"),
+        ("blocks.proj_w", (d, cfg.dim, cfg.dim), True, True, "trunc_normal"),
+        ("blocks.fc1_w", (d, cfg.hidden, cfg.dim), True, True, "trunc_normal"),
+        ("blocks.fc2_w", (d, cfg.dim, cfg.hidden), True, True, "trunc_normal"),
+        ("patch_embed.w", (cfg.dim, cfg.patch_dim), False, True, "trunc_normal"),
+        ("patch_embed.b", (cfg.dim,), False, False, "zeros"),
+        ("cls", (cfg.dim,), False, False, "trunc_normal"),
+        ("pos", (cfg.seq, cfg.dim), False, False, "trunc_normal"),
+        ("blocks.ln1.g", (d, cfg.dim), False, False, "ones"),
+        ("blocks.ln1.b", (d, cfg.dim), False, False, "zeros"),
+        ("blocks.qkv_b", (d, 3 * cfg.dim), False, False, "zeros"),
+        ("blocks.proj_b", (d, cfg.dim), False, False, "zeros"),
+        ("blocks.ln2.g", (d, cfg.dim), False, False, "ones"),
+        ("blocks.ln2.b", (d, cfg.dim), False, False, "zeros"),
+        ("blocks.fc1_b", (d, cfg.hidden), False, False, "zeros"),
+        ("blocks.fc2_b", (d, cfg.dim), False, False, "zeros"),
+        ("ln_f.g", (cfg.dim,), False, False, "ones"),
+        ("ln_f.b", (cfg.dim,), False, False, "zeros"),
+        ("head.w", (cfg.classes, cfg.dim), False, True, "trunc_normal"),
+        ("head.b", (cfg.classes,), False, False, "zeros"),
+    ]
+    out: List[ParamSeg] = []
+    off = 0
+    for name, shape, q, wd, init in segs:
+        seg = ParamSeg(name, shape, off, q, wd, init)
+        out.append(seg)
+        off += seg.size
+    return out
+
+
+def total_params(cfg: ModelCfg) -> int:
+    spec = param_spec(cfg)
+    return spec[-1].offset + spec[-1].size
+
+
+def qw_total(cfg: ModelCfg) -> int:
+    return sum(s.size for s in param_spec(cfg) if s.quantized)
+
+
+def unflatten(flat, cfg: ModelCfg) -> Dict[str, jnp.ndarray]:
+    return {
+        s.name: jax.lax.slice(flat, (s.offset,), (s.offset + s.size,)).reshape(s.shape)
+        for s in param_spec(cfg)
+    }
+
+
+def _clipped_normal(key, n):
+    """Box-Muller standard normal clipped to [-2, 2].
+
+    jax.random.normal / truncated_normal lower to the `erf`/`erf-inv`
+    HLO opcodes, which the xla_extension 0.5.1 text parser rejects; a
+    manual Box-Muller uses only log/sqrt/cos and stays loadable. The
+    clip makes it a (slightly mass-concentrated) stand-in for DeiT's
+    2-sigma truncated normal — immaterial at std 0.02.
+    """
+    k1, k2 = jax.random.split(key)
+    u1 = jax.random.uniform(k1, (n,), jnp.float32, minval=1e-7, maxval=1.0)
+    u2 = jax.random.uniform(k2, (n,), jnp.float32)
+    z = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+    return jnp.clip(z, -2.0, 2.0)
+
+
+def init_params(seed, cfg: ModelCfg):
+    """Flat parameter vector from an int32 seed (DeiT-style init:
+    clipped normal std 0.02 for matrices/embeddings, ones for LN gains,
+    zeros for biases)."""
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for i, s in enumerate(param_spec(cfg)):
+        if s.init == "zeros":
+            parts.append(jnp.zeros((s.size,), jnp.float32))
+        elif s.init == "ones":
+            parts.append(jnp.ones((s.size,), jnp.float32))
+        else:
+            sub = jax.random.fold_in(key, i)
+            parts.append(_clipped_normal(sub, s.size) * 0.02)
+    return jnp.concatenate(parts)
+
+
+def wd_mask(cfg: ModelCfg):
+    """Static 0/1 weight-decay mask over the flat parameter vector."""
+    parts = []
+    for s in param_spec(cfg):
+        parts.append(jnp.full((s.size,), 1.0 if s.weight_decay else 0.0))
+    return jnp.concatenate(parts)
+
+
+def _layer_norm(x, g, b, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _patchify(x, cfg: ModelCfg):
+    """(B, H, W, 3) -> (B, N, patch*patch*3)."""
+    b = x.shape[0]
+    hp = cfg.img // cfg.patch
+    x = x.reshape(b, hp, cfg.patch, hp, cfg.patch, 3)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, hp * hp, cfg.patch_dim)
+
+
+def forward(
+    flat,
+    x,
+    key,
+    cfg: ModelCfg,
+    qcfg: LinearQuantCfg,
+    ema_flat=None,
+    probe_block: int = -1,
+):
+    """ViT forward as one `lax.scan` over the stacked blocks.
+
+    Returns (logits, probe_activation). ``key`` seeds the stochastic
+    backward quantizers (split per block); the forward is deterministic.
+    ``ema_flat`` supplies EMA values for the quantized segment when
+    qcfg.qema (same flat layout prefix). ``probe_block`` indexes the
+    block whose output the instability probe reports; -1 = last.
+    """
+    p = unflatten(flat, cfg)
+    qlinear = make_qlinear(qcfg)
+    spec = {s.name: s for s in param_spec(cfg)}
+
+    def ema_of(name):
+        if ema_flat is None:
+            return p[name]
+        sg = spec[name]
+        return jax.lax.slice(ema_flat, (sg.offset,), (sg.offset + sg.size,)).reshape(
+            sg.shape
+        )
+
+    bsz = x.shape[0]
+    tok = _patchify(x, cfg) @ p["patch_embed.w"].T + p["patch_embed.b"]
+    cls = jnp.broadcast_to(p["cls"], (bsz, 1, cfg.dim))
+    h0 = jnp.concatenate([cls, tok], axis=1) + p["pos"]
+
+    keys = jax.random.split(key, cfg.depth)
+    xs = (
+        p["blocks.qkv_w"], ema_of("blocks.qkv_w"),
+        p["blocks.proj_w"], ema_of("blocks.proj_w"),
+        p["blocks.fc1_w"], ema_of("blocks.fc1_w"),
+        p["blocks.fc2_w"], ema_of("blocks.fc2_w"),
+        p["blocks.ln1.g"], p["blocks.ln1.b"],
+        p["blocks.qkv_b"], p["blocks.proj_b"],
+        p["blocks.ln2.g"], p["blocks.ln2.b"],
+        p["blocks.fc1_b"], p["blocks.fc2_b"],
+        keys,
+    )
+
+    def block(h, xs_b):
+        (qkv_w, qkv_e, proj_w, proj_e, fc1_w, fc1_e, fc2_w, fc2_e,
+         ln1g, ln1b, qkv_b, proj_b, ln2g, ln2b, fc1_b, fc2_b, kb) = xs_b
+        # --- attention ---
+        hn = _layer_norm(h, ln1g, ln1b)
+        flat2 = hn.reshape(bsz * cfg.seq, cfg.dim)
+        qkv = qlinear(flat2, qkv_w, qkv_e, jax.random.fold_in(kb, 0)) + qkv_b
+        qkv = qkv.reshape(bsz, cfg.seq, 3, cfg.heads, cfg.head_dim)
+        q, k, v = (qkv[:, :, j].transpose(0, 2, 1, 3) for j in range(3))
+        att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(cfg.head_dim)
+        att = jax.nn.softmax(att, axis=-1)
+        out = (att @ v).transpose(0, 2, 1, 3).reshape(bsz * cfg.seq, cfg.dim)
+        out = qlinear(out, proj_w, proj_e, jax.random.fold_in(kb, 1)) + proj_b
+        h = h + out.reshape(bsz, cfg.seq, cfg.dim)
+        # --- mlp ---
+        hn = _layer_norm(h, ln2g, ln2b)
+        flat2 = hn.reshape(bsz * cfg.seq, cfg.dim)
+        z = qlinear(flat2, fc1_w, fc1_e, jax.random.fold_in(kb, 2)) + fc1_b
+        z = jax.nn.gelu(z)
+        z = qlinear(z, fc2_w, fc2_e, jax.random.fold_in(kb, 3)) + fc2_b
+        h = h + z.reshape(bsz, cfg.seq, cfg.dim)
+        return h, h
+
+    h, ys = jax.lax.scan(block, h0, xs)
+    if probe_block < 0:
+        probe_block = cfg.depth - 1
+    probe = ys[probe_block]
+
+    h = _layer_norm(h, p["ln_f.g"], p["ln_f.b"])
+    logits = h[:, 0] @ p["head.w"].T + p["head.b"]
+    return logits, probe

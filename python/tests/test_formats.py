@@ -1,0 +1,61 @@
+"""Format-table sanity: grids, boundaries, paper constants."""
+
+import numpy as np
+import pytest
+
+from compile.formats import E2M1, E3M0, fp4_format
+
+
+def test_e2m1_grid_matches_paper():
+    # §3.1: E2M1 has Qp = 6, Qn = -6.
+    assert E2M1.qp == 6.0
+    assert E2M1.qn == -6.0
+    assert E2M1.emax == 2
+    pos = [v for v in E2M1.levels if v > 0]
+    assert pos == [0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+    assert len(E2M1.levels) == 15  # sign-symmetric + zero
+
+
+def test_e3m0_grid():
+    assert E3M0.qp == 16.0
+    assert E3M0.emax == 4
+    pos = [v for v in E3M0.levels if v > 0]
+    assert pos == [0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0]
+
+
+@pytest.mark.parametrize("fmt", [E2M1, E3M0])
+def test_levels_sorted_and_symmetric(fmt):
+    lv = list(fmt.levels)
+    assert lv == sorted(lv)
+    assert all(-a == b for a, b in zip(lv, reversed(lv)))
+
+
+@pytest.mark.parametrize("fmt", [E2M1, E3M0])
+def test_boundaries_are_midpoints(fmt):
+    b = fmt.boundaries
+    for i, x in enumerate(b):
+        assert x == (fmt.levels[i] + fmt.levels[i + 1]) / 2
+
+
+def test_paper_threshold_example():
+    # Fig. 3: thrd = -0.75 is the midpoint of q1=-1, q2=-0.5.
+    assert -0.75 in E2M1.boundaries
+
+
+def test_format_lookup():
+    assert fp4_format("e2m1") is E2M1
+    assert fp4_format("e3m0") is E3M0
+    with pytest.raises(ValueError):
+        fp4_format("e4m3")
+
+
+@pytest.mark.parametrize("fmt", [E2M1, E3M0])
+def test_spacing_parameters_consistent(fmt):
+    # delta_min is the gap between 0 and the smallest positive level.
+    pos = [v for v in fmt.levels if v > 0]
+    assert fmt.delta_min == pos[0]
+    # mbits reproduces the within-binade spacing: in [1, 2) the grid
+    # step is 2^-mbits.
+    in_binade = [v for v in pos if 1.0 <= v < 2.0] + [2.0]
+    gaps = {b - a for a, b in zip(in_binade, in_binade[1:])}
+    assert gaps == {2.0 ** -fmt.mbits}

@@ -1,0 +1,128 @@
+"""TetraJet linear layer: STE forward, gradient recipes, unbiasedness."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.linear import LinearQuantCfg, forward_weight_quant, make_qlinear
+from compile.model import variant
+from compile.quantizer import IDENTITY, QuantizerCfg, quantize_2d
+
+
+def rnd(shape, seed, scale=0.5):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+def make(vname):
+    return make_qlinear(variant(vname).linear_cfg()), variant(vname).linear_cfg()
+
+
+def test_fp32_variant_is_exact_linear():
+    ql, _ = make("fp32")
+    x = rnd((64, 32), 0)
+    w = rnd((16, 32), 1)
+    y = ql(x, w, w, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w.T), rtol=1e-5)
+
+
+def test_forward_uses_quantized_operands():
+    ql, cfg = make("tetrajet")
+    x = rnd((64, 32), 2, scale=2.0)
+    w = rnd((16, 32), 3, scale=0.2)
+    y = ql(x, w, w, jax.random.PRNGKey(0))
+    xq = quantize_2d(x, 1, cfg.q[0])
+    wq = forward_weight_quant(w, w, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(xq @ wq.T), rtol=1e-5)
+
+
+def test_gradients_flow_and_shapes():
+    ql, _ = make("tetrajet")
+    x = rnd((64, 32), 4)
+    w = rnd((16, 32), 5, scale=0.2)
+    key = jax.random.PRNGKey(1)
+
+    def f(x, w):
+        return jnp.sum(ql(x, w, w, key) ** 2)
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    assert gx.shape == x.shape and gw.shape == w.shape
+    assert float(jnp.abs(gx).sum()) > 0 and float(jnp.abs(gw).sum()) > 0
+
+
+def test_tetrajet_gradient_unbiased_vs_ste_target():
+    """E[grad] over stochastic-rounding draws must match the exact STE
+    gradient dX = dY @ Q2(W), dW = dY^T @ Q1(X) (paper Eq. 8-9)."""
+    cfg = variant("tetrajet").linear_cfg()
+    ql = make_qlinear(cfg)
+    x = rnd((32, 32), 6, scale=1.0)
+    w = rnd((16, 32), 7, scale=0.3)
+    gy = rnd((32, 16), 8, scale=1.0)
+
+    def loss(x, w, key):
+        return jnp.sum(ql(x, w, w, key) * gy)
+
+    xq = quantize_2d(x, 1, cfg.q[0])
+    wq = forward_weight_quant(w, w, cfg)
+    want_gx = gy @ wq
+    want_gw = gy.T @ xq
+
+    n = 300
+    gx_acc = np.zeros(x.shape, np.float64)
+    gw_acc = np.zeros(w.shape, np.float64)
+    g = jax.jit(jax.grad(loss, argnums=(0, 1)))
+    for i in range(n):
+        gx, gw = g(x, w, jax.random.PRNGKey(i))
+        gx_acc += np.asarray(gx, np.float64)
+        gw_acc += np.asarray(gw, np.float64)
+    gx_err = np.abs(gx_acc / n - np.asarray(want_gx)).mean() / np.abs(want_gx).mean()
+    gw_err = np.abs(gw_acc / n - np.asarray(want_gw)).mean() / np.abs(want_gw).mean()
+    assert gx_err < 0.05, f"dX bias {gx_err}"
+    assert gw_err < 0.05, f"dW bias {gw_err}"
+
+
+def test_microscaling_gradient_biased():
+    """The naive-flow deterministic backward (Microscaling) does NOT
+    converge to the STE target — the bias the paper analyzes in §3.4."""
+    cfg = variant("microscaling").linear_cfg()
+    ql = make_qlinear(cfg)
+    x = rnd((32, 32), 9, scale=1.0)
+    w = rnd((16, 32), 10, scale=0.3)
+    gy = rnd((32, 16), 11, scale=1.0)
+
+    def loss(x, w, key):
+        return jnp.sum(ql(x, w, w, key) * gy)
+
+    xq = quantize_2d(x, 1, cfg.q[0])
+    wq = forward_weight_quant(w, w, cfg)
+    want_gx = gy @ wq
+    # Deterministic: a single draw IS the expectation.
+    gx, _ = jax.grad(loss, argnums=(0, 1))(x, w, jax.random.PRNGKey(0))
+    rel = np.abs(np.asarray(gx) - np.asarray(want_gx)).mean() / np.abs(want_gx).mean()
+    assert rel > 0.01, f"expected visible bias, got {rel}"
+
+
+def test_single_quantizer_toggles():
+    # q3 variant: only the gradient quantizer Q3 active -> forward exact.
+    ql, _ = make("q3")
+    x = rnd((64, 32), 12)
+    w = rnd((16, 32), 13, scale=0.2)
+    y = ql(x, w, w, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w.T), rtol=1e-5)
+    # q1: only activation quantizer -> forward differs from exact.
+    ql1, _ = make("q1")
+    y1 = ql1(x, w, w, jax.random.PRNGKey(0))
+    assert not np.allclose(np.asarray(y1), np.asarray(x @ w.T), rtol=1e-6, atol=0)
+
+
+def test_qema_variant_uses_ema_argument():
+    ql, cfg = make("tetrajet_qema")
+    x = rnd((64, 32), 14)
+    w = rnd((16, 32), 15, scale=0.2)
+    ema1 = w
+    ema2 = w + rnd(w.shape, 16, scale=0.3)
+    y1 = ql(x, w, ema1, jax.random.PRNGKey(0))
+    y2 = ql(x, w, ema2, jax.random.PRNGKey(0))
+    assert not np.array_equal(np.asarray(y1), np.asarray(y2))

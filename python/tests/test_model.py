@@ -1,0 +1,107 @@
+"""Model/variant registry + flat-layout invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import CORE_VARIANTS, VARIANTS, variant
+from compile.vit import (
+    MODELS,
+    forward,
+    init_params,
+    param_spec,
+    qw_total,
+    total_params,
+    unflatten,
+    wd_mask,
+)
+
+
+def test_registry_covers_paper_sets():
+    assert len(VARIANTS) == 5 + 6 + 8 + 4 + 2
+    for v in CORE_VARIANTS:
+        assert v in VARIANTS
+    # Table 5 corner identities (modulo `impl`, which is bit-identical
+    # by test_kernels; the Rust run cache aliases these variants).
+    from dataclasses import replace
+
+    tj = variant("tetrajet")
+    abl = variant("abl_stoch_double_tf")
+    assert replace(tj.linear_cfg(), impl="x") == replace(abl.linear_cfg(), impl="x")
+    ms = variant("microscaling")
+    abl_ms = variant("abl_det_naive_floor")
+    assert replace(ms.linear_cfg(), impl="x") == replace(abl_ms.linear_cfg(), impl="x")
+    fmtv = variant("fmt_e2m1_e2m1")
+    assert replace(tj.linear_cfg(), impl="x") == replace(fmtv.linear_cfg(), impl="x")
+
+
+def test_variant_lookup_error():
+    with pytest.raises(ValueError):
+        variant("nope")
+
+
+@pytest.mark.parametrize("name", ["vit-micro", "vit-tiny"])
+def test_param_layout_invariants(name):
+    cfg = MODELS[name]
+    spec = param_spec(cfg)
+    off = 0
+    seen_nonq = False
+    for s in spec:
+        assert s.offset == off
+        if s.quantized:
+            assert not seen_nonq, "quantized segments must form a prefix"
+            assert s.shape[-1] % 32 == 0 or s.shape[-1] > 0
+        else:
+            seen_nonq = True
+        off += s.size
+    assert off == total_params(cfg)
+    assert qw_total(cfg) == sum(s.size for s in spec if s.quantized)
+    assert wd_mask(cfg).shape == (total_params(cfg),)
+
+
+def test_vit_100m_is_about_100m():
+    p = total_params(MODELS["vit-100m"])
+    assert 80e6 < p < 130e6, p
+
+
+def test_init_statistics():
+    cfg = MODELS["vit-micro"]
+    flat = init_params(0, cfg)
+    p = unflatten(flat, cfg)
+    w = np.asarray(p["blocks.qkv_w"])
+    assert abs(w.mean()) < 2e-3
+    assert 0.015 < w.std() < 0.025
+    assert np.asarray(p["blocks.ln1.g"]).min() == 1.0
+    assert np.abs(np.asarray(p["blocks.qkv_b"])).max() == 0.0
+
+
+def test_forward_shapes_and_probe():
+    cfg = MODELS["vit-micro"]
+    flat = init_params(1, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32, 32, 3))
+    logits, probe = forward(
+        flat, x, jax.random.PRNGKey(1), cfg, variant("tetrajet").linear_cfg()
+    )
+    assert logits.shape == (4, cfg.classes)
+    assert probe.shape == (4, cfg.seq, cfg.dim)
+    # Probe of block k differs from the last block's output.
+    _, probe0 = forward(
+        flat, x, jax.random.PRNGKey(1), cfg, variant("tetrajet").linear_cfg(),
+        probe_block=0,
+    )
+    assert not np.array_equal(np.asarray(probe), np.asarray(probe0))
+
+
+def test_forward_batch_consistency():
+    # Per-sample outputs must be independent of the rest of the batch
+    # (no cross-sample leakage through quantizers: forward quantization
+    # of X groups along channels only).
+    cfg = MODELS["vit-micro"]
+    flat = init_params(2, cfg)
+    qcfg = variant("tetrajet").linear_cfg()
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, 32, 32, 3))
+    full, _ = forward(flat, x, key, cfg, qcfg)
+    half, _ = forward(flat, x[:2], key, cfg, qcfg)
+    np.testing.assert_allclose(np.asarray(full[:2]), np.asarray(half), rtol=2e-5, atol=1e-5)

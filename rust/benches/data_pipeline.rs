@@ -1,0 +1,27 @@
+//! Synthetic data-pipeline throughput: per-sample synthesis and batch
+//! assembly (the coordinator must keep the XLA step fed; on this 1-core
+//! testbed data gen shares the core with the step itself).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::Bench;
+use tetrajet::data::{Batcher, EvalSet, SynthVision};
+
+fn main() {
+    let b = Bench::new("data_pipeline");
+    let ds = SynthVision::default_cfg(7);
+    let mut buf = vec![0.0f32; 32 * 32 * 3];
+
+    b.case("sample_into (1 img 32x32x3)", (32 * 32 * 3) as u64, || {
+        std::hint::black_box(ds.sample_into(tetrajet::data::Split::Train, 123, &mut buf));
+    });
+    let mut batcher = Batcher::new(ds.clone(), 16, 0);
+    b.case("train_batch_16", (16 * 32 * 32 * 3) as u64, || {
+        std::hint::black_box(batcher.next_batch());
+    });
+    let ev = EvalSet::new(ds.clone(), 16, 512);
+    b.case("eval_batch_16", (16 * 32 * 32 * 3) as u64, || {
+        std::hint::black_box(ev.batch(0));
+    });
+}

@@ -1,0 +1,51 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Reports min/median/mean over timed iterations after warmup, with
+//! auto-scaled iteration counts targeting a fixed per-case budget.
+
+use std::time::Instant;
+
+pub struct Bench {
+    name: String,
+    budget_ms: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        let budget_ms = std::env::var("TJ_BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(300.0);
+        println!("\n=== bench suite: {name} (budget {budget_ms:.0} ms/case) ===");
+        Bench { name: name.to_string(), budget_ms }
+    }
+
+    /// Time `f`, which processes `items` logical items per call.
+    pub fn case<F: FnMut()>(&self, label: &str, items: u64, mut f: F) {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        f();
+        let per_call = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.budget_ms / 1000.0 / per_call) as usize).clamp(3, 10_000);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let min = samples[0];
+        let med = samples[samples.len() / 2];
+        let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
+        let thr = items as f64 / med;
+        println!(
+            "{:<44} min {:>9.3} ms  med {:>9.3} ms  mean {:>9.3} ms  ({} iters{})",
+            format!("{}/{label}", self.name),
+            min * 1e3,
+            med * 1e3,
+            mean * 1e3,
+            samples.len(),
+            if items > 1 { format!(", {:.2} Melem/s", thr / 1e6) } else { String::new() },
+        );
+    }
+}

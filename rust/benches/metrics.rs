@@ -1,0 +1,56 @@
+//! Metric-tracker throughput: the oscillation/confidence machinery the
+//! coordinator runs every step over all quantized weights.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::Bench;
+use tetrajet::metrics::confidence::latents;
+use tetrajet::metrics::{quant_confidence, OscTracker, RateTracker};
+use tetrajet::quant::{e2m1, Scaling};
+use tetrajet::util::rng::Rng;
+
+fn main() {
+    let b = Bench::new("metrics");
+    let mut rng = Rng::new(2);
+    let n = 196_608;
+    let cols = 64;
+    let w: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+    let w2: Vec<f32> = w.iter().map(|&v| v + 1e-4).collect();
+    let q: Vec<f32> = w.iter().map(|&v| (v * 16.0).round() / 16.0).collect();
+    let q2: Vec<f32> = w2.iter().map(|&v| (v * 16.0).round() / 16.0).collect();
+    let mut buf = Vec::new();
+
+    b.case("osc_tracker_new+observe", n as u64, || {
+        let mut t = OscTracker::new(&w, &q);
+        t.observe(&w2, &q2);
+        std::hint::black_box(t.steps());
+    });
+    let mut t = OscTracker::new(&w, &q);
+    t.observe(&w2, &q2);
+    b.case("osc_observe_steady", n as u64, || {
+        t.observe(&w2, &q2);
+        std::hint::black_box(t.steps());
+    });
+    b.case("osc_ratios_into", n as u64, || {
+        t.ratios_into(&mut buf);
+        std::hint::black_box(&buf);
+    });
+    b.case("osc_count_threshold", n as u64, || {
+        std::hint::black_box(t.oscillating_count(16.0));
+    });
+    b.case("rate_tracker_observe", n as u64, || {
+        let mut r = RateTracker::new();
+        r.observe(&w);
+        r.observe(&w2);
+        std::hint::black_box(r.rate());
+    });
+    b.case("quant_confidence", n as u64, || {
+        quant_confidence(&w, cols, e2m1(), Scaling::TruncationFree, &mut buf);
+        std::hint::black_box(&buf);
+    });
+    b.case("latents", n as u64, || {
+        latents(&w, cols, e2m1(), Scaling::TruncationFree, &mut buf);
+        std::hint::black_box(&buf);
+    });
+}

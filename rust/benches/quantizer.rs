@@ -1,0 +1,50 @@
+//! L3 quant-mirror throughput (the per-step metric hot path): MXFP4
+//! deterministic/stochastic, Q-EMA, INT4 over vit-micro-sized weights.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::Bench;
+use tetrajet::quant::{
+    e2m1, e3m0, int4_quantize, mx_quantize_cols, mx_quantize_cols_into,
+    mx_quantize_stoch_cols, qema_quantize_cols_into, Scaling,
+};
+use tetrajet::util::rng::Rng;
+
+fn main() {
+    let b = Bench::new("quantizer");
+    let mut rng = Rng::new(1);
+    // The full vit-micro quantized segment: 196,608 weights, cols = 64.
+    let n = 196_608;
+    let cols = 64;
+    let x: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+    let ema: Vec<f32> = x.iter().map(|&v| v * 0.97).collect();
+    let u: Vec<f32> = (0..n).map(|_| rng.uniform()).collect();
+    let mut out = vec![0.0f32; n];
+
+    b.case("mx_det_tf_e2m1 (alloc)", n as u64, || {
+        std::hint::black_box(mx_quantize_cols(&x, cols, e2m1(), Scaling::TruncationFree));
+    });
+    b.case("mx_det_tf_e2m1 (into)", n as u64, || {
+        mx_quantize_cols_into(&x, cols, e2m1(), Scaling::TruncationFree, &mut out);
+        std::hint::black_box(&out);
+    });
+    b.case("mx_det_floor_e2m1 (into)", n as u64, || {
+        mx_quantize_cols_into(&x, cols, e2m1(), Scaling::Floor, &mut out);
+        std::hint::black_box(&out);
+    });
+    b.case("mx_det_tf_e3m0 (into)", n as u64, || {
+        mx_quantize_cols_into(&x, cols, e3m0(), Scaling::TruncationFree, &mut out);
+        std::hint::black_box(&out);
+    });
+    b.case("mx_stoch_tf_e2m1", n as u64, || {
+        std::hint::black_box(mx_quantize_stoch_cols(&x, &u, cols, e2m1(), Scaling::TruncationFree));
+    });
+    b.case("qema_tf_e2m1 (into)", n as u64, || {
+        qema_quantize_cols_into(&x, &ema, cols, e2m1(), Scaling::TruncationFree, &mut out);
+        std::hint::black_box(&out);
+    });
+    b.case("int4_per_tensor", n as u64, || {
+        std::hint::black_box(int4_quantize(&x, None));
+    });
+}

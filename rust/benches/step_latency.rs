@@ -1,0 +1,47 @@
+//! End-to-end step latency through the PJRT runtime — the numbers every
+//! Table/Figure regeneration cost is built from. Skips gracefully when
+//! `make artifacts` hasn't been run.
+//!
+//! Covers: train/eval/probe execution for the core variants plus the
+//! host-side marshalling overhead (literal creation + tuple decompose),
+//! isolated by comparing against a no-op-sized eval call.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::Bench;
+use tetrajet::config::TrainConfig;
+use tetrajet::coordinator::Trainer;
+use tetrajet::runtime::{artifacts, cpu_client, ModelArtifacts};
+
+fn main() -> anyhow::Result<()> {
+    let root = artifacts::default_root();
+    if !root.join("vit-micro/b16/tetrajet/manifest.json").exists() {
+        println!("step_latency: artifacts missing — run `make artifacts` first (skipping)");
+        return Ok(());
+    }
+    let b = Bench::new("step_latency");
+    let client = cpu_client()?;
+    for variant in ["fp32", "tetrajet", "tetrajet_qema"] {
+        let arts = ModelArtifacts::load(&client, &root, "vit-micro", 16, variant)?;
+        let mut cfg = TrainConfig::default_run(variant);
+        cfg.steps = 1_000_000; // schedule horizon; we step manually
+        cfg.eval_samples = 64;
+        let params = artifacts::run_init(&client, &root, "vit-micro", 0)?;
+        let mut tr = Trainer::new(&arts, cfg, params)?;
+        tr.step()?; // warm caches
+        b.case(&format!("{variant}/train_step(B=16)"), 16, || {
+            tr.step().unwrap();
+        });
+        b.case(&format!("{variant}/eval(64 samples)"), 64, || {
+            std::hint::black_box(tr.eval().unwrap());
+        });
+        b.case(&format!("{variant}/probe_fwd(B=16)"), 16, || {
+            std::hint::black_box(tr.probe_activation().unwrap());
+        });
+        b.case(&format!("{variant}/mirror_wq(196k)"), 196_608, || {
+            tr.mirror_wq();
+        });
+    }
+    Ok(())
+}

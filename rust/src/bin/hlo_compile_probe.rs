@@ -1,0 +1,64 @@
+//! HLO compile+execute timing probe (perf-pass tooling).
+//!
+//! Usage: hlo_compile_probe <variant-dir> <train_step|eval_step|probe> [reps]
+//! Respects XLA_FLAGS; reports compile time and per-call execute time
+//! with zero-filled inputs.
+
+use anyhow::Result;
+use tetrajet::runtime::manifest::{Dtype, Manifest};
+use tetrajet::runtime::{Arg, StepFn};
+
+fn main() -> Result<()> {
+    let mut args = std::env::args().skip(1);
+    let dir = std::path::PathBuf::from(args.next().expect("variant dir"));
+    let step = args.next().unwrap_or_else(|| "train_step".into());
+    let reps: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(5);
+
+    let client = xla::PjRtClient::cpu()?;
+    let man = Manifest::load(&dir.join("manifest.json"))?;
+    let io = match step.as_str() {
+        "train_step" => &man.train_step,
+        "eval_step" => &man.eval_step,
+        "probe" => &man.probe,
+        other => anyhow::bail!("unknown step {other}"),
+    };
+    let t0 = std::time::Instant::now();
+    let f = StepFn::load(
+        &client,
+        &dir.join(format!("{step}.hlo.txt")),
+        &step,
+        io.inputs.clone(),
+        io.outputs.clone(),
+    )?;
+    eprintln!("load+compile: {:.1}s", t0.elapsed().as_secs_f64());
+
+    // Zero-filled inputs (nw/ema_beta filled with 1 to stay in-domain).
+    let fbufs: Vec<Vec<f32>> = io
+        .inputs
+        .iter()
+        .map(|s| {
+            let fill = if s.name == "nw" || s.name == "ema_beta" { 1.0 } else { 0.0 };
+            vec![fill; s.numel()]
+        })
+        .collect();
+    let ibufs: Vec<Vec<i32>> = io.inputs.iter().map(|s| vec![0; s.numel()]).collect();
+    let call_args: Vec<Arg> = io
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| match s.dtype {
+            Dtype::F32 => Arg::F32(&fbufs[i]),
+            Dtype::I32 => Arg::I32(&ibufs[i]),
+        })
+        .collect();
+    f.call(&call_args)?; // warmup
+    let t1 = std::time::Instant::now();
+    for _ in 0..reps {
+        f.call(&call_args)?;
+    }
+    eprintln!(
+        "execute: {:.1}ms/call over {reps} reps",
+        t1.elapsed().as_secs_f64() * 1000.0 / reps as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,273 @@
+//! Training / experiment configuration.
+//!
+//! `TrainConfig` fully determines a run (model + variant + data seeds +
+//! schedule + coordinator policy); `Policy` selects the L3 oscillation-
+//! reduction controller layered on top of the AOT artifact. Configs
+//! round-trip through JSON so experiment harnesses can log exactly what
+//! they ran.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{num, obj, s, Json};
+
+/// The variant names baked by `python/compile/model.py` (`_registry`).
+/// Kept in sync by rust/tests integration test `variant_names_match`.
+pub const CORE_VARIANTS: &[&str] =
+    &["fp32", "microscaling", "tetrajet", "tetrajet_qema", "int4"];
+
+pub fn all_variants() -> Vec<String> {
+    let mut v: Vec<String> = CORE_VARIANTS.iter().map(|s| s.to_string()).collect();
+    for i in 1..=6 {
+        v.push(format!("q{i}"));
+    }
+    for rnd in ["stoch", "det"] {
+        for flow in ["double", "naive"] {
+            for sc in ["tf", "floor"] {
+                v.push(format!("abl_{rnd}_{flow}_{sc}"));
+            }
+        }
+    }
+    for ff in ["e2m1", "e3m0"] {
+        for bf in ["e2m1", "e3m0"] {
+            v.push(format!("fmt_{ff}_{bf}"));
+        }
+    }
+    v.push("tj_no_wq".into());
+    v.push("tj_no_wq_aq".into());
+    v
+}
+
+/// Coordinator-side oscillation policy (paper §5/§6 + Table 4 baselines).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Policy {
+    /// Plain training (the artifact's own quantizers only).
+    None,
+    /// Adaptive Ramping Optimizer (paper §6 / Alg. 2): every `t_update`
+    /// steps run a `t0`-step detection window with ramping disabled,
+    /// then set N_w = min(k2 * floor(R_w / k1) + 1, n_max).
+    QRamping { k1: f32, k2: f32, n_max: f32, t0: usize, t_update: usize },
+    /// Dampen baseline (Nagel et al. 2022): loss += lambda * ||W - Q(W)||^2.
+    Dampen { lambda: f32 },
+    /// Freeze baseline (Nagel et al. 2022): permanently pin elements
+    /// whose flipping frequency exceeds `f_th` to their running average.
+    Freeze { f_th: f32, t0: usize, t_update: usize },
+}
+
+impl Policy {
+    pub fn qramping_default() -> Policy {
+        // Paper App. C.3: k1 = 16, k2 = 5 are the default choices.
+        Policy::QRamping { k1: 16.0, k2: 5.0, n_max: 16.0, t0: 30, t_update: 200 }
+    }
+
+    pub fn freeze_default() -> Policy {
+        // Nagel et al. configuration adapted to pre-training scale.
+        Policy::Freeze { f_th: 0.1, t0: 30, t_update: 200 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::None => "none",
+            Policy::QRamping { .. } => "qramping",
+            Policy::Dampen { .. } => "dampen",
+            Policy::Freeze { .. } => "freeze",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Policy::None => obj(vec![("name", s("none"))]),
+            Policy::QRamping { k1, k2, n_max, t0, t_update } => obj(vec![
+                ("name", s("qramping")),
+                ("k1", num(*k1 as f64)),
+                ("k2", num(*k2 as f64)),
+                ("n_max", num(*n_max as f64)),
+                ("t0", num(*t0 as f64)),
+                ("t_update", num(*t_update as f64)),
+            ]),
+            Policy::Dampen { lambda } => {
+                obj(vec![("name", s("dampen")), ("lambda", num(*lambda as f64))])
+            }
+            Policy::Freeze { f_th, t0, t_update } => obj(vec![
+                ("name", s("freeze")),
+                ("f_th", num(*f_th as f64)),
+                ("t0", num(*t0 as f64)),
+                ("t_update", num(*t_update as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Policy> {
+        Ok(match j.req("name")?.as_str()? {
+            "none" => Policy::None,
+            "qramping" => Policy::QRamping {
+                k1: j.req("k1")?.as_f64()? as f32,
+                k2: j.req("k2")?.as_f64()? as f32,
+                n_max: j.req("n_max")?.as_f64()? as f32,
+                t0: j.req("t0")?.as_usize()?,
+                t_update: j.req("t_update")?.as_usize()?,
+            },
+            "dampen" => Policy::Dampen { lambda: j.req("lambda")?.as_f64()? as f32 },
+            "freeze" => Policy::Freeze {
+                f_th: j.req("f_th")?.as_f64()? as f32,
+                t0: j.req("t0")?.as_usize()?,
+                t_update: j.req("t_update")?.as_usize()?,
+            },
+            other => bail!("unknown policy {other:?}"),
+        })
+    }
+}
+
+/// Metric-collection knobs (0 = disabled).
+#[derive(Debug, Clone)]
+pub struct MetricsCfg {
+    /// Track r(W)/r(W_Q) every step within windows of this length,
+    /// reporting at window ends (Fig. 2 / Table 3).
+    pub rate_window: usize,
+    /// Run the fixed-batch activation probe every N steps (r(Y)).
+    pub probe_every: usize,
+    /// Oscillation-ratio window length for the Fig. 6 series.
+    pub osc_window: usize,
+    /// R_w threshold for "oscillating" (paper: 16).
+    pub rw_threshold: f32,
+    /// Snapshot confidence/latent histograms every N steps (Fig. 4/5).
+    pub conf_every: usize,
+}
+
+impl MetricsCfg {
+    pub fn off() -> MetricsCfg {
+        MetricsCfg { rate_window: 0, probe_every: 0, osc_window: 0, rw_threshold: 16.0, conf_every: 0 }
+    }
+
+    pub fn standard() -> MetricsCfg {
+        MetricsCfg { rate_window: 0, probe_every: 0, osc_window: 50, rw_threshold: 16.0, conf_every: 0 }
+    }
+
+    pub fn full() -> MetricsCfg {
+        MetricsCfg { rate_window: 20, probe_every: 5, osc_window: 50, rw_threshold: 16.0, conf_every: 100 }
+    }
+}
+
+/// Everything that determines one training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub variant: String,
+    pub batch: usize,
+    pub steps: usize,
+    pub base_lr: f32,
+    pub min_lr: f32,
+    pub warmup: usize,
+    pub weight_decay: f32,
+    pub ema_beta: f32,
+    pub init_seed: i32,
+    pub train_seed: u64,
+    pub data_seed: u64,
+    pub train_size: usize,
+    pub val_size: usize,
+    pub eval_every: usize,
+    pub eval_samples: usize,
+    pub policy: Policy,
+    pub metrics: MetricsCfg,
+}
+
+impl TrainConfig {
+    /// Experiment-suite defaults (vit-micro proxy; DESIGN.md §6).
+    pub fn default_run(variant: &str) -> TrainConfig {
+        TrainConfig {
+            model: "vit-micro".into(),
+            variant: variant.into(),
+            batch: 16,
+            steps: 400,
+            base_lr: 1e-3,
+            min_lr: 1e-5,
+            warmup: 40,
+            weight_decay: 0.05,
+            ema_beta: 0.998,
+            init_seed: 0,
+            train_seed: 42,
+            data_seed: 7,
+            train_size: 8192,
+            val_size: 1024,
+            eval_every: 0,
+            eval_samples: 512,
+            policy: Policy::None,
+            metrics: MetricsCfg::off(),
+        }
+    }
+
+    /// Cosine schedule with linear warmup (the DeiT recipe's shape).
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if self.warmup > 0 && step < self.warmup {
+            return self.base_lr * (step + 1) as f32 / self.warmup as f32;
+        }
+        let t = (step - self.warmup) as f32 / (self.steps - self.warmup).max(1) as f32;
+        let t = t.clamp(0.0, 1.0);
+        self.min_lr
+            + 0.5 * (self.base_lr - self.min_lr) * (1.0 + (std::f32::consts::PI * t).cos())
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", s(&self.model)),
+            ("variant", s(&self.variant)),
+            ("batch", num(self.batch as f64)),
+            ("steps", num(self.steps as f64)),
+            ("base_lr", num(self.base_lr as f64)),
+            ("min_lr", num(self.min_lr as f64)),
+            ("warmup", num(self.warmup as f64)),
+            ("weight_decay", num(self.weight_decay as f64)),
+            ("ema_beta", num(self.ema_beta as f64)),
+            ("init_seed", num(self.init_seed as f64)),
+            ("train_seed", num(self.train_seed as f64)),
+            ("data_seed", num(self.data_seed as f64)),
+            ("train_size", num(self.train_size as f64)),
+            ("val_size", num(self.val_size as f64)),
+            ("eval_every", num(self.eval_every as f64)),
+            ("eval_samples", num(self.eval_samples as f64)),
+            ("policy", self.policy.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let mut c = TrainConfig::default_run("tetrajet");
+        c.base_lr = 1.0;
+        c.min_lr = 0.0;
+        c.warmup = 10;
+        c.steps = 110;
+        assert!((c.lr_at(0) - 0.1).abs() < 1e-6);
+        assert!((c.lr_at(9) - 1.0).abs() < 1e-6);
+        assert!((c.lr_at(10) - 1.0).abs() < 1e-6);
+        assert!(c.lr_at(60) < c.lr_at(20));
+        assert!(c.lr_at(109) < 0.01);
+        // Past the end it clamps at min_lr.
+        assert!(c.lr_at(1000) <= 1e-6 + 0.0);
+    }
+
+    #[test]
+    fn policy_json_roundtrip() {
+        for p in [
+            Policy::None,
+            Policy::qramping_default(),
+            Policy::Dampen { lambda: 1e-4 },
+            Policy::freeze_default(),
+        ] {
+            let j = p.to_json();
+            let back = Policy::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(p, back);
+        }
+    }
+
+    #[test]
+    fn variant_list_contains_paper_sets() {
+        let v = all_variants();
+        assert_eq!(v.len(), 5 + 6 + 8 + 4 + 2);
+        assert!(v.contains(&"abl_det_naive_floor".to_string())); // Microscaling combo
+        assert!(v.contains(&"fmt_e3m0_e2m1".to_string()));
+    }
+}

@@ -1,0 +1,117 @@
+//! Freeze baseline (Nagel et al. 2022; paper §2 & Table 4).
+//!
+//! Tracks each quantized element's flipping frequency f over detection
+//! windows; elements with f > f_th are *permanently* frozen to the
+//! running average of their master weight. The paper shows this
+//! behaves catastrophically in pre-training (frozen weights can never
+//! recover) — we reproduce the mechanism faithfully to reproduce the
+//! failure.
+
+use crate::config::Policy;
+use crate::metrics::OscTracker;
+
+#[derive(Debug)]
+pub struct FreezeController {
+    f_th: f32,
+    t0: usize,
+    t_update: usize,
+    window: Option<OscTracker>,
+    pub mask: Vec<f32>,
+    pub value: Vec<f32>,
+    scratch: Vec<f32>,
+    pub frozen_count: usize,
+}
+
+impl FreezeController {
+    pub fn new(policy: &Policy, qw_total: usize) -> FreezeController {
+        let (f_th, t0, t_update) = match policy {
+            Policy::Freeze { f_th, t0, t_update } => (*f_th, *t0, *t_update),
+            _ => panic!("FreezeController needs Policy::Freeze"),
+        };
+        assert!(t0 < t_update);
+        FreezeController {
+            f_th,
+            t0,
+            t_update,
+            window: None,
+            mask: vec![0.0; qw_total],
+            value: vec![0.0; qw_total],
+            scratch: Vec::new(),
+            frozen_count: 0,
+        }
+    }
+
+    fn in_detection(&self, step: usize) -> bool {
+        step % self.t_update < self.t0
+    }
+
+    /// Observe the post-step snapshot; updates mask/value at window ends.
+    pub fn observe(&mut self, step: usize, w: &[f32], wq: &[f32]) {
+        if !self.in_detection(step) {
+            self.window = None;
+            return;
+        }
+        match &mut self.window {
+            None => self.window = Some(OscTracker::new(w, wq)),
+            Some(t) => t.observe(w, wq),
+        }
+        if step % self.t_update == self.t0 - 1 {
+            if let Some(t) = self.window.take() {
+                if t.steps() > 0 {
+                    t.flip_freq_into(&mut self.scratch);
+                    let avg = t.running_avg();
+                    for i in 0..self.mask.len() {
+                        if self.mask[i] == 0.0 && self.scratch[i] > self.f_th {
+                            self.mask[i] = 1.0;
+                            self.value[i] = avg[i];
+                        }
+                    }
+                    self.frozen_count =
+                        self.mask.iter().filter(|&&x| x > 0.0).count();
+                }
+            }
+        }
+    }
+
+    pub fn frozen_fraction(&self) -> f64 {
+        self.frozen_count as f64 / self.mask.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> Policy {
+        Policy::Freeze { f_th: 0.4, t0: 4, t_update: 10 }
+    }
+
+    #[test]
+    fn freezes_flippers_permanently() {
+        let mut c = FreezeController::new(&policy(), 2);
+        // Element 0 flips every step (f = 1); element 1 static (f = 0).
+        let q = [[0.5f32, 0.0], [1.0, 0.0], [0.5, 0.0], [1.0, 0.0], [0.5, 0.0]];
+        for i in 0..5 {
+            c.observe(i, &[0.75, 0.2], &q[i.min(4)]);
+        }
+        assert_eq!(c.frozen_count, 1);
+        assert_eq!(c.mask, vec![1.0, 0.0]);
+        assert!((c.value[0] - 0.75).abs() < 1e-6);
+        // Next window: even if element 0 stops flipping it stays frozen.
+        for i in 10..15 {
+            c.observe(i, &[0.75, 0.2], &[0.5, 0.0]);
+        }
+        assert_eq!(c.mask, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn no_freeze_below_threshold() {
+        let mut c = FreezeController::new(&policy(), 1);
+        // One flip over 4 steps -> f = 0.25 < 0.4.
+        let q = [[0.5f32], [0.5], [1.0], [1.0], [1.0]];
+        for i in 0..5 {
+            c.observe(i, &[0.7], &q[i]);
+        }
+        assert_eq!(c.frozen_count, 0);
+    }
+}

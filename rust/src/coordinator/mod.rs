@@ -1,0 +1,29 @@
+//! Layer-3 coordinator: the training loop and the paper's
+//! coordination-level contributions.
+//!
+//! All training state lives here between steps (the AOT HLO step is a
+//! pure function). On top of the plain loop sit the oscillation
+//! controllers:
+//!
+//! * [`qramping`] — Adaptive Ramping Optimizer (paper §6/Alg. 2): the
+//!   coordinator watches each quantized weight element's (w, w_Q)
+//!   trajectory with the quant mirror, computes R_w over detection
+//!   windows and feeds per-element amplification factors N_w back into
+//!   the next steps.
+//! * [`freeze`] — Nagel et al.'s Freeze baseline on flipping frequency.
+//! * Dampen is a pure scalar input (`dampen_lambda`), no controller.
+//!
+//! Q-EMA lives in L1/L2 (the `tetrajet_qema` artifact); the coordinator
+//! only routes `ema_beta` and the EMA state.
+
+pub mod freeze;
+pub mod qramping;
+pub mod recorder;
+pub mod state;
+pub mod trainer;
+
+pub use freeze::FreezeController;
+pub use qramping::QRampingController;
+pub use recorder::Recorder;
+pub use state::TrainState;
+pub use trainer::{EvalResult, Trainer};

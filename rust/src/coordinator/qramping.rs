@@ -1,0 +1,168 @@
+//! Q-Ramping controller (paper §6 / Alg. 2, coordinator side).
+//!
+//! Periodically (every `t_update` steps) the controller opens a
+//! detection window: ramping is suspended (N_w := 1, matching the
+//! paper's "without Q-Ramping" calibration), and for `t0` steps it
+//! records every quantized element's master/quantized trajectory via
+//! the quant mirror. At the window end it converts oscillation ratios
+//! into new amplification factors
+//!
+//!   N_w = min(k2 * floor(R_w / k1) + 1, N_max)
+//!
+//! which the train step consumes as per-element gradient-accumulation
+//! lengths with proportionally scaled learning rates.
+
+use crate::config::Policy;
+use crate::metrics::OscTracker;
+
+#[derive(Debug)]
+pub struct QRampingController {
+    k1: f32,
+    k2: f32,
+    n_max: f32,
+    t0: usize,
+    t_update: usize,
+    window: Option<OscTracker>,
+    /// N_w values applied outside detection windows.
+    applied_nw: Vec<f32>,
+    /// Scratch for ratio extraction.
+    ratios: Vec<f32>,
+    pub windows_completed: usize,
+}
+
+impl QRampingController {
+    pub fn new(policy: &Policy, qw_total: usize) -> QRampingController {
+        let (k1, k2, n_max, t0, t_update) = match policy {
+            Policy::QRamping { k1, k2, n_max, t0, t_update } => {
+                (*k1, *k2, *n_max, *t0, *t_update)
+            }
+            _ => panic!("QRampingController needs Policy::QRamping"),
+        };
+        assert!(t0 < t_update, "detection window must fit inside t_update");
+        QRampingController {
+            k1,
+            k2,
+            n_max,
+            t0,
+            t_update,
+            window: None,
+            applied_nw: vec![1.0; qw_total],
+            ratios: Vec::new(),
+            windows_completed: 0,
+        }
+    }
+
+    /// N_w vector the *next* train step should use, given its step index.
+    /// Detection windows run at the start of each t_update period with
+    /// ramping suspended.
+    pub fn nw_for_step(&self, step: usize) -> Vec<f32> {
+        if self.in_detection(step) {
+            vec![1.0; self.applied_nw.len()]
+        } else {
+            self.applied_nw.clone()
+        }
+    }
+
+    fn in_detection(&self, step: usize) -> bool {
+        step % self.t_update < self.t0
+    }
+
+    /// Observe the post-step snapshot (master qw, mirrored quantized qw).
+    pub fn observe(&mut self, step: usize, w: &[f32], wq: &[f32]) {
+        if !self.in_detection(step) {
+            self.window = None;
+            return;
+        }
+        match &mut self.window {
+            None => self.window = Some(OscTracker::new(w, wq)),
+            Some(t) => t.observe(w, wq),
+        }
+        let done = step % self.t_update == self.t0 - 1;
+        if done {
+            if let Some(t) = self.window.take() {
+                if t.steps() > 0 {
+                    t.ratios_into(&mut self.ratios);
+                    for (nw, &r) in self.applied_nw.iter_mut().zip(&self.ratios) {
+                        let amp = if r.is_finite() {
+                            self.k2 * (r / self.k1).floor() + 1.0
+                        } else {
+                            self.n_max
+                        };
+                        *nw = amp.clamp(1.0, self.n_max);
+                    }
+                    self.windows_completed += 1;
+                }
+            }
+        }
+    }
+
+    /// Fraction of elements currently ramped (N_w > 1); for logging.
+    pub fn ramped_fraction(&self) -> f64 {
+        let n = self.applied_nw.len().max(1);
+        self.applied_nw.iter().filter(|&&x| x > 1.0).count() as f64 / n as f64
+    }
+
+    pub fn applied_nw(&self) -> &[f32] {
+        &self.applied_nw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> Policy {
+        Policy::QRamping { k1: 16.0, k2: 5.0, n_max: 16.0, t0: 4, t_update: 10 }
+    }
+
+    #[test]
+    fn detection_then_apply() {
+        let mut c = QRampingController::new(&policy(), 2);
+        // During detection (steps 0..4) nw must be all-ones.
+        assert_eq!(c.nw_for_step(0), vec![1.0, 1.0]);
+        // Element 0 oscillates hard (tiny master moves, big q flips);
+        // element 1 walks smoothly.
+        let w_seq = [
+            [0.7501f32, 0.10],
+            [0.7499, 0.20],
+            [0.7501, 0.30],
+            [0.7499, 0.40],
+            [0.7501, 0.50],
+        ];
+        let q_seq = [[1.0f32, 0.0], [0.5, 0.0], [1.0, 0.5], [0.5, 0.5], [1.0, 0.5]];
+        for (i, (w, q)) in w_seq.iter().zip(&q_seq).enumerate() {
+            c.observe(i, w, q);
+        }
+        assert_eq!(c.windows_completed, 1);
+        let nw = c.nw_for_step(5);
+        assert!(nw[0] > 1.0, "oscillating element ramped, got {}", nw[0]);
+        assert_eq!(nw[1], 1.0, "smooth element not ramped");
+        // R_w for elem 0: dist_q = 4 * 0.5 = 2, dist_w ~ 0.0008 -> huge
+        // ratio -> clamped to n_max.
+        assert_eq!(nw[0], 16.0);
+        assert!(c.ramped_fraction() > 0.0);
+    }
+
+    #[test]
+    fn next_window_resets_to_ones_during_detection() {
+        let mut c = QRampingController::new(&policy(), 1);
+        for i in 0..4 {
+            c.observe(i, &[0.1 * i as f32], &[0.0]);
+        }
+        assert_eq!(c.windows_completed, 1);
+        // Step 10 starts the next detection window.
+        assert_eq!(c.nw_for_step(10), vec![1.0]);
+        assert_eq!(c.nw_for_step(4), c.applied_nw().to_vec());
+    }
+
+    #[test]
+    fn infinite_ratio_maps_to_nmax() {
+        let mut c = QRampingController::new(&policy(), 1);
+        // Master frozen, quantized flipping: dist_w = 0, dist_q > 0.
+        c.observe(0, &[0.5], &[0.5]);
+        c.observe(1, &[0.5], &[1.0]);
+        c.observe(2, &[0.5], &[0.5]);
+        c.observe(3, &[0.5], &[1.0]);
+        assert_eq!(c.applied_nw()[0], 16.0);
+    }
+}

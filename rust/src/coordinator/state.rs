@@ -1,0 +1,165 @@
+//! Training state container + binary checkpoints.
+//!
+//! The coordinator owns every tensor between steps; the HLO step maps
+//! (state, batch, scalars) -> state'. Checkpoints are a simple
+//! versioned little-endian binary: good enough for resumable runs and
+//! the analysis examples, with no external dependencies.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"TJCKPT01";
+
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// EMA of the quantized segment (Q-EMA input / analysis).
+    pub ema: Vec<f32>,
+    /// Q-Ramping gradient accumulators (quantized segment).
+    pub accum: Vec<f32>,
+    /// Q-Ramping per-element amplification factors N_w.
+    pub nw: Vec<f32>,
+    /// Freeze baseline: 0/1 mask + pinned values.
+    pub freeze_mask: Vec<f32>,
+    pub freeze_value: Vec<f32>,
+    pub step: usize,
+}
+
+impl TrainState {
+    pub fn new(params: Vec<f32>, qw_total: usize) -> TrainState {
+        assert!(qw_total <= params.len());
+        let p = params.len();
+        let ema = params[..qw_total].to_vec();
+        TrainState {
+            params,
+            m: vec![0.0; p],
+            v: vec![0.0; p],
+            ema,
+            accum: vec![0.0; qw_total],
+            nw: vec![1.0; qw_total],
+            freeze_mask: vec![0.0; qw_total],
+            freeze_value: vec![0.0; qw_total],
+            step: 0,
+        }
+    }
+
+    pub fn qw_total(&self) -> usize {
+        self.ema.len()
+    }
+
+    /// The quantized-weight prefix of the flat parameter vector.
+    pub fn qw(&self) -> &[f32] {
+        &self.params[..self.qw_total()]
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating checkpoint {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.step as u64).to_le_bytes())?;
+        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+        f.write_all(&(self.qw_total() as u64).to_le_bytes())?;
+        for buf in [
+            &self.params,
+            &self.m,
+            &self.v,
+            &self.ema,
+            &self.accum,
+            &self.nw,
+            &self.freeze_mask,
+            &self.freeze_value,
+        ] {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(buf.as_ptr() as *const u8, buf.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<TrainState> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad checkpoint magic in {}", path.display());
+        }
+        let mut u64buf = [0u8; 8];
+        f.read_exact(&mut u64buf)?;
+        let step = u64::from_le_bytes(u64buf) as usize;
+        f.read_exact(&mut u64buf)?;
+        let p = u64::from_le_bytes(u64buf) as usize;
+        f.read_exact(&mut u64buf)?;
+        let qw = u64::from_le_bytes(u64buf) as usize;
+        if qw > p || p > (1 << 33) {
+            bail!("implausible checkpoint sizes p={p} qw={qw}");
+        }
+        let mut read_vec = |n: usize| -> Result<Vec<f32>> {
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            Ok(bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        };
+        Ok(TrainState {
+            params: read_vec(p)?,
+            m: read_vec(p)?,
+            v: read_vec(p)?,
+            ema: read_vec(qw)?,
+            accum: read_vec(qw)?,
+            nw: read_vec(qw)?,
+            freeze_mask: read_vec(qw)?,
+            freeze_value: read_vec(qw)?,
+            step,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_state_invariants() {
+        let s = TrainState::new(vec![1.0, 2.0, 3.0, 4.0], 2);
+        assert_eq!(s.qw_total(), 2);
+        assert_eq!(s.qw(), &[1.0, 2.0]);
+        assert_eq!(s.ema, vec![1.0, 2.0]);
+        assert_eq!(s.nw, vec![1.0, 1.0]);
+        assert_eq!(s.m.len(), 4);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join("tj_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.ckpt");
+        let mut s = TrainState::new((0..10).map(|i| i as f32 * 0.5).collect(), 4);
+        s.step = 77;
+        s.nw[1] = 6.0;
+        s.ema[0] = -1.25;
+        s.save(&path).unwrap();
+        let t = TrainState::load(&path).unwrap();
+        assert_eq!(t.step, 77);
+        assert_eq!(t.params, s.params);
+        assert_eq!(t.nw, s.nw);
+        assert_eq!(t.ema, s.ema);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("tj_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(TrainState::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,390 @@
+//! The training driver: owns state, data, policies and metrics; calls
+//! the AOT HLO step functions. Python is never involved at run time.
+
+use anyhow::{bail, Result};
+
+use crate::config::{Policy, TrainConfig};
+use crate::coordinator::freeze::FreezeController;
+use crate::coordinator::qramping::QRampingController;
+use crate::coordinator::recorder::Recorder;
+use crate::coordinator::state::TrainState;
+use crate::data::{Batcher, EvalSet, SynthVision};
+use crate::metrics::{latents, quant_confidence, OscTracker, RateTracker};
+use crate::quant::{
+    fp4_format, int4_quantize, mx_quantize_cols_into, qema_quantize_cols_into,
+    Fp4Format, Scaling,
+};
+use crate::runtime::{Arg, ModelArtifacts};
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub acc_pct: f64,
+    pub mean_loss: f64,
+    pub samples: usize,
+}
+
+/// How the forward weight quantizer is mirrored on the host.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum WqMirror {
+    Identity,
+    Mx,
+    Qema,
+    Int4,
+}
+
+pub struct Trainer<'a> {
+    pub arts: &'a ModelArtifacts,
+    pub cfg: TrainConfig,
+    pub state: TrainState,
+    pub rec: Recorder,
+    batcher: Batcher,
+    evalset: EvalSet,
+    probe_x: Vec<f32>,
+    qramp: Option<QRampingController>,
+    freeze: Option<FreezeController>,
+    dampen_lambda: f32,
+    // --- metric machinery ---
+    mirror: WqMirror,
+    fmt: &'static Fp4Format,
+    scaling: Scaling,
+    wq_buf: Vec<f32>,
+    rate_w: RateTracker,
+    rate_wq: RateTracker,
+    rate_y: RateTracker,
+    osc: Option<OscTracker>,
+    scratch_conf: Vec<f32>,
+    scratch_lat: Vec<f32>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(arts: &'a ModelArtifacts, cfg: TrainConfig, params: Vec<f32>) -> Result<Trainer<'a>> {
+        let man = &arts.manifest;
+        if params.len() != man.total_params {
+            bail!("param vector {} != manifest {}", params.len(), man.total_params);
+        }
+        if cfg.batch != man.batch {
+            bail!("config batch {} != artifact batch {}", cfg.batch, man.batch);
+        }
+        let state = TrainState::new(params, man.qw_total);
+        let ds = SynthVision::new(
+            man.model.img,
+            man.model.classes,
+            cfg.data_seed,
+            cfg.train_size,
+            cfg.val_size,
+        );
+        let batcher = Batcher::new(ds.clone(), cfg.batch, cfg.train_seed);
+        let evalset = EvalSet::new(ds, cfg.batch, cfg.eval_samples);
+        let (probe_x, _) = batcher.fixed_batch(cfg.train_seed);
+
+        let mirror = if man.variant.kind == "fp32"
+            || !man.variant.enabled.get(1).copied().unwrap_or(true)
+        {
+            WqMirror::Identity
+        } else if man.variant.kind == "int4" {
+            WqMirror::Int4
+        } else if man.variant.qema {
+            WqMirror::Qema
+        } else {
+            WqMirror::Mx
+        };
+        let fmt = fp4_format(&man.variant.fwd_fmt)
+            .unwrap_or_else(|| crate::quant::e2m1());
+        let scaling = Scaling::parse(&man.variant.scaling).unwrap_or(Scaling::TruncationFree);
+
+        let qramp = match &cfg.policy {
+            Policy::QRamping { .. } => Some(QRampingController::new(&cfg.policy, man.qw_total)),
+            _ => None,
+        };
+        let freeze = match &cfg.policy {
+            Policy::Freeze { .. } => Some(FreezeController::new(&cfg.policy, man.qw_total)),
+            _ => None,
+        };
+        let dampen_lambda = match &cfg.policy {
+            Policy::Dampen { lambda } => *lambda,
+            _ => 0.0,
+        };
+        let qw = man.qw_total;
+        Ok(Trainer {
+            arts,
+            cfg,
+            state,
+            rec: Recorder::new(),
+            batcher,
+            evalset,
+            probe_x,
+            qramp,
+            freeze,
+            dampen_lambda,
+            mirror,
+            fmt,
+            scaling,
+            wq_buf: vec![0.0; qw],
+            rate_w: RateTracker::new(),
+            rate_wq: RateTracker::new(),
+            rate_y: RateTracker::new(),
+            osc: None,
+            scratch_conf: Vec::new(),
+            scratch_lat: Vec::new(),
+        })
+    }
+
+    fn metrics_enabled(&self) -> bool {
+        let m = &self.cfg.metrics;
+        m.rate_window > 0 || m.osc_window > 0 || m.conf_every > 0
+    }
+
+    /// Mirror the forward quantized weights of the whole quantized
+    /// segment into `wq_buf` (pure Rust; bit-identical to the HLO).
+    pub fn mirror_wq(&mut self) {
+        let arts = self.arts;
+        let man = &arts.manifest;
+
+        match self.mirror {
+            WqMirror::Identity => self.wq_buf.copy_from_slice(self.state.qw()),
+            WqMirror::Int4 => {
+                for seg in man.quantized_segments() {
+                    let r = seg.range();
+                    let q = int4_quantize(&self.state.params[r.clone()], None);
+                    self.wq_buf[r].copy_from_slice(&q);
+                }
+            }
+            WqMirror::Mx => {
+                for seg in man.quantized_segments() {
+                    let r = seg.range();
+                    mx_quantize_cols_into(
+                        &self.state.params[r.clone()],
+                        seg.cols(),
+                        self.fmt,
+                        self.scaling,
+                        &mut self.wq_buf[r],
+                    );
+                }
+            }
+            WqMirror::Qema => {
+                for seg in man.quantized_segments() {
+                    let r = seg.range();
+                    qema_quantize_cols_into(
+                        &self.state.params[r.clone()],
+                        &self.state.ema[r.clone()],
+                        seg.cols(),
+                        self.fmt,
+                        self.scaling,
+                        &mut self.wq_buf[r],
+                    );
+                }
+            }
+        }
+    }
+
+    /// Latest mirrored quantized weights (call `mirror_wq` first).
+    pub fn wq(&self) -> &[f32] {
+        &self.wq_buf
+    }
+
+    /// Latent weights / confidences over all quantized segments.
+    pub fn snapshot_latents(&mut self) -> (Vec<f32>, Vec<f32>) {
+        let arts = self.arts;
+        let man = &arts.manifest;
+        let mut lat = Vec::with_capacity(man.qw_total);
+        let mut conf = Vec::with_capacity(man.qw_total);
+        let mut seg_buf = Vec::new();
+        for seg in man.quantized_segments() {
+            let w = &self.state.params[seg.range()];
+            latents(w, seg.cols(), self.fmt, self.scaling, &mut seg_buf);
+            lat.extend_from_slice(&seg_buf);
+            quant_confidence(w, seg.cols(), self.fmt, self.scaling, &mut seg_buf);
+            conf.extend_from_slice(&seg_buf);
+        }
+        (lat, conf)
+    }
+
+    /// Run one optimization step; returns (train loss, batch accuracy).
+    pub fn step(&mut self) -> Result<(f32, f32)> {
+        let step = self.state.step;
+        // Policy inputs for this step.
+        if let Some(q) = &self.qramp {
+            self.state.nw = q.nw_for_step(step);
+        }
+        if let Some(f) = &self.freeze {
+            self.state.freeze_mask.copy_from_slice(&f.mask);
+            self.state.freeze_value.copy_from_slice(&f.value);
+        }
+        let lr = self.cfg.lr_at(step);
+        let (x, y) = self.batcher.next_batch();
+        let outs = self.arts.train_step.call(&[
+            Arg::F32(&self.state.params),
+            Arg::F32(&self.state.m),
+            Arg::F32(&self.state.v),
+            Arg::F32(&self.state.ema),
+            Arg::F32(&self.state.accum),
+            Arg::F32(&self.state.nw),
+            Arg::F32(&self.state.freeze_mask),
+            Arg::F32(&self.state.freeze_value),
+            Arg::ScalarF32(lr),
+            Arg::ScalarF32(self.cfg.weight_decay),
+            Arg::ScalarF32(self.cfg.ema_beta),
+            Arg::ScalarF32(self.dampen_lambda),
+            Arg::ScalarI32(step as i32),
+            Arg::ScalarI32(self.cfg.train_seed as i32),
+            Arg::F32(&x),
+            Arg::I32(&y),
+        ])?;
+        let mut it = outs.into_iter();
+        self.state.params = it.next().unwrap().data;
+        self.state.m = it.next().unwrap().data;
+        self.state.v = it.next().unwrap().data;
+        self.state.ema = it.next().unwrap().data;
+        self.state.accum = it.next().unwrap().data;
+        let loss = it.next().unwrap().item()?;
+        let acc = it.next().unwrap().item()?;
+        self.state.step += 1;
+
+        self.after_step(step, loss, acc)?;
+        Ok((loss, acc))
+    }
+
+    /// Post-step bookkeeping: controllers + metric trackers.
+    fn after_step(&mut self, step: usize, loss: f32, acc: f32) -> Result<()> {
+        self.rec.loss_curve.push((step, loss, acc));
+
+        let need_wq = self.qramp.is_some() || self.freeze.is_some() || self.metrics_enabled();
+        if need_wq {
+            self.mirror_wq();
+        }
+        if let Some(q) = &mut self.qramp {
+            q.observe(step, &self.state.params[..self.wq_buf.len()], &self.wq_buf);
+        }
+        if let Some(f) = &mut self.freeze {
+            f.observe(step, &self.state.params[..self.wq_buf.len()], &self.wq_buf);
+        }
+
+        let m = self.cfg.metrics.clone();
+        if m.rate_window > 0 {
+            self.rate_w.observe(self.state.qw());
+            self.rate_wq.observe(&self.wq_buf);
+            if m.probe_every > 0 && (step + 1) % m.probe_every == 0 {
+                let act = self.probe_activation()?;
+                self.rate_y.observe(&act);
+            }
+            if (step + 1) % m.rate_window == 0 {
+                let ry = if self.rate_y.steps() > 0 { self.rate_y.rate() } else { f64::NAN };
+                self.rec
+                    .rate_series
+                    .push((step + 1, self.rate_w.rate(), self.rate_wq.rate(), ry));
+                self.rate_w.reset_window();
+                self.rate_wq.reset_window();
+                self.rate_y.reset_window();
+            }
+        }
+        if m.osc_window > 0 {
+            match &mut self.osc {
+                None => {
+                    self.osc = Some(OscTracker::new(
+                        &self.state.params[..self.wq_buf.len()],
+                        &self.wq_buf,
+                    ))
+                }
+                Some(t) => {
+                    t.observe(&self.state.params[..self.wq_buf.len()], &self.wq_buf);
+                    if t.steps() >= m.osc_window {
+                        let count = t.oscillating_count(m.rw_threshold);
+                        self.rec.osc_series.push((step + 1, count, m.osc_window));
+                        t.reset_window();
+                    }
+                }
+            }
+        }
+        if m.conf_every > 0 && (step + 1) % m.conf_every == 0 {
+            self.conf_snapshot(step + 1);
+        }
+        if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
+            let ev = self.eval()?;
+            self.rec.evals.push((step + 1, ev.acc_pct, ev.mean_loss));
+        }
+        Ok(())
+    }
+
+    pub fn conf_snapshot(&mut self, step: usize) {
+        let arts = self.arts;
+        let man = &arts.manifest;
+        let (qn, qp) = (self.fmt.qn(), self.fmt.qp());
+        let mut all_lat = Vec::with_capacity(man.qw_total);
+        let mut all_conf = Vec::with_capacity(man.qw_total);
+        for seg in man.quantized_segments() {
+            let w = &self.state.params[seg.range()];
+            latents(w, seg.cols(), self.fmt, self.scaling, &mut self.scratch_lat);
+            all_lat.extend_from_slice(&self.scratch_lat);
+            quant_confidence(w, seg.cols(), self.fmt, self.scaling, &mut self.scratch_conf);
+            all_conf.extend_from_slice(&self.scratch_conf);
+        }
+        self.rec.push_conf_snapshot(step, &all_conf, &all_lat, qn, qp);
+    }
+
+    /// Fixed-input activation probe (r(Y) metric).
+    pub fn probe_activation(&self) -> Result<Vec<f32>> {
+        let outs = self.arts.probe.call(&[
+            Arg::F32(&self.state.params),
+            Arg::F32(&self.state.ema),
+            Arg::F32(&self.probe_x),
+        ])?;
+        Ok(outs.into_iter().next().unwrap().data)
+    }
+
+    /// Full validation pass.
+    pub fn eval(&self) -> Result<EvalResult> {
+        let nb = self.evalset.num_batches();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        for b in 0..nb {
+            let (x, y) = self.evalset.batch(b);
+            let outs = self.arts.eval_step.call(&[
+                Arg::F32(&self.state.params),
+                Arg::F32(&self.state.ema),
+                Arg::F32(&x),
+                Arg::I32(&y),
+            ])?;
+            loss_sum += outs[0].item()? as f64;
+            correct += outs[1].item()? as f64;
+        }
+        let n = self.evalset.num_samples().max(1);
+        Ok(EvalResult {
+            acc_pct: 100.0 * correct / n as f64,
+            mean_loss: loss_sum / n as f64,
+            samples: n,
+        })
+    }
+
+    /// Train for the configured number of steps, logging progress.
+    pub fn run(&mut self) -> Result<EvalResult> {
+        let total = self.cfg.steps;
+        let log_every = (total / 10).max(1);
+        while self.state.step < total {
+            let (loss, acc) = self.step()?;
+            if self.state.step % log_every == 0 || self.state.step == total {
+                let extra = match (&self.qramp, &self.freeze) {
+                    (Some(q), _) => format!(" ramped={:.1}%", 100.0 * q.ramped_fraction()),
+                    (_, Some(f)) => format!(" frozen={:.1}%", 100.0 * f.frozen_fraction()),
+                    _ => String::new(),
+                };
+                crate::loginfo!(
+                    "[{}/{}] {} loss={loss:.4} batch_acc={acc:.3}{extra}",
+                    self.state.step,
+                    total,
+                    self.cfg.variant
+                );
+            }
+        }
+        let ev = self.eval()?;
+        self.rec.evals.push((self.state.step, ev.acc_pct, ev.mean_loss));
+        Ok(ev)
+    }
+
+    pub fn qramping_ref(&self) -> Option<&QRampingController> {
+        self.qramp.as_ref()
+    }
+
+    pub fn freeze_ref(&self) -> Option<&FreezeController> {
+        self.freeze.as_ref()
+    }
+}

@@ -1,0 +1,161 @@
+//! Batch assembly: shuffled continuous training stream + deterministic
+//! eval coverage. Sample synthesis is parallelized across a scoped
+//! thread pool (util::parallel).
+
+use super::synth::{Split, SynthVision};
+use crate::util::parallel::{default_workers, parallel_map_indexed};
+use crate::util::rng::Rng;
+
+/// Continuous shuffled training batch stream (reshuffles every epoch).
+pub struct Batcher {
+    ds: SynthVision,
+    batch: usize,
+    order: Vec<usize>,
+    pos: usize,
+    rng: Rng,
+    workers: usize,
+    pub epochs_completed: usize,
+}
+
+impl Batcher {
+    pub fn new(ds: SynthVision, batch: usize, shuffle_seed: u64) -> Batcher {
+        let mut rng = Rng::new(shuffle_seed ^ 0xBA7C_4E2);
+        let mut order: Vec<usize> = (0..ds.train_size).collect();
+        rng.shuffle(&mut order);
+        Batcher { ds, batch, order, pos: 0, rng, workers: default_workers(), epochs_completed: 0 }
+    }
+
+    /// Next (pixels, labels) batch; pixels are B*H*W*3 row-major.
+    pub fn next_batch(&mut self) -> (Vec<f32>, Vec<i32>) {
+        let idxs: Vec<usize> = (0..self.batch)
+            .map(|_| {
+                if self.pos >= self.order.len() {
+                    self.rng.shuffle(&mut self.order);
+                    self.pos = 0;
+                    self.epochs_completed += 1;
+                }
+                let i = self.order[self.pos];
+                self.pos += 1;
+                i
+            })
+            .collect();
+        self.assemble(Split::Train, &idxs)
+    }
+
+    fn assemble(&self, split: Split, idxs: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let px_per = self.ds.img * self.ds.img * 3;
+        let results = parallel_map_indexed(idxs.len(), self.workers, |i| {
+            let mut buf = vec![0.0f32; px_per];
+            let label = self.ds.sample_into(split, idxs[i], &mut buf);
+            (buf, label)
+        });
+        let mut xs = Vec::with_capacity(idxs.len() * px_per);
+        let mut ys = Vec::with_capacity(idxs.len());
+        for (buf, label) in results {
+            xs.extend_from_slice(&buf);
+            ys.push(label);
+        }
+        (xs, ys)
+    }
+
+    /// A fixed probe batch (deterministic; used by the activation
+    /// instability metrics so r(Y) is measured on constant input).
+    pub fn fixed_batch(&self, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed ^ 0xF1);
+        let idxs: Vec<usize> = (0..self.batch).map(|_| rng.below(self.ds.train_size)).collect();
+        self.assemble(Split::Train, &idxs)
+    }
+}
+
+/// Deterministic eval-set iterator in fixed batch chunks.
+pub struct EvalSet {
+    ds: SynthVision,
+    batch: usize,
+    limit: usize,
+    workers: usize,
+}
+
+impl EvalSet {
+    pub fn new(ds: SynthVision, batch: usize, limit: usize) -> EvalSet {
+        let limit = limit.min(ds.val_size);
+        EvalSet { ds, batch, limit, workers: default_workers() }
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.limit / self.batch
+    }
+
+    /// Total samples actually evaluated (whole batches only).
+    pub fn num_samples(&self) -> usize {
+        self.num_batches() * self.batch
+    }
+
+    pub fn batch(&self, b: usize) -> (Vec<f32>, Vec<i32>) {
+        assert!(b < self.num_batches());
+        let px_per = self.ds.img * self.ds.img * 3;
+        let results = parallel_map_indexed(self.batch, self.workers, |i| {
+            let mut buf = vec![0.0f32; px_per];
+            let label = self.ds.sample_into(Split::Val, b * self.batch + i, &mut buf);
+            (buf, label)
+        });
+        let mut xs = Vec::with_capacity(self.batch * px_per);
+        let mut ys = Vec::with_capacity(self.batch);
+        for (buf, label) in results {
+            xs.extend_from_slice(&buf);
+            ys.push(label);
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_have_right_shape_and_reshuffle() {
+        let ds = SynthVision::new(32, 10, 1, 64, 32);
+        let mut b = Batcher::new(ds.clone(), 16, 9);
+        let (x1, y1) = b.next_batch();
+        assert_eq!(x1.len(), 16 * 32 * 32 * 3);
+        assert_eq!(y1.len(), 16);
+        for _ in 0..4 {
+            b.next_batch();
+        }
+        // 64/16 = 4 batches per epoch; the reshuffle happens lazily when
+        // the 5th batch starts.
+        assert_eq!(b.epochs_completed, 1);
+    }
+
+    #[test]
+    fn epochs_differ_but_runs_reproduce() {
+        let ds = SynthVision::new(32, 10, 1, 64, 32);
+        let mut b1 = Batcher::new(ds.clone(), 32, 5);
+        let mut b2 = Batcher::new(ds.clone(), 32, 5);
+        let (xa, ya) = b1.next_batch();
+        let (xb, yb) = b2.next_batch();
+        assert_eq!(xa, xb);
+        assert_eq!(ya, yb);
+        let (xc, _) = b1.next_batch();
+        assert_ne!(xa, xc);
+    }
+
+    #[test]
+    fn eval_set_is_deterministic_and_covers() {
+        let ds = SynthVision::new(32, 10, 1, 64, 40);
+        let ev = EvalSet::new(ds.clone(), 16, 512);
+        assert_eq!(ev.num_batches(), 2); // limited by val_size 40 -> 2 full
+        let (x1, _) = ev.batch(0);
+        let (x2, _) = ev.batch(0);
+        assert_eq!(x1, x2);
+        let (x3, _) = ev.batch(1);
+        assert_ne!(x1, x3);
+    }
+
+    #[test]
+    fn fixed_batch_stable() {
+        let ds = SynthVision::new(32, 10, 1, 64, 32);
+        let b = Batcher::new(ds.clone(), 8, 0);
+        assert_eq!(b.fixed_batch(3), b.fixed_batch(3));
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic vision data pipeline (the ImageNet substitution).
+//!
+//! The paper pre-trains on ImageNet-1K, which is unavailable here; per
+//! DESIGN.md §Substitutions we train on **SynthVision**, a deterministic
+//! procedural image-classification corpus whose difficulty is tuned so
+//! that (a) FP32 training strongly beats chance and (b) 4-bit
+//! quantization measurably hurts — which is all the paper's experiments
+//! need from the task.
+
+pub mod batcher;
+pub mod synth;
+
+pub use batcher::{Batcher, EvalSet};
+pub use synth::{Split, SynthVision};

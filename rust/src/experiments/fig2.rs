@@ -1,0 +1,35 @@
+//! Figure 2 — rate of change across training stages for FP32 vs MXFP4.
+//!
+//! Paper shape: for FP32, r(W), r(W_Q), r(Y) all decay toward zero with
+//! the cosine LR; for MXFP4 (TetraJet), r(W_Q) and r(Y) plateau well
+//! above zero at the end of training — the oscillation signature.
+
+use anyhow::Result;
+
+use super::common::{print_table, save_results, ExpOpts, Runner};
+use crate::config::Policy;
+
+pub fn run(opts: &ExpOpts, runner: &mut Runner) -> Result<()> {
+    let runs = vec![
+        runner.run_cached("Full Precision", "fp32", Policy::None)?,
+        runner.run_cached("TetraJet (MXFP4)", "tetrajet", Policy::None)?,
+    ];
+    let mut rows = Vec::new();
+    for r in &runs {
+        for &(step, rw, rq, ry) in &r.rec.rate_series {
+            rows.push(vec![
+                r.label.clone(),
+                step.to_string(),
+                format!("{rw:.5}"),
+                format!("{rq:.5}"),
+                format!("{ry:.5}"),
+            ]);
+        }
+    }
+    print_table(
+        "Figure 2 — rate of change by training stage",
+        &["method", "step", "r(W)", "r(W_Q)", "r(Y)"],
+        &rows,
+    );
+    save_results(opts, "fig2", &["method", "step", "r_w", "r_wq", "r_y"], &rows, &runs)
+}

@@ -1,0 +1,89 @@
+//! Figure 3 — trajectories of oscillating latent weights.
+//!
+//! Trains TetraJet, then for the final stretch records the latent
+//! weight (w/S) and dequantized forward weight of the lowest-confidence
+//! elements: the paper's picture of latents hovering around a
+//! quantization threshold (e.g. -0.75) while the FP4 value flips
+//! between the two neighbouring grid points.
+
+use anyhow::Result;
+
+use super::common::{print_table, save_results, ExpOpts, Runner, RunSummary};
+use crate::config::{MetricsCfg, Policy};
+use crate::coordinator::Trainer;
+use crate::runtime::ModelArtifacts;
+
+const TRACKED: usize = 6;
+
+pub fn run(opts: &ExpOpts, runner: &mut Runner) -> Result<()> {
+    // Own the artifacts locally (this harness drives the trainer
+    // manually instead of using Runner::run_one).
+    let client = crate::runtime::cpu_client()?;
+    let arts = ModelArtifacts::load(&client, &opts.root, &opts.model, opts.batch, "tetrajet")?;
+    let params = runner.initial_params(0)?;
+
+    let mut cfg = opts.base_config("tetrajet");
+    cfg.metrics = MetricsCfg::off();
+    cfg.policy = Policy::None;
+    let tail = (opts.steps / 5).clamp(20, 60);
+    let warm_steps = opts.steps.saturating_sub(tail);
+
+    let mut tr = Trainer::new(&arts, cfg, params)?;
+    crate::loginfo!("fig3: warmup {warm_steps} steps, then track {tail} steps");
+    for _ in 0..warm_steps {
+        tr.step()?;
+    }
+    // Pick the lowest-confidence (most oscillation-prone) elements.
+    let (_, conf) = tr.snapshot_latents();
+    let mut idx: Vec<usize> = (0..conf.len()).collect();
+    idx.sort_by(|&a, &b| conf[a].partial_cmp(&conf[b]).unwrap());
+    let tracked: Vec<usize> = idx.into_iter().take(TRACKED).collect();
+
+    let mut rows = Vec::new();
+    for t in 0..tail {
+        tr.step()?;
+        let (lat, _) = tr.snapshot_latents();
+        tr.mirror_wq();
+        let wq = tr.wq();
+        for (k, &i) in tracked.iter().enumerate() {
+            rows.push(vec![
+                k.to_string(),
+                (warm_steps + t).to_string(),
+                format!("{:.5}", lat[i]),
+                format!("{:.5}", wq[i]),
+            ]);
+        }
+    }
+    // Count how many tracked elements actually flipped (the point of
+    // the figure).
+    let mut flips = 0usize;
+    for k in 0..TRACKED {
+        let vals: Vec<&str> = rows
+            .iter()
+            .filter(|r| r[0] == k.to_string())
+            .map(|r| r[3].as_str())
+            .collect();
+        if vals.windows(2).any(|w| w[0] != w[1]) {
+            flips += 1;
+        }
+    }
+    crate::loginfo!("fig3: {flips}/{TRACKED} tracked low-confidence elements flipped FP4 value");
+
+    let summary = RunSummary {
+        label: "tetrajet-trajectories".into(),
+        variant: "tetrajet".into(),
+        policy: "none".into(),
+        final_acc: tr.eval()?.acc_pct,
+        final_loss: 0.0,
+        rec: tr.rec.clone(),
+    };
+    print_table(
+        &format!(
+            "Figure 3 — latent & quantized trajectories, {TRACKED} least-confident elements (first 12 of {} rows)",
+            rows.len()
+        ),
+        &["elem", "step", "latent w/S", "w_Q (dequant)"],
+        &rows[..rows.len().min(12)],
+    );
+    save_results(opts, "fig3", &["elem", "step", "latent", "wq"], &rows, &[summary])
+}

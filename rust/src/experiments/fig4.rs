@@ -1,0 +1,44 @@
+//! Figure 4 — evolution of the latent-weight distribution and the
+//! quantization-confidence distribution over training (TetraJet).
+//!
+//! Paper shape: latents concentrate near grid points early and spread
+//! toward thresholds late; mean confidence declines as training
+//! progresses (oscillation becomes more prevalent).
+
+use anyhow::Result;
+
+use super::common::{print_table, save_results, ExpOpts, Runner};
+use crate::config::Policy;
+use crate::util::stats::Histogram;
+
+pub fn run(opts: &ExpOpts, runner: &mut Runner) -> Result<()> {
+    let runs =
+        vec![runner.run_cached("TetraJet", "tetrajet", Policy::None)?];
+    let mut rows = Vec::new();
+    for snap in &runs[0].rec.conf_snaps {
+        let mut ch = Histogram::new(0.0, 1.0, snap.conf_hist.len());
+        ch.counts = snap
+            .conf_hist
+            .iter()
+            .map(|&f| (f * 1e6) as u64)
+            .collect();
+        let mut lh = Histogram::new(-6.0, 6.0, snap.latent_hist.len());
+        lh.counts = snap
+            .latent_hist
+            .iter()
+            .map(|&f| (f * 1e6) as u64)
+            .collect();
+        rows.push(vec![
+            snap.step.to_string(),
+            format!("{:.4}", snap.mean_conf),
+            ch.sparkline(),
+            lh.sparkline(),
+        ]);
+    }
+    print_table(
+        "Figure 4 — confidence & latent distributions over training",
+        &["step", "mean QuantConf", "conf hist [0..1]", "latent hist [Qn..Qp]"],
+        &rows,
+    );
+    save_results(opts, "fig4", &["step", "mean_conf", "conf_hist", "latent_hist"], &rows, &runs)
+}

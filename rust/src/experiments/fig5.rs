@@ -1,0 +1,40 @@
+//! Figure 5 — Q-Ramping's effect on the final quantization-confidence
+//! distribution.
+//!
+//! Paper shape: Q-Ramping shifts mass away from the low-confidence
+//! (near-threshold) bins relative to plain TetraJet — it updated the
+//! oscillating weights away from thresholds.
+
+use anyhow::Result;
+
+use super::common::{print_table, save_results, ExpOpts, Runner};
+use crate::config::Policy;
+use crate::util::stats::Histogram;
+
+pub fn run(opts: &ExpOpts, runner: &mut Runner) -> Result<()> {
+    let runs = vec![
+        runner.run_cached("TetraJet", "tetrajet", Policy::None)?,
+        runner.run_cached("TetraJet + Q-Ramping", "tetrajet", Policy::qramping_default())?,
+        runner.run_cached("TetraJet + Q-EMA", "tetrajet_qema", Policy::None)?,
+    ];
+    let mut rows = Vec::new();
+    for r in &runs {
+        if let Some(snap) = r.rec.conf_snaps.last() {
+            let mut h = Histogram::new(0.0, 1.0, snap.conf_hist.len());
+            h.counts = snap.conf_hist.iter().map(|&f| (f * 1e6) as u64).collect();
+            let low_frac: f64 = snap.conf_hist[..snap.conf_hist.len() / 4].iter().sum();
+            rows.push(vec![
+                r.label.clone(),
+                format!("{:.4}", snap.mean_conf),
+                format!("{:.3}", low_frac),
+                h.sparkline(),
+            ]);
+        }
+    }
+    print_table(
+        "Figure 5 — final confidence distribution (low-conf mass = bottom quartile bins)",
+        &["method", "mean QuantConf", "low-conf mass", "conf hist [0..1]"],
+        &rows,
+    );
+    save_results(opts, "fig5", &["method", "mean_conf", "low_mass", "hist"], &rows, &runs)
+}

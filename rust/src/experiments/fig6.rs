@@ -1,0 +1,39 @@
+//! Figure 6 — number of oscillating weights (R_w > 16) over training.
+//!
+//! Paper shape: Q-EMA reduces oscillating weights the most, Q-Ramping
+//! clearly helps, Dampen is ≈ indistinguishable from plain TetraJet.
+
+use anyhow::Result;
+
+use super::common::{print_table, save_results, ExpOpts, Runner};
+use crate::config::Policy;
+
+pub fn run(opts: &ExpOpts, runner: &mut Runner) -> Result<()> {
+    let runs = vec![
+        runner.run_cached("TetraJet", "tetrajet", Policy::None)?,
+        runner.run_cached("TetraJet + Dampen", "tetrajet", Policy::Dampen { lambda: 1e-4 })?,
+        runner.run_cached("TetraJet + Q-EMA", "tetrajet_qema", Policy::None)?,
+        runner.run_cached("TetraJet + Q-Ramping", "tetrajet", Policy::qramping_default())?,
+    ];
+    let mut rows = Vec::new();
+    for r in &runs {
+        for &(step, count, win) in &r.rec.osc_series {
+            rows.push(vec![r.label.clone(), step.to_string(), count.to_string(), win.to_string()]);
+        }
+    }
+    // Also a compact summary: mean oscillating count over the last half.
+    let mut summary_rows = Vec::new();
+    for r in &runs {
+        let n = r.rec.osc_series.len();
+        let tail = &r.rec.osc_series[n / 2..];
+        let mean =
+            tail.iter().map(|&(_, c, _)| c as f64).sum::<f64>() / tail.len().max(1) as f64;
+        summary_rows.push(vec![r.label.clone(), format!("{mean:.1}")]);
+    }
+    print_table(
+        "Figure 6 — oscillating weights (R_w > 16), mean over late training",
+        &["method", "mean #oscillating (late)"],
+        &summary_rows,
+    );
+    save_results(opts, "fig6", &["method", "step", "count", "window"], &rows, &runs)
+}

@@ -1,0 +1,59 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §6).
+//!
+//! Every harness builds `TrainConfig`s, runs them through the
+//! coordinator against the AOT artifacts, prints the paper-style rows /
+//! series, and writes machine-readable results under `results/`.
+
+pub mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+pub mod table7;
+
+use anyhow::{bail, Result};
+
+use crate::experiments::common::{ExpOpts, Runner};
+
+/// Dispatch an experiment by id (`table1`..`table7`, `fig2`..`fig6`, `all`).
+/// One artifact-caching Runner is shared across experiments so each
+/// variant's HLO is compiled at most once per process.
+pub fn run(id: &str, opts: &ExpOpts) -> Result<()> {
+    let mut runner = Runner::new(opts)?;
+    run_with(id, opts, &mut runner)
+}
+
+pub fn run_with(id: &str, opts: &ExpOpts, runner: &mut Runner) -> Result<()> {
+    match id {
+        "table1" => table1::run(opts, runner),
+        "table2" => table2::run(opts, runner),
+        "table3" => table3::run(opts, runner),
+        "table4" => table4::run(opts, runner),
+        "table5" => table5::run(opts, runner),
+        "table6" => table6::run(opts, runner),
+        "table7" => table7::run(opts, runner),
+        "fig2" => fig2::run(opts, runner),
+        "fig3" => fig3::run(opts, runner),
+        "fig4" => fig4::run(opts, runner),
+        "fig5" => fig5::run(opts, runner),
+        "fig6" => fig6::run(opts, runner),
+        "all" => {
+            for id in [
+                "table2", "table3", "table4", "table5", "table6", "table7",
+                "table1", "fig2", "fig3", "fig4", "fig5", "fig6",
+            ] {
+                crate::loginfo!("=== experiment {id} ===");
+                run_with(id, opts, runner)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+}

@@ -1,0 +1,31 @@
+//! Table 1 — impact analysis of the six quantizers: activate one
+//! quantizer Q^(i) at a time (all others identity) and train.
+//!
+//! Paper shape: forward quantizers Q1 (activation) and Q2 (weight)
+//! account for most of the degradation; backward quantizers Q3..Q6 are
+//! nearly free. Requires `make artifacts-full` (q1..q6 variants).
+
+use anyhow::Result;
+
+use super::common::{fmt_acc, print_table, save_results, ExpOpts, Runner};
+use crate::config::Policy;
+
+pub fn run(opts: &ExpOpts, runner: &mut Runner) -> Result<()> {
+    let mut runs = vec![runner.run_cached("Full Precision", "fp32", Policy::None)?];
+    for i in 1..=6 {
+        let v = format!("q{i}");
+        runs.push(runner.run_cached(&format!("Q{i}"), &v, Policy::None)?);
+    }
+    runs.push(runner.run_cached("All Quantizers (TetraJet)", "tetrajet", Policy::None)?);
+    let fp = runs[0].final_acc;
+    let rows: Vec<Vec<String>> = runs
+        .iter()
+        .map(|r| vec![r.label.clone(), fmt_acc(r.final_acc), format!("{:.2}", fp - r.final_acc)])
+        .collect();
+    print_table(
+        "Table 1 — per-quantizer impact (only Q^(i) active)",
+        &["config", "top-1 %", "drop vs FP32"],
+        &rows,
+    );
+    save_results(opts, "table1", &["config", "acc", "drop"], &rows, &runs)
+}

@@ -1,0 +1,47 @@
+//! Table 2 — main result: 90-epoch ViT pre-training top-1 accuracy.
+//!
+//! Paper shape to reproduce (per column): FP32 > TetraJet+Q-EMA ≈
+//! TetraJet+Q-Ramping > TetraJet > Microscaling > INT4 per-tensor, with
+//! TetraJet cutting the FP32 gap vs Microscaling and Q-EMA/Q-Ramping
+//! cutting it further (>50% reduction vs the Microscaling baseline).
+
+use anyhow::Result;
+
+use super::common::{fmt_acc, print_table, save_results, ExpOpts, Runner};
+use crate::config::Policy;
+
+pub fn run(opts: &ExpOpts, runner: &mut Runner) -> Result<()> {
+    let runs = vec![
+        runner.run_cached("Full Precision", "fp32", Policy::None)?,
+        runner.run_cached("INT4 (per-tensor)", "int4", Policy::None)?,
+        runner.run_cached("Microscaling", "microscaling", Policy::None)?,
+        runner.run_cached("TetraJet (ours)", "tetrajet", Policy::None)?,
+        runner.run_cached("TetraJet + Q-EMA (ours)", "tetrajet_qema", Policy::None)?,
+        runner.run_cached("TetraJet + Q-Ramping (ours)", "tetrajet", Policy::qramping_default())?,
+    ];
+    let fp = runs[0].final_acc;
+    let ms = runs[2].final_acc;
+    let rows: Vec<Vec<String>> = runs
+        .iter()
+        .map(|r| {
+            let gap = fp - r.final_acc;
+            let closed = if (fp - ms) > 0.0 {
+                format!("{:.0}%", 100.0 * (1.0 - gap / (fp - ms)))
+            } else {
+                "-".into()
+            };
+            vec![
+                r.label.clone(),
+                fmt_acc(r.final_acc),
+                format!("{:.2}", gap),
+                closed,
+            ]
+        })
+        .collect();
+    print_table(
+        "Table 2 — pre-training top-1 accuracy (SynthVision proxy)",
+        &["method", "top-1 %", "gap to FP32", "MS-gap closed"],
+        &rows,
+    );
+    save_results(opts, "table2", &["method", "acc", "gap", "gap_closed"], &rows, &runs)
+}

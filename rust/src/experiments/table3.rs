@@ -1,0 +1,37 @@
+//! Table 3 — end-of-training stability: rate of change of the forward
+//! quantized weights r(W_Q) and of a fixed-input block activation r(Y).
+//!
+//! Paper shape: Q-EMA < Q-Ramping < Dampen ≈ TetraJet on both columns.
+
+use anyhow::Result;
+
+use super::common::{print_table, save_results, ExpOpts, Runner};
+use crate::config::Policy;
+
+pub fn run(opts: &ExpOpts, runner: &mut Runner) -> Result<()> {
+    let runs = vec![
+        runner.run_cached("TetraJet", "tetrajet", Policy::None)?,
+        runner.run_cached("TetraJet + Dampen", "tetrajet", Policy::Dampen { lambda: 1e-4 })?,
+        runner.run_cached("TetraJet + Q-EMA (ours)", "tetrajet_qema", Policy::None)?,
+        runner.run_cached("TetraJet + Q-Ramping (ours)", "tetrajet", Policy::qramping_default())?,
+    ];
+    let rows: Vec<Vec<String>> = runs
+        .iter()
+        .map(|r| {
+            let last = r.rec.rate_series.last();
+            let (rw, rq, ry) = last.map(|&(_, w, q, y)| (w, q, y)).unwrap_or((0.0, 0.0, 0.0));
+            vec![
+                r.label.clone(),
+                format!("{rw:.4}"),
+                format!("{rq:.4}"),
+                format!("{ry:.4}"),
+            ]
+        })
+        .collect();
+    print_table(
+        "Table 3 — end-of-training rate of change (lower = stabler)",
+        &["method", "r(W)", "r(W_Q)", "r(Y)"],
+        &rows,
+    );
+    save_results(opts, "table3", &["method", "r_w", "r_wq", "r_y"], &rows, &runs)
+}

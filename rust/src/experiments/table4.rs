@@ -1,0 +1,28 @@
+//! Table 4 — oscillation-reduction method comparison: final accuracy of
+//! TetraJet vs +Dampen / +Freeze / +Q-EMA / +Q-Ramping.
+//!
+//! Paper shape: Dampen ≈ no change, Freeze catastrophic (frozen weights
+//! can't recover during pre-training), Q-EMA & Q-Ramping best.
+
+use anyhow::Result;
+
+use super::common::{fmt_acc, print_table, save_results, ExpOpts, Runner};
+use crate::config::Policy;
+
+pub fn run(opts: &ExpOpts, runner: &mut Runner) -> Result<()> {
+    let runs = vec![
+        runner.run_cached("TetraJet", "tetrajet", Policy::None)?,
+        runner.run_cached("TetraJet + Dampen", "tetrajet", Policy::Dampen { lambda: 1e-4 })?,
+        runner.run_cached("TetraJet + Freeze", "tetrajet", Policy::freeze_default())?,
+        runner.run_cached("TetraJet + Q-EMA (ours)", "tetrajet_qema", Policy::None)?,
+        runner.run_cached("TetraJet + Q-Ramping (ours)", "tetrajet", Policy::qramping_default())?,
+    ];
+    let rows: Vec<Vec<String>> =
+        runs.iter().map(|r| vec![r.label.clone(), fmt_acc(r.final_acc)]).collect();
+    print_table(
+        "Table 4 — oscillation reduction methods (final top-1 %)",
+        &["method", "top-1 %"],
+        &rows,
+    );
+    save_results(opts, "table4", &["method", "acc"], &rows, &runs)
+}

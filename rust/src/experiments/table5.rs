@@ -1,0 +1,40 @@
+//! Table 5 — quantization-method ablation: backward rounding
+//! (stochastic/deterministic) x gradient flow (double-quantization /
+//! Microscaling's fresh-tensor design) x shared-scale rule
+//! (truncation-free / floor). 8 combos; TetraJet = stoch+double+tf,
+//! Microscaling = det+naive+floor.
+//!
+//! Paper shape: the unbiased corner (stoch, double, tf) is best, and
+//! stochastic rounding only pays off when the gradient is unbiased.
+//! Requires `make artifacts-full`.
+
+use anyhow::Result;
+
+use super::common::{fmt_acc, print_table, save_results, ExpOpts, Runner};
+use crate::config::Policy;
+
+pub fn run(opts: &ExpOpts, runner: &mut Runner) -> Result<()> {
+    let mut runs = Vec::new();
+    for rnd in ["stoch", "det"] {
+        for flow in ["double", "naive"] {
+            for sc in ["tf", "floor"] {
+                let v = format!("abl_{rnd}_{flow}_{sc}");
+                let note = match (rnd, flow, sc) {
+                    ("stoch", "double", "tf") => " <- TetraJet (unbiased)",
+                    ("det", "naive", "floor") => " <- Microscaling",
+                    _ => "",
+                };
+                let label = format!("{rnd}/{flow}/{sc}{note}");
+                runs.push(runner.run_cached(&label, &v, Policy::None)?);
+            }
+        }
+    }
+    let rows: Vec<Vec<String>> =
+        runs.iter().map(|r| vec![r.label.clone(), fmt_acc(r.final_acc)]).collect();
+    print_table(
+        "Table 5 — rounding x grad-flow x scaling ablation (top-1 %)",
+        &["backward quant / XW for grad / scale", "top-1 %"],
+        &rows,
+    );
+    save_results(opts, "table5", &["combo", "acc"], &rows, &runs)
+}

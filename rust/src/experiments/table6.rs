@@ -1,0 +1,30 @@
+//! Table 6 — stability ablation: remove the forward weight quantizer
+//! (oscillation-free forward) and additionally the activation quantizer
+//! (fully stable forward); compare with Q-EMA / Q-Ramping.
+//!
+//! Paper shape: w/o WQ > TetraJet; w/o WQ&AQ > w/o WQ; Q-EMA and
+//! Q-Ramping recover (or beat) the oscillation-free forward accuracy.
+//! Requires `make artifacts-full` (tj_no_wq, tj_no_wq_aq variants).
+
+use anyhow::Result;
+
+use super::common::{fmt_acc, print_table, save_results, ExpOpts, Runner};
+use crate::config::Policy;
+
+pub fn run(opts: &ExpOpts, runner: &mut Runner) -> Result<()> {
+    let runs = vec![
+        runner.run_cached("TetraJet", "tetrajet", Policy::None)?,
+        runner.run_cached("TetraJet w/o WQ", "tj_no_wq", Policy::None)?,
+        runner.run_cached("TetraJet w/o WQ & AQ", "tj_no_wq_aq", Policy::None)?,
+        runner.run_cached("TetraJet + Q-EMA", "tetrajet_qema", Policy::None)?,
+        runner.run_cached("TetraJet + Q-Ramping", "tetrajet", Policy::qramping_default())?,
+    ];
+    let rows: Vec<Vec<String>> =
+        runs.iter().map(|r| vec![r.label.clone(), fmt_acc(r.final_acc)]).collect();
+    print_table(
+        "Table 6 — forward-stability ablation (top-1 %)",
+        &["config", "top-1 %"],
+        &rows,
+    );
+    save_results(opts, "table6", &["config", "acc"], &rows, &runs)
+}

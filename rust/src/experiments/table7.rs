@@ -1,0 +1,44 @@
+//! Table 7 — FP4 data-format selection: E2M1 vs E3M0 for the forward
+//! (A&W) and backward (grad) quantizers.
+//!
+//! Paper shape: E2M1 wins on both axes; E3M0 forward is much worse
+//! (coarse mantissa-free grid hurts weights/activations most).
+//! Requires `make artifacts-full` (fmt_* variants).
+
+use anyhow::Result;
+
+use super::common::{fmt_acc, print_table, save_results, ExpOpts, Runner};
+use crate::config::Policy;
+
+pub fn run(opts: &ExpOpts, runner: &mut Runner) -> Result<()> {
+    let mut acc = std::collections::BTreeMap::new();
+    let mut runs = Vec::new();
+    for ff in ["e2m1", "e3m0"] {
+        for bf in ["e2m1", "e3m0"] {
+            let v = format!("fmt_{ff}_{bf}");
+            let r = runner.run_cached(
+                &format!("A&W {ff} / Grad {bf}"),
+                &v,
+                Policy::None,
+            )?;
+            acc.insert((ff, bf), r.final_acc);
+            runs.push(r);
+        }
+    }
+    let rows: Vec<Vec<String>> = ["e2m1", "e3m0"]
+        .iter()
+        .map(|bf| {
+            vec![
+                format!("grad {bf}"),
+                fmt_acc(acc[&("e2m1", *bf)]),
+                fmt_acc(acc[&("e3m0", *bf)]),
+            ]
+        })
+        .collect();
+    print_table(
+        "Table 7 — FP4 format selection (rows: grad fmt, cols: A&W fmt)",
+        &["", "A&W e2m1", "A&W e3m0"],
+        &rows,
+    );
+    save_results(opts, "table7", &["grad_fmt", "aw_e2m1", "aw_e3m0"], &rows, &runs)
+}

@@ -1,0 +1,30 @@
+//! # TetraJet — Oscillation-Reduced MXFP4 Training for Vision Transformers
+//!
+//! Rust coordinator (Layer 3) of the three-layer reproduction of
+//! *"Oscillation-Reduced MXFP4 Training for Vision Transformers"*
+//! (Chen, Xi, Zhu, Chen — ICML 2025).
+//!
+//! Layering:
+//! * **L1 (Pallas, build-time python)** — MXFP4 quantization kernels
+//!   (`python/compile/kernels/`), lowered with `interpret=True`.
+//! * **L2 (JAX, build-time python)** — quantized ViT forward/backward +
+//!   AdamW/EMA/Q-Ramping optimizer step (`python/compile/`), AOT-exported
+//!   to HLO text artifacts.
+//! * **L3 (this crate)** — owns *all* training state between steps, the
+//!   synthetic data pipeline, the Q-Ramping oscillation-detection
+//!   coordinator, metric collection (rate-of-change, quantization
+//!   confidence, oscillation ratio), checkpoints, CLI and the experiment
+//!   harness that regenerates every table and figure of the paper.
+//!
+//! Python never runs on the training path: `make artifacts` lowers the
+//! model once; afterwards the `tetrajet` binary is self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,185 @@
+//! `tetrajet` — leader binary: train / eval / experiment harness CLI.
+//!
+//! The binary is self-contained once `make artifacts` has produced the
+//! AOT HLO artifacts; Python never runs on the training path.
+
+use anyhow::{bail, Result};
+use tetrajet::config::{MetricsCfg, Policy, TrainConfig};
+use tetrajet::coordinator::Trainer;
+use tetrajet::experiments::{self, common::ExpOpts};
+use tetrajet::loginfo;
+use tetrajet::runtime::{artifacts, ModelArtifacts};
+use tetrajet::util::cli::Args;
+
+const USAGE: &str = "\
+tetrajet — Oscillation-Reduced MXFP4 Training (TetraJet, ICML 2025)
+
+subcommands:
+  train          train one configuration
+  eval           evaluate a checkpoint
+  exp <id>       run an experiment harness (table1..table7, fig2..fig6, all)
+  list-variants  print all known method variants
+  help           this text
+
+common options:
+  --artifacts DIR   artifacts root (default: artifacts/, or $TETRAJET_ARTIFACTS)
+  --model NAME      model config (default vit-micro)
+  --batch N         batch size baked into the artifacts (default 16)
+
+train options:
+  --variant NAME    method variant (default tetrajet)
+  --policy NAME     none | qramping | dampen | freeze (default none)
+  --steps N         training steps (default 400)
+  --lr F            base learning rate (default 1e-3)
+  --ema-beta F      Q-EMA momentum (default 0.998)
+  --dampen-lambda F Dampen strength (default 1e-4, with --policy dampen)
+  --k1 F --k2 F     Q-Ramping coefficients (defaults 16, 5)
+  --eval-every N    evaluate every N steps (default 0 = end only)
+  --eval-samples N  validation samples (default 512)
+  --seed N          init seed (default 0)
+  --ckpt-out PATH   save final checkpoint
+  --metrics LEVEL   off | standard | full (default off)
+
+eval options:
+  --variant NAME    method variant artifact to evaluate with
+  --ckpt PATH       checkpoint produced by train --ckpt-out
+
+exp options:
+  --quick           reduced steps/eval for smoke runs
+  --steps N         override steps per run
+  --results DIR     results output dir (default results/)
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_policy(args: &Args) -> Result<Policy> {
+    Ok(match args.get_or("policy", "none") {
+        "none" => Policy::None,
+        "qramping" => {
+            let mut p = Policy::qramping_default();
+            if let Policy::QRamping { k1, k2, .. } = &mut p {
+                *k1 = args.get_f32("k1", *k1)?;
+                *k2 = args.get_f32("k2", *k2)?;
+            }
+            p
+        }
+        "dampen" => Policy::Dampen { lambda: args.get_f32("dampen-lambda", 1e-4)? },
+        "freeze" => Policy::freeze_default(),
+        other => bail!("unknown policy {other:?}"),
+    })
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "list-variants" => {
+            for v in tetrajet::config::all_variants() {
+                println!("{v}");
+            }
+            Ok(())
+        }
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "exp" => cmd_exp(&args),
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn base_paths(args: &Args) -> (std::path::PathBuf, String, usize) {
+    let root = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(artifacts::default_root);
+    let model = args.get_or("model", "vit-micro").to_string();
+    let batch = args.get_usize("batch", 16).unwrap_or(16);
+    (root, model, batch)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (root, model, batch) = base_paths(args);
+    let variant = args.get_or("variant", "tetrajet").to_string();
+    let client = tetrajet::runtime::cpu_client()?;
+    loginfo!("loading artifacts {model}/b{batch}/{variant}");
+    let arts = ModelArtifacts::load(&client, &root, &model, batch, &variant)?;
+
+    let mut cfg = TrainConfig::default_run(&variant);
+    cfg.model = model.clone();
+    cfg.batch = batch;
+    cfg.steps = args.get_usize("steps", cfg.steps)?;
+    cfg.warmup = (cfg.steps / 10).max(1);
+    cfg.base_lr = args.get_f32("lr", cfg.base_lr)?;
+    cfg.ema_beta = args.get_f32("ema-beta", cfg.ema_beta)?;
+    cfg.eval_every = args.get_usize("eval-every", 0)?;
+    cfg.eval_samples = args.get_usize("eval-samples", cfg.eval_samples)?;
+    cfg.init_seed = args.get_usize("seed", 0)? as i32;
+    cfg.policy = parse_policy(args)?;
+    cfg.metrics = match args.get_or("metrics", "off") {
+        "off" => MetricsCfg::off(),
+        "standard" => MetricsCfg::standard(),
+        "full" => MetricsCfg::full(),
+        other => bail!("unknown metrics level {other:?}"),
+    };
+    loginfo!("config: {}", cfg.to_json().to_string());
+
+    let params = artifacts::run_init(&client, &root, &model, cfg.init_seed)?;
+    let ckpt_out = args.get("ckpt-out").map(std::path::PathBuf::from);
+    let mut tr = Trainer::new(&arts, cfg, params)?;
+    let ev = tr.run()?;
+    println!(
+        "final: top-1 {:.2}%  val-loss {:.4}  ({} samples)",
+        ev.acc_pct, ev.mean_loss, ev.samples
+    );
+    if let Some(p) = ckpt_out {
+        tr.state.save(&p)?;
+        loginfo!("checkpoint saved to {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let (root, model, batch) = base_paths(args);
+    let variant = args.get_or("variant", "tetrajet").to_string();
+    let Some(ckpt) = args.get("ckpt") else { bail!("--ckpt required") };
+    let client = tetrajet::runtime::cpu_client()?;
+    let arts = ModelArtifacts::load(&client, &root, &model, batch, &variant)?;
+    let state = tetrajet::coordinator::TrainState::load(std::path::Path::new(ckpt))?;
+    let mut cfg = TrainConfig::default_run(&variant);
+    cfg.model = model;
+    cfg.batch = batch;
+    cfg.eval_samples = args.get_usize("eval-samples", 512)?;
+    let mut tr = Trainer::new(&arts, cfg, state.params.clone())?;
+    tr.state = state;
+    let ev = tr.eval()?;
+    println!(
+        "eval: top-1 {:.2}%  val-loss {:.4}  ({} samples, step {})",
+        ev.acc_pct, ev.mean_loss, ev.samples, tr.state.step
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let Some(id) = args.positional.first() else {
+        bail!("usage: tetrajet exp <table1..table7|fig2..fig6|all> [--quick]")
+    };
+    let mut opts = ExpOpts::new(args.has_flag("quick"));
+    let (root, model, batch) = base_paths(args);
+    opts.root = root;
+    opts.model = model;
+    opts.batch = batch;
+    opts.steps = args.get_usize("steps", opts.steps)?;
+    opts.eval_samples = args.get_usize("eval-samples", opts.eval_samples)?;
+    if let Some(r) = args.get("results") {
+        opts.results = std::path::PathBuf::from(r);
+    }
+    experiments::run(id, &opts)
+}

@@ -1,0 +1,121 @@
+//! Latent weights + quantization confidence (paper §4.2 / App. A.2).
+//!
+//!   QuantConf(w) = min_i |latent − thrd_i| / MaxDist(latent's level)
+//!
+//! latent = w / S with S the element's shared group scale. Confidence
+//! near 0 means the latent sits on a decision threshold (prone to
+//! oscillate); confidence 1 means it sits as far from any threshold as
+//! its level allows.
+
+use crate::quant::formats::{exp2i, scale_exponent, Fp4Format, Scaling};
+use crate::quant::GROUP;
+
+/// Latent weights w/S (clamped to [Qn, Qp] like the quantizer input)
+/// for a 1x32-grouped matrix. Used for the Fig. 4 latent distribution.
+pub fn latents(
+    w: &[f32],
+    cols: usize,
+    fmt: &Fp4Format,
+    scaling: Scaling,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(w.len());
+    for row in w.chunks_exact(cols) {
+        for g in row.chunks(GROUP) {
+            let max_abs = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let inv = 1.0 / exp2i(scale_exponent(max_abs, fmt, scaling));
+            for &v in g {
+                out.push((v * inv).clamp(fmt.qn(), fmt.qp()));
+            }
+        }
+    }
+}
+
+/// Per-element quantization confidence in [0, 1].
+pub fn quant_confidence(
+    w: &[f32],
+    cols: usize,
+    fmt: &Fp4Format,
+    scaling: Scaling,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(w.len());
+    let nb = fmt.boundaries.len();
+    for row in w.chunks_exact(cols) {
+        for g in row.chunks(GROUP) {
+            let max_abs = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let inv = 1.0 / exp2i(scale_exponent(max_abs, fmt, scaling));
+            for &v in g {
+                let y = (v * inv).clamp(fmt.qn(), fmt.qp());
+                let j = fmt.level_index(y); // level y rounds to
+                // Nearest threshold is one of the level's cell edges.
+                let d = match j {
+                    0 => (y - fmt.boundaries[0]).abs(),
+                    j if j == nb => (y - fmt.boundaries[nb - 1]).abs(),
+                    j => (y - fmt.boundaries[j - 1])
+                        .abs()
+                        .min((y - fmt.boundaries[j]).abs()),
+                };
+                out.push((d / fmt.maxdist[j]).min(1.0));
+            }
+        }
+    }
+}
+
+/// Mean confidence of a matrix (paper's per-matrix aggregate).
+pub fn mean_confidence(w: &[f32], cols: usize, fmt: &Fp4Format, scaling: Scaling) -> f64 {
+    let mut confs = Vec::new();
+    quant_confidence(w, cols, fmt, scaling, &mut confs);
+    crate::util::stats::mean_f32(&confs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::formats::e2m1;
+
+    #[test]
+    fn confidence_zero_on_threshold_one_on_level() {
+        let fmt = e2m1();
+        // Group max 6 -> scale 1 (tf: ceil(log2(6/6)) = 0).
+        let mut w = vec![0.0f32; 32];
+        w[0] = 6.0;
+        w[1] = -0.75; // exactly the -1/-0.5 threshold
+        w[2] = 2.0; // exactly on a level; cell [1.75, 2.5], maxdist 0.375
+        let mut c = Vec::new();
+        quant_confidence(&w, 32, fmt, Scaling::TruncationFree, &mut c);
+        assert_eq!(c[1], 0.0);
+        // 2.0: min dist = 0.25 (to 1.75... wait |2-1.75|=0.25, |2-2.5|=0.5)
+        assert!((c[2] - 0.25 / 0.375).abs() < 1e-6, "got {}", c[2]);
+        // 6.0: dist to threshold 5 is 1 = maxdist -> confidence 1.
+        assert_eq!(c[0], 1.0);
+    }
+
+    #[test]
+    fn latents_are_scaled_and_clamped() {
+        let fmt = e2m1();
+        let mut w = vec![0.0f32; 32];
+        w[0] = 31.0; // tf scale 8
+        w[1] = 4.0;
+        let mut l = Vec::new();
+        latents(&w, 32, fmt, Scaling::TruncationFree, &mut l);
+        assert_eq!(l[0], 31.0 / 8.0);
+        assert_eq!(l[1], 0.5);
+        // floor scaling of the same block truncates to Qp.
+        latents(&w, 32, fmt, Scaling::Floor, &mut l);
+        assert_eq!(l[0], 6.0); // 31/4 = 7.75 clamped to 6
+    }
+
+    #[test]
+    fn confidence_bounded() {
+        let fmt = e2m1();
+        let w: Vec<f32> = (0..256).map(|i| ((i * 31) % 101) as f32 / 17.0 - 3.0).collect();
+        let mut c = Vec::new();
+        quant_confidence(&w, 64, fmt, Scaling::TruncationFree, &mut c);
+        assert!(c.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        let m = mean_confidence(&w, 64, fmt, Scaling::TruncationFree);
+        assert!(m > 0.0 && m < 1.0);
+    }
+}

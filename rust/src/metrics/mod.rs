@@ -1,0 +1,21 @@
+//! Oscillation / instability statistics (paper §4 + Appendix A).
+//!
+//! All metrics are computed by the coordinator in pure Rust over the
+//! state it already owns, using the quant mirror for quantized-weight
+//! trajectories:
+//!
+//! * [`rate::RateTracker`] — rate of change r(X) (App. A.3, Fig. 2,
+//!   Table 3),
+//! * [`oscillation::OscTracker`] — per-element dist_W / dist_Q windows,
+//!   oscillation ratio R_w (App. A.1, §6.1, Fig. 6) and Nagel et al.'s
+//!   flipping frequency f (used by the Freeze baseline),
+//! * [`confidence`] — latent weights and quantization confidence
+//!   (§4.2 / App. A.2, Fig. 4/5).
+
+pub mod confidence;
+pub mod oscillation;
+pub mod rate;
+
+pub use confidence::{latents, quant_confidence};
+pub use oscillation::OscTracker;
+pub use rate::RateTracker;

@@ -1,0 +1,179 @@
+//! Per-element oscillation windows (paper §6.1 / App. A.1).
+//!
+//! Over a window of T0 steps the tracker accumulates, for every weight
+//! element, the master-trajectory length dist_W = Σ|w^t − w^{t−1}| and
+//! the quantized-trajectory length dist_Q = Σ|w_Q^t − w_Q^{t−1}|; the
+//! oscillation ratio is R_w = dist_Q / dist_W. Oscillating elements
+//! have small master moves but frequent grid flips, so R_w ≫ 1.
+//!
+//! The tracker also counts quantized-value flips (Nagel et al. 2022's
+//! flipping frequency f), which drives the Freeze baseline, and keeps a
+//! running average of the master weight (Freeze's pin value).
+
+#[derive(Debug, Clone)]
+pub struct OscTracker {
+    prev_w: Vec<f32>,
+    prev_q: Vec<f32>,
+    dist_w: Vec<f32>,
+    dist_q: Vec<f32>,
+    flips: Vec<u32>,
+    /// Running mean of the master weight over the window (Freeze value).
+    run_avg: Vec<f32>,
+    steps: usize,
+}
+
+impl OscTracker {
+    /// Start a window at snapshot (w0, q0).
+    pub fn new(w0: &[f32], q0: &[f32]) -> OscTracker {
+        assert_eq!(w0.len(), q0.len());
+        OscTracker {
+            prev_w: w0.to_vec(),
+            prev_q: q0.to_vec(),
+            dist_w: vec![0.0; w0.len()],
+            dist_q: vec![0.0; w0.len()],
+            flips: vec![0; w0.len()],
+            run_avg: w0.to_vec(),
+            steps: 0,
+        }
+    }
+
+    /// Feed the post-step snapshot (w^t, w_Q^t).
+    pub fn observe(&mut self, w: &[f32], q: &[f32]) {
+        debug_assert_eq!(w.len(), self.prev_w.len());
+        debug_assert_eq!(q.len(), self.prev_q.len());
+        self.steps += 1;
+        let inv = 1.0 / (self.steps + 1) as f32;
+        for i in 0..w.len() {
+            self.dist_w[i] += (w[i] - self.prev_w[i]).abs();
+            self.dist_q[i] += (q[i] - self.prev_q[i]).abs();
+            if q[i] != self.prev_q[i] {
+                self.flips[i] += 1;
+            }
+            self.run_avg[i] += (w[i] - self.run_avg[i]) * inv;
+            self.prev_w[i] = w[i];
+            self.prev_q[i] = q[i];
+        }
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Oscillation ratio R_w per element. dist_W == 0 with dist_Q > 0
+    /// maps to +inf (treated as "oscillating" by any finite threshold);
+    /// a fully static element maps to 0.
+    pub fn ratios_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(self.dist_w.iter().zip(&self.dist_q).map(|(&dw, &dq)| {
+            if dw > 0.0 {
+                dq / dw
+            } else if dq > 0.0 {
+                f32::INFINITY
+            } else {
+                0.0
+            }
+        }));
+    }
+
+    pub fn ratios(&self) -> Vec<f32> {
+        let mut v = Vec::new();
+        self.ratios_into(&mut v);
+        v
+    }
+
+    /// Count of elements with R_w > threshold (paper uses 16, Fig. 6).
+    pub fn oscillating_count(&self, threshold: f32) -> usize {
+        self.dist_w
+            .iter()
+            .zip(&self.dist_q)
+            .filter(|(&dw, &dq)| {
+                if dw > 0.0 {
+                    dq / dw > threshold
+                } else {
+                    dq > 0.0
+                }
+            })
+            .count()
+    }
+
+    /// Flipping frequency f per element (flips per window step).
+    pub fn flip_freq_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        let n = self.steps.max(1) as f32;
+        out.extend(self.flips.iter().map(|&f| f as f32 / n));
+    }
+
+    /// Running average of the master weight (Freeze pin value).
+    pub fn running_avg(&self) -> &[f32] {
+        &self.run_avg
+    }
+
+    /// Start a new window from the current snapshots.
+    pub fn reset_window(&mut self) {
+        self.dist_w.iter_mut().for_each(|x| *x = 0.0);
+        self.dist_q.iter_mut().for_each(|x| *x = 0.0);
+        self.flips.iter_mut().for_each(|x| *x = 0);
+        self.run_avg.copy_from_slice(&self.prev_w);
+        self.steps = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oscillating_element_gets_large_ratio() {
+        // Element 0 oscillates across a grid flip with tiny master moves;
+        // element 1 walks monotonically with matching quantized moves.
+        let mut t = OscTracker::new(&[-0.751, 0.0], &[-1.0, 0.0]);
+        let w_seq = [[-0.749, 0.1], [-0.751, 0.2], [-0.749, 0.3], [-0.751, 0.4]];
+        let q_seq = [[-0.5, 0.0], [-1.0, 0.0], [-0.5, 0.5], [-1.0, 0.5]];
+        for (w, q) in w_seq.iter().zip(&q_seq) {
+            t.observe(w, q);
+        }
+        let r = t.ratios();
+        assert!(r[0] > 16.0, "oscillating ratio {}", r[0]);
+        assert!(r[1] < 16.0, "walking ratio {}", r[1]);
+        assert_eq!(t.oscillating_count(16.0), 1);
+    }
+
+    #[test]
+    fn flip_frequency_counts_changes() {
+        let mut t = OscTracker::new(&[0.0], &[0.0]);
+        for (w, q) in [(0.1, 0.5), (0.1, 0.0), (0.1, 0.0), (0.1, 0.5)] {
+            t.observe(&[w], &[q]);
+        }
+        let mut f = Vec::new();
+        t.flip_freq_into(&mut f);
+        assert!((f[0] - 3.0 / 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn static_element_ratio_zero_and_inf_case() {
+        let mut t = OscTracker::new(&[1.0, 1.0], &[1.0, 1.0]);
+        // Element 0 fully static; element 1: q flips while w frozen.
+        t.observe(&[1.0, 1.0], &[1.0, 0.5]);
+        let r = t.ratios();
+        assert_eq!(r[0], 0.0);
+        assert!(r[1].is_infinite());
+        assert_eq!(t.oscillating_count(1e6), 1);
+    }
+
+    #[test]
+    fn running_avg_tracks_mean() {
+        let mut t = OscTracker::new(&[0.0], &[0.0]);
+        t.observe(&[1.0], &[1.0]);
+        t.observe(&[2.0], &[2.0]);
+        assert!((t.running_avg()[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reset_window_clears_accumulators() {
+        let mut t = OscTracker::new(&[0.0], &[0.0]);
+        t.observe(&[1.0], &[0.5]);
+        t.reset_window();
+        assert_eq!(t.steps(), 0);
+        assert_eq!(t.ratios()[0], 0.0);
+    }
+}

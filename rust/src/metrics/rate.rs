@@ -1,0 +1,110 @@
+//! Rate of change r(X) (paper App. A.3):
+//!
+//!   r(X) = (1/T0) * sum_t ||X^t - X^{t-1}||_F / ||X^{t-1}||_F
+//!
+//! Streaming: the tracker keeps the previous snapshot and accumulates
+//! the per-step normalized deltas over a window.
+
+#[derive(Debug, Clone)]
+pub struct RateTracker {
+    prev: Option<Vec<f32>>,
+    sum: f64,
+    n: usize,
+}
+
+impl RateTracker {
+    pub fn new() -> RateTracker {
+        RateTracker { prev: None, sum: 0.0, n: 0 }
+    }
+
+    /// Feed the next snapshot X^t.
+    pub fn observe(&mut self, x: &[f32]) {
+        if let Some(prev) = &self.prev {
+            debug_assert_eq!(prev.len(), x.len());
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for (&a, &b) in x.iter().zip(prev.iter()) {
+                let d = (a - b) as f64;
+                num += d * d;
+                den += (b as f64) * (b as f64);
+            }
+            if den > 0.0 {
+                self.sum += (num / den).sqrt();
+                self.n += 1;
+            }
+            // Reuse the buffer.
+            let prev = self.prev.as_mut().unwrap();
+            prev.copy_from_slice(x);
+        } else {
+            self.prev = Some(x.to_vec());
+        }
+    }
+
+    /// Mean rate over the current window (0 if fewer than 2 snapshots).
+    pub fn rate(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn steps(&self) -> usize {
+        self.n
+    }
+
+    /// Start a new window; the last snapshot is kept as the new base.
+    pub fn reset_window(&mut self) {
+        self.sum = 0.0;
+        self.n = 0;
+    }
+}
+
+impl Default for RateTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_sequence_has_zero_rate() {
+        let mut t = RateTracker::new();
+        for _ in 0..5 {
+            t.observe(&[1.0, 2.0, 3.0]);
+        }
+        assert_eq!(t.rate(), 0.0);
+        assert_eq!(t.steps(), 4);
+    }
+
+    #[test]
+    fn known_rate() {
+        let mut t = RateTracker::new();
+        t.observe(&[3.0, 4.0]); // norm 5
+        t.observe(&[3.0, 4.0 + 5.0]); // delta norm 5 -> rate 1
+        assert!((t.rate() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_reset_keeps_base() {
+        let mut t = RateTracker::new();
+        t.observe(&[1.0, 0.0]);
+        t.observe(&[2.0, 0.0]); // rate 1
+        t.reset_window();
+        assert_eq!(t.rate(), 0.0);
+        t.observe(&[4.0, 0.0]); // |4-2|/2 = 1
+        assert!((t.rate() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_base_is_skipped() {
+        let mut t = RateTracker::new();
+        t.observe(&[0.0, 0.0]);
+        t.observe(&[1.0, 1.0]);
+        assert_eq!(t.steps(), 0);
+        assert_eq!(t.rate(), 0.0);
+    }
+}

@@ -1,0 +1,281 @@
+//! FP4 format tables + exact binary helpers (mirror of formats.py).
+
+use std::sync::OnceLock;
+
+/// MX group size (1x32 / 32x1).
+pub const GROUP: usize = 32;
+
+pub const SCALE_EXP_MIN: i32 = -127;
+pub const SCALE_EXP_MAX: i32 = 127;
+
+/// Epsilon substituted for an all-zero group's max (paper §3.2).
+pub const ZERO_GROUP_EPS: f32 = 1e-8;
+
+/// Shared-scale computation rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scaling {
+    /// TetraJet truncation-free: s = ceil(log2(M / Qp)).
+    TruncationFree,
+    /// Microscaling: s = floor(log2(M)) - Emax (values may truncate).
+    Floor,
+}
+
+impl Scaling {
+    pub fn parse(s: &str) -> Option<Scaling> {
+        match s {
+            "tf" => Some(Scaling::TruncationFree),
+            "floor" => Some(Scaling::Floor),
+            _ => None,
+        }
+    }
+}
+
+/// One FP4 format: full representable grid plus closed-form parameters.
+#[derive(Debug, Clone)]
+pub struct Fp4Format {
+    pub name: &'static str,
+    pub levels: Vec<f32>,
+    pub boundaries: Vec<f32>,
+    /// MaxDist(level): max possible distance to the nearest threshold
+    /// among latents quantizing to this level (paper §4.2).
+    pub maxdist: Vec<f32>,
+    pub emax: i32,
+    pub mbits: i32,
+    pub delta_min: f32,
+}
+
+impl Fp4Format {
+    fn new(name: &'static str, pos: &[f32], emax: i32, mbits: i32, delta_min: f32) -> Fp4Format {
+        let mut levels: Vec<f32> = pos.iter().rev().map(|v| -v).collect();
+        levels.push(0.0);
+        levels.extend_from_slice(pos);
+        let boundaries: Vec<f32> = levels
+            .windows(2)
+            .map(|w| (w[0] + w[1]) / 2.0)
+            .collect();
+        let n = levels.len();
+        let mut maxdist = vec![0.0f32; n];
+        for j in 0..n {
+            maxdist[j] = if j == 0 {
+                (levels[0] - boundaries[0]).abs()
+            } else if j == n - 1 {
+                (levels[n - 1] - boundaries[n - 2]).abs()
+            } else {
+                (boundaries[j] - boundaries[j - 1]) / 2.0
+            };
+        }
+        Fp4Format { name, levels, boundaries, maxdist, emax, mbits, delta_min }
+    }
+
+    #[inline]
+    pub fn qp(&self) -> f32 {
+        *self.levels.last().unwrap()
+    }
+
+    #[inline]
+    pub fn qn(&self) -> f32 {
+        self.levels[0]
+    }
+
+    /// Index of the level a latent deterministically rounds to.
+    pub fn level_index(&self, y: f32) -> usize {
+        self.boundaries.iter().filter(|&&b| y >= b).count()
+    }
+}
+
+/// E2M1: positives 0.5, 1, 1.5, 2, 3, 4, 6 (Qp = 6).
+pub fn e2m1() -> &'static Fp4Format {
+    static F: OnceLock<Fp4Format> = OnceLock::new();
+    F.get_or_init(|| Fp4Format::new("e2m1", &[0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], 2, 1, 0.5))
+}
+
+/// E3M0: positives 0.25 .. 16 (powers of two; Qp = 16).
+pub fn e3m0() -> &'static Fp4Format {
+    static F: OnceLock<Fp4Format> = OnceLock::new();
+    F.get_or_init(|| Fp4Format::new("e3m0", &[0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0], 4, 0, 0.25))
+}
+
+pub fn fp4_format(name: &str) -> Option<&'static Fp4Format> {
+    match name {
+        "e2m1" => Some(e2m1()),
+        "e3m0" => Some(e3m0()),
+        _ => None,
+    }
+}
+
+/// frexp: x = m * 2^e with m in [0.5, 1) for finite x > 0. Exact (bit
+/// manipulation), matching XLA's decomposition of jnp.frexp.
+#[inline]
+pub fn frexp(x: f32) -> (f32, i32) {
+    if x == 0.0 {
+        return (0.0, 0);
+    }
+    let bits = x.to_bits();
+    let exp = ((bits >> 23) & 0xff) as i32;
+    if exp == 0 {
+        // Subnormal: renormalize by an exact power of two.
+        let (m, e) = frexp(x * f32::from_bits(((64 + 127) as u32) << 23));
+        return (m, e - 64);
+    }
+    let m = f32::from_bits((bits & 0x807f_ffff) | (126 << 23));
+    (m, exp - 126)
+}
+
+/// Exact 2^s for s in [-149, 127].
+#[inline]
+pub fn exp2i(s: i32) -> f32 {
+    debug_assert!((-149..=127).contains(&s));
+    if s >= -126 {
+        f32::from_bits(((s + 127) as u32) << 23)
+    } else {
+        // Subnormal result.
+        f32::from_bits(1u32 << (s + 149) as u32)
+    }
+}
+
+/// Shared-scale exponent for a group with max-abs `max_abs` (mirror of
+/// ref.scale_exponent).
+#[inline]
+pub fn scale_exponent(max_abs: f32, fmt: &Fp4Format, scaling: Scaling) -> i32 {
+    let m_t = if max_abs == 0.0 { ZERO_GROUP_EPS } else { max_abs };
+    let s = match scaling {
+        Scaling::TruncationFree => {
+            let (m, e) = frexp(m_t / fmt.qp());
+            if m == 0.5 {
+                e - 1
+            } else {
+                e
+            }
+        }
+        Scaling::Floor => {
+            let (_, e) = frexp(m_t);
+            (e - 1) - fmt.emax
+        }
+    };
+    s.clamp(SCALE_EXP_MIN, SCALE_EXP_MAX)
+}
+
+/// Grid spacing at magnitude `a` (closed form; see kernels/mxfp4.py).
+#[inline]
+pub fn grid_spacing_mag(a: f32, fmt: &Fp4Format) -> f32 {
+    let (_, e) = frexp(a);
+    let delta = exp2i((e - 1 - fmt.mbits).clamp(-149, 127));
+    delta.max(fmt.delta_min)
+}
+
+/// Deterministic round-to-nearest on the grid, ties toward +inf.
+#[inline]
+pub fn round_det(y: f32, fmt: &Fp4Format) -> f32 {
+    let delta = grid_spacing_mag(y.abs(), fmt);
+    (y / delta + 0.5).floor() * delta
+}
+
+/// Gap between a grid `level` and the next level above it.
+#[inline]
+pub fn spacing_above(level: f32, fmt: &Fp4Format) -> f32 {
+    let a = level.abs();
+    if a == 0.0 {
+        return fmt.delta_min;
+    }
+    let (m, e) = frexp(a);
+    let mut delta = exp2i((e - 1 - fmt.mbits).clamp(-149, 127));
+    if level < 0.0 && m == 0.5 {
+        delta *= 0.5;
+    }
+    delta.max(fmt.delta_min)
+}
+
+/// Bracketing grid values (q1, q2) with q1 <= y <= q2; q1 clamped to the
+/// second-highest level so q2 never exceeds Qp (table-oracle semantics).
+#[inline]
+pub fn bracket(y: f32, fmt: &Fp4Format) -> (f32, f32) {
+    let a = y.abs();
+    let delta = grid_spacing_mag(a, fmt);
+    let q1 = if y >= 0.0 {
+        (a / delta).floor() * delta
+    } else {
+        -((a / delta).ceil() * delta)
+    };
+    let q1 = q1.min(fmt.levels[fmt.levels.len() - 2]);
+    (q1, q1 + spacing_above(q1, fmt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frexp_matches_definition() {
+        for &x in &[1.0f32, 0.5, 2.0, 3.7, 6.0, 1e-8, 1e30, 1.5e-42] {
+            let (m, e) = frexp(x);
+            assert!((0.5..1.0).contains(&m), "m={m} for x={x}");
+            assert_eq!(m * exp2i(e.clamp(-149, 127)), x, "x={x}");
+        }
+        assert_eq!(frexp(0.0), (0.0, 0));
+    }
+
+    #[test]
+    fn exp2i_exact() {
+        assert_eq!(exp2i(0), 1.0);
+        assert_eq!(exp2i(3), 8.0);
+        assert_eq!(exp2i(-3), 0.125);
+        assert_eq!(exp2i(-127), f32::from_bits(1 << 22));
+        assert_eq!(exp2i(127), 2.0f32.powi(127));
+    }
+
+    #[test]
+    fn paper_scaling_example() {
+        // Paper §3.2: M = 31 -> truncation-free S = 8, floor S = 4.
+        assert_eq!(scale_exponent(31.0, e2m1(), Scaling::TruncationFree), 3);
+        assert_eq!(scale_exponent(31.0, e2m1(), Scaling::Floor), 2);
+    }
+
+    #[test]
+    fn zero_group_uses_eps() {
+        let s = scale_exponent(0.0, e2m1(), Scaling::TruncationFree);
+        assert!(s < -20, "eps scale, got {s}");
+    }
+
+    #[test]
+    fn round_det_against_table() {
+        for fmt in [e2m1(), e3m0()] {
+            let n = 40013;
+            for i in 0..n {
+                let y = fmt.qn() + (fmt.qp() - fmt.qn()) * (i as f32 / (n - 1) as f32);
+                // Table oracle: boundaries count, ties toward larger.
+                let idx = fmt.level_index(y);
+                let want = fmt.levels[idx];
+                assert_eq!(round_det(y, fmt), want, "y={y} fmt={}", fmt.name);
+            }
+        }
+    }
+
+    #[test]
+    fn bracket_against_table() {
+        for fmt in [e2m1(), e3m0()] {
+            let mut ys: Vec<f32> = (0..40013)
+                .map(|i| fmt.qn() + (fmt.qp() - fmt.qn()) * (i as f32 / 40012.0))
+                .collect();
+            ys.extend_from_slice(&fmt.levels);
+            ys.extend_from_slice(&fmt.boundaries);
+            for &y in &ys {
+                let i = (fmt.levels.iter().filter(|&&l| y >= l).count() as i64 - 1)
+                    .clamp(0, fmt.levels.len() as i64 - 2) as usize;
+                let (w1, w2) = (fmt.levels[i], fmt.levels[i + 1]);
+                let (q1, q2) = bracket(y, fmt);
+                assert_eq!((q1, q2), (w1, w2), "y={y} fmt={}", fmt.name);
+            }
+        }
+    }
+
+    #[test]
+    fn maxdist_tables() {
+        let f = e2m1();
+        // level 6 (last): distance to threshold 5 is 1.
+        assert_eq!(f.maxdist[f.levels.len() - 1], 1.0);
+        // level 0: thresholds ±0.25 -> maxdist 0.25.
+        assert_eq!(f.maxdist[7], 0.25);
+        let g = e3m0();
+        assert_eq!(g.maxdist[g.levels.len() - 1], 4.0);
+    }
+}

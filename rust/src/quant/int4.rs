@@ -1,0 +1,67 @@
+//! Per-tensor symmetric INT4 fake quantization (baseline; ref.int4_quantize_ref).
+
+pub const INT4_QMAX: f32 = 7.0;
+
+/// Deterministic (u = None) or stochastic INT4 fake quantization.
+pub fn int4_quantize(x: &[f32], u: Option<&[f32]>) -> Vec<f32> {
+    let m = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scale = if m == 0.0 { 1.0 } else { m / INT4_QMAX };
+    let inv = 1.0 / scale;
+    match u {
+        None => x
+            .iter()
+            .map(|&v| {
+                let y = v * inv;
+                // round half away from zero (ref: sign(y)*floor(|y|+0.5))
+                let q = (y.abs() + 0.5).floor().copysign(y);
+                q.clamp(-INT4_QMAX, INT4_QMAX) * scale
+            })
+            .collect(),
+        Some(u) => {
+            assert_eq!(u.len(), x.len());
+            x.iter()
+                .zip(u)
+                .map(|(&v, &uu)| {
+                    let y = v * inv;
+                    let lo = y.floor();
+                    let q = if (y - lo) > uu { lo + 1.0 } else { lo };
+                    q.clamp(-INT4_QMAX, INT4_QMAX) * scale
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn det_round_half_away_from_zero() {
+        // max 7 -> scale 1: values round on the integer grid.
+        let x = vec![7.0, 3.5, -3.5, 2.4, -2.4, 0.0, 6.9];
+        let q = int4_quantize(&x, None);
+        assert_eq!(q, vec![7.0, 4.0, -4.0, 2.0, -2.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn scale_from_tensor_max() {
+        let x = vec![14.0, 7.0, -14.0, 3.0];
+        let q = int4_quantize(&x, None);
+        // scale = 2
+        assert_eq!(q, vec![14.0, 8.0, -14.0, 4.0]);
+    }
+
+    #[test]
+    fn zero_tensor() {
+        assert_eq!(int4_quantize(&[0.0, 0.0], None), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn stochastic_brackets() {
+        let x = vec![7.0, 2.5, 2.5];
+        let q = int4_quantize(&x, Some(&[0.5, 0.9, 0.1]));
+        // 2.5: frac 0.5 > 0.9? no -> 2; > 0.1? yes -> 3.
+        assert_eq!(q, vec![7.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,25 @@
+//! Bit-exact pure-Rust mirror of the L1/L2 quantizers.
+//!
+//! The coordinator needs the quantized-weight trajectory every step
+//! (oscillation ratio R_w, quantization confidence, rate-of-change,
+//! flipping frequency) without bouncing through XLA. This module
+//! re-implements the exact numerics of `python/compile/kernels/ref.py`
+//! — same frexp-based scale exponents, same closed-form grid rounding —
+//! and is golden-tested against vectors exported by `aot.py`
+//! (`artifacts/golden/quant_vectors.json`, rust/tests/golden_quant.rs).
+
+pub mod formats;
+pub mod int4;
+pub mod mx;
+pub mod qema;
+
+pub use formats::{
+    bracket, e2m1, e3m0, fp4_format, round_det, scale_exponent, Fp4Format,
+    Scaling, GROUP,
+};
+pub use int4::int4_quantize;
+pub use mx::{
+    group_scales, mx_quantize_cols, mx_quantize_cols_into,
+    mx_quantize_stoch_cols,
+};
+pub use qema::{qema_quantize_cols, qema_quantize_cols_into};

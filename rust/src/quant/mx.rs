@@ -1,0 +1,179 @@
+//! MXFP4 fake-quantization over row-major matrices (mirror of ref.py).
+//!
+//! `*_cols` quantizes with 1x32 groups along the last (contiguous) axis
+//! — the layout of Q^(2) over a (C, D) weight matrix, which is what all
+//! coordinator-side metrics track. Ragged tails (cols % 32 != 0) are
+//! handled as partial groups, equivalent to the zero-padding the L2
+//! wrapper applies.
+
+use super::formats::{
+    bracket, exp2i, round_det, scale_exponent, Fp4Format, Scaling, GROUP,
+};
+
+/// Deterministic MXFP4 fake-quantization, allocating variant.
+pub fn mx_quantize_cols(
+    x: &[f32],
+    cols: usize,
+    fmt: &Fp4Format,
+    scaling: Scaling,
+) -> Vec<f32> {
+    let mut out = vec![0.0; x.len()];
+    mx_quantize_cols_into(x, cols, fmt, scaling, &mut out);
+    out
+}
+
+/// Deterministic MXFP4 fake-quantization into a caller-owned buffer
+/// (no allocation on the per-step metric path).
+pub fn mx_quantize_cols_into(
+    x: &[f32],
+    cols: usize,
+    fmt: &Fp4Format,
+    scaling: Scaling,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len() % cols.max(1), 0);
+    assert_eq!(out.len(), x.len());
+    for (row, orow) in x.chunks_exact(cols).zip(out.chunks_exact_mut(cols)) {
+        for (g, og) in row.chunks(GROUP).zip(orow.chunks_mut(GROUP)) {
+            let max_abs = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let s = scale_exponent(max_abs, fmt, scaling);
+            let scale = exp2i(s);
+            let inv = 1.0 / scale;
+            for (&v, o) in g.iter().zip(og.iter_mut()) {
+                let y = (v * inv).clamp(fmt.qn(), fmt.qp());
+                *o = round_det(y, fmt) * scale;
+            }
+        }
+    }
+}
+
+/// Stochastic MXFP4 fake-quantization with explicit uniforms (used by
+/// the golden tests; the training path's stochastic rounding runs in
+/// the AOT HLO, not here).
+pub fn mx_quantize_stoch_cols(
+    x: &[f32],
+    u: &[f32],
+    cols: usize,
+    fmt: &Fp4Format,
+    scaling: Scaling,
+) -> Vec<f32> {
+    assert_eq!(x.len(), u.len());
+    let mut out = vec![0.0; x.len()];
+    for r in 0..x.len() / cols {
+        let row = &x[r * cols..(r + 1) * cols];
+        let urow = &u[r * cols..(r + 1) * cols];
+        for g0 in (0..cols).step_by(GROUP) {
+            let g1 = (g0 + GROUP).min(cols);
+            let max_abs = row[g0..g1].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let s = scale_exponent(max_abs, fmt, scaling);
+            let scale = exp2i(s);
+            let inv = 1.0 / scale;
+            for i in g0..g1 {
+                let y = (row[i] * inv).clamp(fmt.qn(), fmt.qp());
+                let (q1, q2) = bracket(y, fmt);
+                let q = if (y - q1) > urow[i] * (q2 - q1) { q2 } else { q1 };
+                out[r * cols + i] = q * scale;
+            }
+        }
+    }
+    out
+}
+
+/// Per-group scale exponents for a 1x32-grouped matrix; used by the
+/// metric code to derive latent weights (w / S).
+pub fn group_scales(
+    x: &[f32],
+    cols: usize,
+    fmt: &Fp4Format,
+    scaling: Scaling,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    for row in x.chunks_exact(cols) {
+        for g in row.chunks(GROUP) {
+            let max_abs = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            out.push(exp2i(scale_exponent(max_abs, fmt, scaling)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::formats::{e2m1, e3m0};
+
+    #[test]
+    fn values_land_on_scaled_grid() {
+        let fmt = e2m1();
+        let x: Vec<f32> = (0..128).map(|i| ((i * 37) % 61) as f32 / 7.0 - 4.0).collect();
+        let q = mx_quantize_cols(&x, 64, fmt, Scaling::TruncationFree);
+        for (g, qg) in x.chunks(GROUP).zip(q.chunks(GROUP)) {
+            let max_abs = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let s = exp2i(scale_exponent(max_abs, fmt, Scaling::TruncationFree));
+            for &v in qg {
+                let latent = v / s;
+                assert!(
+                    fmt.levels.iter().any(|&l| l == latent),
+                    "latent {latent} not on grid"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_free_never_truncates() {
+        // The paper's M=31 example: floor scaling truncates to 24,
+        // truncation-free represents 31 as 32.
+        let mut x = vec![0.0f32; 32];
+        x[0] = 31.0;
+        let q = mx_quantize_cols(&x, 32, e2m1(), Scaling::TruncationFree);
+        assert_eq!(q[0], 32.0);
+        let q = mx_quantize_cols(&x, 32, e2m1(), Scaling::Floor);
+        assert_eq!(q[0], 24.0);
+    }
+
+    #[test]
+    fn idempotent() {
+        let x: Vec<f32> = (0..256).map(|i| ((i * 97) % 89) as f32 / 11.0 - 4.0).collect();
+        for fmt in [e2m1(), e3m0()] {
+            let q = mx_quantize_cols(&x, 64, fmt, Scaling::TruncationFree);
+            let q2 = mx_quantize_cols(&q, 64, fmt, Scaling::TruncationFree);
+            assert_eq!(q, q2, "fmt {}", fmt.name);
+        }
+    }
+
+    #[test]
+    fn stochastic_matches_det_at_grid_points() {
+        let fmt = e2m1();
+        let x: Vec<f32> = vec![1.0, -0.5, 6.0, 0.0, 2.0, -6.0, 4.0, 3.0]
+            .into_iter()
+            .cycle()
+            .take(32)
+            .collect();
+        let u = vec![0.7f32; 32];
+        let qd = mx_quantize_cols(&x, 32, fmt, Scaling::TruncationFree);
+        let qs = mx_quantize_stoch_cols(&x, &u, 32, fmt, Scaling::TruncationFree);
+        assert_eq!(qd, qs); // exact grid points don't move
+        assert_eq!(qd, x);
+    }
+
+    #[test]
+    fn partial_group_equals_zero_padding() {
+        let fmt = e2m1();
+        let x: Vec<f32> = (0..48).map(|i| (i as f32 - 24.0) / 5.0).collect();
+        let q = mx_quantize_cols(&x, 48, fmt, Scaling::TruncationFree);
+        let mut padded = x.clone();
+        padded.resize(64, 0.0);
+        let qp = mx_quantize_cols(&padded, 64, fmt, Scaling::TruncationFree);
+        assert_eq!(&q[..48], &qp[..48]);
+    }
+
+    #[test]
+    fn into_variant_matches() {
+        let x: Vec<f32> = (0..96).map(|i| (i as f32).sin() * 3.0).collect();
+        let a = mx_quantize_cols(&x, 32, e2m1(), Scaling::Floor);
+        let mut b = vec![0.0; 96];
+        mx_quantize_cols_into(&x, 32, e2m1(), Scaling::Floor, &mut b);
+        assert_eq!(a, b);
+    }
+}

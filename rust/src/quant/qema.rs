@@ -1,0 +1,106 @@
+//! Q-EMA quantizer mirror (paper §5 / Alg. 1; ref.qema_quantize_ref).
+//!
+//! Scale and bracketing candidates [q1, q2] from the *current* weight
+//! block; the choice between them from the EMA latent weight. Used by
+//! the coordinator to track the forward quantized weights of the
+//! `tetrajet_qema` variant.
+
+use super::formats::{bracket, exp2i, scale_exponent, Fp4Format, Scaling, GROUP};
+
+pub fn qema_quantize_cols(
+    w: &[f32],
+    ema: &[f32],
+    cols: usize,
+    fmt: &Fp4Format,
+    scaling: Scaling,
+) -> Vec<f32> {
+    let mut out = vec![0.0; w.len()];
+    qema_quantize_cols_into(w, ema, cols, fmt, scaling, &mut out);
+    out
+}
+
+pub fn qema_quantize_cols_into(
+    w: &[f32],
+    ema: &[f32],
+    cols: usize,
+    fmt: &Fp4Format,
+    scaling: Scaling,
+    out: &mut [f32],
+) {
+    assert_eq!(w.len(), ema.len());
+    assert_eq!(w.len(), out.len());
+    assert_eq!(w.len() % cols.max(1), 0);
+    for r in 0..w.len() / cols {
+        let row = &w[r * cols..(r + 1) * cols];
+        let erow = &ema[r * cols..(r + 1) * cols];
+        let orow = &mut out[r * cols..(r + 1) * cols];
+        for g0 in (0..cols).step_by(GROUP) {
+            let g1 = (g0 + GROUP).min(cols);
+            let max_abs = row[g0..g1].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let scale = exp2i(scale_exponent(max_abs, fmt, scaling));
+            let inv = 1.0 / scale;
+            for i in g0..g1 {
+                let y = (row[i] * inv).clamp(fmt.qn(), fmt.qp());
+                let ye = erow[i] * inv;
+                let (q1, q2) = bracket(y, fmt);
+                // Strictly-nearer to EMA -> q1; ties -> q2 (matches ref).
+                let q = if (ye - q1).abs() < (ye - q2).abs() { q1 } else { q2 };
+                orow[i] = q * scale;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::formats::e2m1;
+    use crate::quant::mx::mx_quantize_cols;
+
+    #[test]
+    fn ema_breaks_the_tie_toward_history() {
+        let fmt = e2m1();
+        // Latent weight just above a threshold; EMA far below it.
+        // Group max 6 -> scale 1. Element 0.76 brackets (0.5, 1.0);
+        // plain det rounds to 1.0, EMA at 0.3 pulls it to 0.5.
+        let mut w = vec![0.0f32; 32];
+        w[0] = 6.0;
+        w[1] = 0.76;
+        let mut ema = w.clone();
+        ema[1] = 0.3;
+        let q = qema_quantize_cols(&w, &ema, 32, fmt, Scaling::TruncationFree);
+        assert_eq!(q[1], 0.5);
+        let qd = mx_quantize_cols(&w, 32, fmt, Scaling::TruncationFree);
+        assert_eq!(qd[1], 1.0);
+    }
+
+    #[test]
+    fn ema_equal_to_weight_matches_det_rounding_off_threshold() {
+        // When EMA == W and W is not exactly at a threshold, Q-EMA picks
+        // the same nearest value as deterministic rounding.
+        let fmt = e2m1();
+        let w: Vec<f32> = (0..64)
+            .map(|i| ((i * 31) % 23) as f32 / 4.0 - 2.5)
+            // keep off thresholds
+            .map(|v| if (v * 4.0).fract() == 0.0 { v + 0.01 } else { v })
+            .collect();
+        let q = qema_quantize_cols(&w, &w, 32, fmt, Scaling::TruncationFree);
+        let qd = mx_quantize_cols(&w, 32, fmt, Scaling::TruncationFree);
+        for i in 0..w.len() {
+            let latent_is_midpoint = false; // construction avoids midpoints
+            if !latent_is_midpoint {
+                assert_eq!(q[i], qd[i], "i={i} w={}", w[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn output_stays_on_scaled_grid() {
+        let fmt = e2m1();
+        let w: Vec<f32> = (0..96).map(|i| ((i * 13) % 41) as f32 / 6.0 - 3.0).collect();
+        let ema: Vec<f32> = w.iter().map(|v| v * 0.9).collect();
+        let q = qema_quantize_cols(&w, &ema, 32, fmt, Scaling::TruncationFree);
+        let q2 = mx_quantize_cols(&q, 32, fmt, Scaling::TruncationFree);
+        assert_eq!(q, q2);
+    }
+}

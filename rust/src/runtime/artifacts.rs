@@ -1,0 +1,108 @@
+//! Artifact discovery + loading: one `ModelArtifacts` per (model,
+//! batch, variant) directory produced by `make artifacts`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use xla::PjRtClient;
+
+use super::exec::{Arg, StepFn};
+use super::manifest::Manifest;
+use crate::util::json::Json;
+
+/// Root layout helper: artifacts/<model>/b<batch>/<variant>/...
+pub fn variant_dir(root: &Path, model: &str, batch: usize, variant: &str) -> PathBuf {
+    root.join(model).join(format!("b{batch}")).join(variant)
+}
+
+/// All compiled entry points of one variant.
+pub struct ModelArtifacts {
+    pub manifest: Manifest,
+    pub train_step: StepFn,
+    pub eval_step: StepFn,
+    pub probe: StepFn,
+}
+
+impl ModelArtifacts {
+    pub fn load(
+        client: &PjRtClient,
+        root: &Path,
+        model: &str,
+        batch: usize,
+        variant: &str,
+    ) -> Result<ModelArtifacts> {
+        let dir = variant_dir(root, model, batch, variant);
+        if !dir.exists() {
+            bail!(
+                "artifact dir {} missing — run `make artifacts` (or \
+                 `make artifacts-full` for ablation variants)",
+                dir.display()
+            );
+        }
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        if manifest.batch != batch || manifest.variant.name != variant {
+            bail!("manifest/dir mismatch in {}", dir.display());
+        }
+        let train_step = StepFn::load(
+            client,
+            &dir.join("train_step.hlo.txt"),
+            &format!("{variant}/train_step"),
+            manifest.train_step.inputs.clone(),
+            manifest.train_step.outputs.clone(),
+        )?;
+        let eval_step = StepFn::load(
+            client,
+            &dir.join("eval_step.hlo.txt"),
+            &format!("{variant}/eval_step"),
+            manifest.eval_step.inputs.clone(),
+            manifest.eval_step.outputs.clone(),
+        )?;
+        let probe = StepFn::load(
+            client,
+            &dir.join("probe.hlo.txt"),
+            &format!("{variant}/probe"),
+            manifest.probe.inputs.clone(),
+            manifest.probe.outputs.clone(),
+        )?;
+        Ok(ModelArtifacts { manifest, train_step, eval_step, probe })
+    }
+}
+
+/// Run the per-model init HLO: seed -> flat parameter vector.
+pub fn run_init(client: &PjRtClient, root: &Path, model: &str, seed: i32) -> Result<Vec<f32>> {
+    let dir = root.join(model);
+    let mj = Json::parse(
+        &std::fs::read_to_string(dir.join("init_manifest.json"))
+            .with_context(|| format!("init manifest in {}", dir.display()))?,
+    )?;
+    let total = mj.req("outputs")?.as_arr()?[0]
+        .req("shape")?
+        .as_usize_vec()?
+        .iter()
+        .product::<usize>();
+    let init = StepFn::load(
+        client,
+        &dir.join("init.hlo.txt"),
+        &format!("{model}/init"),
+        vec![super::manifest::IoSpec {
+            name: "seed".into(),
+            dtype: super::manifest::Dtype::I32,
+            shape: vec![],
+        }],
+        vec![super::manifest::IoSpec {
+            name: "params".into(),
+            dtype: super::manifest::Dtype::F32,
+            shape: vec![total],
+        }],
+    )?;
+    let out = init.call(&[Arg::ScalarI32(seed)])?;
+    Ok(out.into_iter().next().unwrap().data)
+}
+
+/// Default artifacts root (repo-relative, overridable via CLI/env).
+pub fn default_root() -> PathBuf {
+    if let Ok(p) = std::env::var("TETRAJET_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from("artifacts")
+}

@@ -1,0 +1,38 @@
+//! PJRT CPU client construction with tuned compile flags.
+//!
+//! xla_extension 0.5.1 compiles HLO single-threaded through the full
+//! LLVM pipeline. Compile/runtime trade-off measured on the vit-micro
+//! train step (EXPERIMENTS.md §Perf):
+//!
+//! | backend opt level | compile | execute/step |
+//! |---|---|---|
+//! | default (pre-scan, unrolled blocks) | > 16 min | — |
+//! | 0 | 4 s | 2678 ms |
+//! | 2 (with lax.scan over blocks) | 22 s | 314 ms |
+//!
+//! Level 2 plus the scan-over-blocks L2 structure is the sweet spot; we
+//! default to it and let users override via TETRAJET_XLA_OPT=<level>
+//! (or their own XLA_FLAGS).
+
+use anyhow::{Context, Result};
+use xla::PjRtClient;
+
+/// Create the PJRT CPU client, defaulting XLA_FLAGS to the fast-compile
+/// configuration unless the user already set XLA_FLAGS or chose a level
+/// via `TETRAJET_XLA_OPT` (`0`..`3` or `full`).
+pub fn cpu_client() -> Result<PjRtClient> {
+    let user_flags = std::env::var("XLA_FLAGS").ok();
+    let mode = std::env::var("TETRAJET_XLA_OPT").unwrap_or_default();
+    if user_flags.is_none() && mode != "full" {
+        let level = match mode.as_str() {
+            "0" | "1" | "2" | "3" => mode.as_str(),
+            _ => "2",
+        };
+        // Safe: set before the first XLA call in this process.
+        std::env::set_var(
+            "XLA_FLAGS",
+            format!("--xla_backend_optimization_level={level}"),
+        );
+    }
+    PjRtClient::cpu().context("creating PJRT CPU client")
+}

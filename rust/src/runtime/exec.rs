@@ -1,0 +1,148 @@
+//! HLO executable wrapper: manifest-checked marshalling host <-> device.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{Dtype, IoSpec};
+use crate::util::tensor::Tensor;
+
+/// A host-side argument for one HLO input.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl<'a> Arg<'a> {
+    fn dtype(&self) -> Dtype {
+        match self {
+            Arg::F32(_) | Arg::ScalarF32(_) => Dtype::F32,
+            Arg::I32(_) | Arg::ScalarI32(_) => Dtype::I32,
+        }
+    }
+
+    fn numel(&self) -> usize {
+        match self {
+            Arg::F32(v) => v.len(),
+            Arg::I32(v) => v.len(),
+            Arg::ScalarF32(_) | Arg::ScalarI32(_) => 1,
+        }
+    }
+
+    fn to_literal(&self, spec: &IoSpec) -> Result<Literal> {
+        let dims: Vec<usize> = spec.shape.clone();
+        let lit = match self {
+            Arg::F32(v) => Literal::create_from_shape_and_untyped_data(
+                ElementType::F32,
+                &dims,
+                bytes_of_f32(v),
+            )?,
+            Arg::ScalarF32(x) => Literal::create_from_shape_and_untyped_data(
+                ElementType::F32,
+                &dims,
+                bytes_of_f32(&[*x]),
+            )?,
+            Arg::I32(v) => Literal::create_from_shape_and_untyped_data(
+                ElementType::S32,
+                &dims,
+                bytes_of_i32(v),
+            )?,
+            Arg::ScalarI32(x) => Literal::create_from_shape_and_untyped_data(
+                ElementType::S32,
+                &dims,
+                bytes_of_i32(&[*x]),
+            )?,
+        };
+        Ok(lit)
+    }
+}
+
+fn bytes_of_f32(v: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no invalid bit patterns; alignment of u8 is 1.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytes_of_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// One compiled HLO entry point with its manifest-declared signature.
+pub struct StepFn {
+    pub name: String,
+    exe: PjRtLoadedExecutable,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl StepFn {
+    pub fn load(
+        client: &PjRtClient,
+        path: &Path,
+        name: &str,
+        inputs: Vec<IoSpec>,
+        outputs: Vec<IoSpec>,
+    ) -> Result<StepFn> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(StepFn { name: name.to_string(), exe, inputs, outputs })
+    }
+
+    /// Execute with manifest-order arguments; returns host tensors in
+    /// manifest output order. I32 outputs are widened to f32 (none of
+    /// our step outputs are integral, checked at load).
+    pub fn call(&self, args: &[Arg]) -> Result<Vec<Tensor>> {
+        if args.len() != self.inputs.len() {
+            bail!(
+                "{}: got {} args, manifest wants {}",
+                self.name,
+                args.len(),
+                self.inputs.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(args.len());
+        for (a, spec) in args.iter().zip(&self.inputs) {
+            if a.dtype() != spec.dtype || a.numel() != spec.numel() {
+                bail!(
+                    "{}: arg {:?} expects {:?}{:?} (got {} elems of {:?})",
+                    self.name,
+                    spec.name,
+                    spec.dtype,
+                    spec.shape,
+                    a.numel(),
+                    a.dtype()
+                );
+            }
+            lits.push(a.to_literal(spec)?);
+        }
+        let result = self.exe.execute::<Literal>(&lits)?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("device->host transfer")?
+            .to_tuple()?;
+        if tuple.len() != self.outputs.len() {
+            bail!(
+                "{}: HLO returned {} outputs, manifest wants {}",
+                self.name,
+                tuple.len(),
+                self.outputs.len()
+            );
+        }
+        tuple
+            .into_iter()
+            .zip(&self.outputs)
+            .map(|(lit, spec)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .with_context(|| format!("output {}", spec.name))?;
+                Tensor::new(spec.shape.clone(), data)
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,287 @@
+//! Artifact manifest: the interchange contract with `compile/aot.py`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            _ => bail!("unsupported dtype {s:?}"),
+        }
+    }
+}
+
+/// One named slice of the flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct ParamSegment {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub quantized: bool,
+}
+
+impl ParamSegment {
+    /// Trailing (contiguous) dimension — the 1x32 group axis of a
+    /// quantized (C, D) weight.
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.offset..self.offset + self.size
+    }
+}
+
+/// Model geometry (mirrors vit.ModelCfg).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub img: usize,
+    pub patch: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub classes: usize,
+    pub seq: usize,
+}
+
+/// Variant configuration echo (mirrors model.VariantCfg).
+#[derive(Debug, Clone)]
+pub struct VariantInfo {
+    pub name: String,
+    pub kind: String,
+    pub fwd_fmt: String,
+    pub bwd_fmt: String,
+    pub scaling: String,
+    pub bwd_rounding: String,
+    pub flow: String,
+    pub qema: bool,
+    pub impl_: String,
+    /// Per-quantizer toggles Q1..Q6 (Table 1 / Table 6 variants).
+    pub enabled: Vec<bool>,
+}
+
+#[derive(Debug, Clone)]
+pub struct StepIo {
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelInfo,
+    pub variant: VariantInfo,
+    pub batch: usize,
+    pub probe_block: usize,
+    pub total_params: usize,
+    pub qw_total: usize,
+    pub segments: Vec<ParamSegment>,
+    pub train_step: StepIo,
+    pub eval_step: StepIo,
+    pub probe: StepIo,
+}
+
+fn io_list(j: &Json) -> Result<Vec<IoSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: e.req("name")?.as_str()?.to_string(),
+                dtype: Dtype::parse(e.req("dtype")?.as_str()?)?,
+                shape: e.req("shape")?.as_usize_vec()?,
+            })
+        })
+        .collect()
+}
+
+fn step_io(j: &Json) -> Result<StepIo> {
+    Ok(StepIo { inputs: io_list(j.req("inputs")?)?, outputs: io_list(j.req("outputs")?)? })
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Manifest::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let m = j.req("model")?;
+        let model = ModelInfo {
+            name: m.req("name")?.as_str()?.to_string(),
+            img: m.req("img")?.as_usize()?,
+            patch: m.req("patch")?.as_usize()?,
+            dim: m.req("dim")?.as_usize()?,
+            depth: m.req("depth")?.as_usize()?,
+            heads: m.req("heads")?.as_usize()?,
+            classes: m.req("classes")?.as_usize()?,
+            seq: m.req("seq")?.as_usize()?,
+        };
+        let v = j.req("variant")?;
+        let variant = VariantInfo {
+            name: v.req("name")?.as_str()?.to_string(),
+            kind: v.req("kind")?.as_str()?.to_string(),
+            fwd_fmt: v.req("fwd_fmt")?.as_str()?.to_string(),
+            bwd_fmt: v.req("bwd_fmt")?.as_str()?.to_string(),
+            scaling: v.req("scaling")?.as_str()?.to_string(),
+            bwd_rounding: v.req("bwd_rounding")?.as_str()?.to_string(),
+            flow: v.req("flow")?.as_str()?.to_string(),
+            qema: v.req("qema")?.as_bool()?,
+            impl_: v.req("impl")?.as_str()?.to_string(),
+            enabled: v
+                .req("enabled")?
+                .as_arr()?
+                .iter()
+                .map(|b| b.as_bool())
+                .collect::<Result<_>>()?,
+        };
+        let p = j.req("params")?;
+        let segments: Vec<ParamSegment> = p
+            .req("segments")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Ok(ParamSegment {
+                    name: s.req("name")?.as_str()?.to_string(),
+                    shape: s.req("shape")?.as_usize_vec()?,
+                    offset: s.req("offset")?.as_usize()?,
+                    size: s.req("size")?.as_usize()?,
+                    quantized: s.req("quantized")?.as_bool()?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let man = Manifest {
+            model,
+            variant,
+            batch: j.req("batch")?.as_usize()?,
+            probe_block: j.req("probe_block")?.as_usize()?,
+            total_params: p.req("total")?.as_usize()?,
+            qw_total: p.req("qw_total")?.as_usize()?,
+            segments,
+            train_step: step_io(j.req("train_step")?)?,
+            eval_step: step_io(j.req("eval_step")?)?,
+            probe: step_io(j.req("probe")?)?,
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    fn validate(&self) -> Result<()> {
+        // Quantized weights must form the [0, qw_total) prefix.
+        let mut off = 0usize;
+        let mut qw = 0usize;
+        for s in &self.segments {
+            if s.offset != off {
+                bail!("segment {} offset {} != running {}", s.name, s.offset, off);
+            }
+            if s.size != s.shape.iter().product::<usize>() {
+                bail!("segment {} size mismatch", s.name);
+            }
+            if s.quantized {
+                if s.offset != qw {
+                    bail!("quantized segment {} not in prefix", s.name);
+                }
+                qw += s.size;
+            }
+            off += s.size;
+        }
+        if off != self.total_params || qw != self.qw_total {
+            bail!(
+                "manifest totals mismatch: params {off}/{} qw {qw}/{}",
+                self.total_params,
+                self.qw_total
+            );
+        }
+        Ok(())
+    }
+
+    pub fn quantized_segments(&self) -> impl Iterator<Item = &ParamSegment> {
+        self.segments.iter().filter(|s| s.quantized)
+    }
+
+    pub fn segment(&self, name: &str) -> Option<&ParamSegment> {
+        self.segments.iter().find(|s| s.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest_json() -> String {
+        r#"{
+          "model": {"name":"m","img":8,"patch":4,"dim":8,"depth":1,"heads":2,
+                    "classes":2,"seq":5,"mlp_ratio":4,"patch_dim":48},
+          "variant": {"name":"tetrajet","kind":"mx","fwd_fmt":"e2m1",
+                      "bwd_fmt":"e2m1","scaling":"tf","bwd_rounding":"stoch",
+                      "flow":"double","qema":false,"enabled":[true,true,true,true,true,true],
+                      "impl":"pallas"},
+          "batch": 4,
+          "probe_block": 0,
+          "params": {"total": 20, "qw_total": 12, "segments": [
+            {"name":"w1","shape":[3,4],"offset":0,"size":12,"quantized":true,"weight_decay":true},
+            {"name":"b1","shape":[8],"offset":12,"size":8,"quantized":false,"weight_decay":false}
+          ]},
+          "train_step": {"inputs":[{"name":"params","dtype":"f32","shape":[20]}],
+                         "outputs":[{"name":"loss","dtype":"f32","shape":[]}]},
+          "eval_step": {"inputs":[],"outputs":[]},
+          "probe": {"inputs":[],"outputs":[]}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let j = Json::parse(&mini_manifest_json()).unwrap();
+        let m = Manifest::from_json(&j).unwrap();
+        assert_eq!(m.total_params, 20);
+        assert_eq!(m.qw_total, 12);
+        assert_eq!(m.quantized_segments().count(), 1);
+        assert_eq!(m.segment("w1").unwrap().cols(), 4);
+        assert_eq!(m.train_step.inputs[0].numel(), 20);
+        assert_eq!(m.train_step.outputs[0].numel(), 1);
+    }
+
+    #[test]
+    fn rejects_wrong_totals() {
+        let bad = mini_manifest_json().replace("\"total\": 20", "\"total\": 21");
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_non_prefix_quantized() {
+        let bad = mini_manifest_json()
+            .replace("\"quantized\":true", "\"quantized\":false")
+            .replace("\"quantized\":false,\"weight_decay\":false", "\"quantized\":true,\"weight_decay\":false")
+            .replace("\"qw_total\": 12", "\"qw_total\": 8");
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! `python -m compile.aot` (build time, never on the training path)
+//! lowers each variant's train/eval/probe steps to HLO text plus a JSON
+//! manifest describing the ordered inputs/outputs and the flat parameter
+//! layout. This module loads those artifacts onto the PJRT CPU client
+//! and exposes typed step functions over host buffers.
+
+pub mod artifacts;
+pub mod client;
+pub mod exec;
+pub mod manifest;
+
+pub use artifacts::ModelArtifacts;
+pub use client::cpu_client;
+pub use exec::{Arg, StepFn};
+pub use manifest::{IoSpec, Manifest, ParamSegment};

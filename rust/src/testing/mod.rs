@@ -1,0 +1,79 @@
+//! Minimal property-testing driver (proptest is unavailable offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` inputs drawn
+//! from `gen` over seeded RNG streams; on failure it reports the seed
+//! and a shrunk-ish description (the failing case index is re-derivable
+//! from the seed, so failures are exactly reproducible).
+
+use crate::util::rng::Rng;
+
+/// Run a property over `cases` generated inputs; panics with the seed
+/// on the first violation.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let base = Rng::new(0xC0FFEE ^ name.len() as u64);
+    for i in 0..cases {
+        let mut rng = base.fold_in(i as u64);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property {name:?} failed on case {i}/{cases}: {input:?}\n\
+                 (deterministic: base seed 0xC0FFEE^{}, fold_in({i}))",
+                name.len()
+            );
+        }
+    }
+}
+
+/// Generate a random f32 vector with interesting magnitude spread:
+/// mixes normal values, powers of two, grid-ish values and extremes.
+pub fn gen_f32_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len)
+        .map(|_| match rng.below(10) {
+            0 => 0.0,
+            1 => {
+                // exact power of two in a moderate range
+                let e = rng.below(16) as i32 - 8;
+                let s = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+                s * (2.0f32).powi(e)
+            }
+            2 => {
+                // half-integer grid-ish value
+                (rng.below(25) as f32 / 2.0 - 6.0) * scale
+            }
+            3 => rng.normal() * scale * 100.0, // outlier
+            4 => rng.normal() * 1e-6,          // tiny
+            _ => rng.normal() * scale,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_valid_property() {
+        check("squares nonneg", 200, |r| r.normal(), |x| x * x >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn check_fails_invalid_property() {
+        check("always positive", 200, |r| r.normal(), |&x| x > 0.0);
+    }
+
+    #[test]
+    fn gen_vec_has_variety() {
+        let mut r = Rng::new(1);
+        let v = gen_f32_vec(&mut r, 1000, 1.0);
+        assert_eq!(v.len(), 1000);
+        assert!(v.iter().any(|&x| x == 0.0));
+        assert!(v.iter().any(|&x| x.abs() > 10.0));
+        assert!(v.iter().any(|&x| x != 0.0 && x.abs() < 1e-4));
+    }
+}

@@ -1,0 +1,185 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `tetrajet <subcommand> [--key value]... [--flag]...` with
+//! positional arguments collected in order. Unknown options are errors;
+//! every consumer declares its options up front so `--help` output can
+//! be generated.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    known: Vec<OptSpec>,
+}
+
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — no option validation
+    /// until `finish()`.
+    pub fn parse_tokens(tokens: &[String], expect_subcommand: bool) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = tokens.iter().peekable();
+        if expect_subcommand {
+            if let Some(t) = it.peek() {
+                if !t.starts_with("--") {
+                    a.subcommand = Some(it.next().unwrap().clone());
+                }
+            }
+        }
+        while let Some(t) = it.next() {
+            if let Some(name) = t.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        a.opts.insert(name.to_string(), it.next().unwrap().clone());
+                    }
+                    _ => {
+                        a.flags.push(name.to_string());
+                    }
+                }
+            } else {
+                a.positional.push(t.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse_tokens(&tokens, true)
+    }
+
+    /// Declare an option (for validation + help).
+    pub fn opt(&mut self, name: &str, default: Option<&str>, help: &str) -> &mut Self {
+        self.known.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(|s| s.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag_opt(&mut self, name: &str, help: &str) -> &mut Self {
+        self.known.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Validate that all provided options were declared.
+    pub fn finish(&self) -> Result<()> {
+        for k in self.opts.keys() {
+            if !self.known.iter().any(|o| &o.name == k) {
+                bail!("unknown option --{k}\n{}", self.help_text());
+            }
+        }
+        for k in &self.flags {
+            if !self.known.iter().any(|o| &o.name == k) {
+                bail!("unknown flag --{k}\n{}", self.help_text());
+            }
+        }
+        Ok(())
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::from("options:\n");
+        for o in &self.known {
+            let d = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let name = if o.is_flag { format!("{} (flag)", o.name) } else { o.name.clone() };
+            s.push_str(&format!("  --{:<18} {}{}\n", name, o.help, d));
+        }
+        s
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> Result<f32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        // NOTE: a bare token after `--name` binds as its value, so flags
+        // go last (or before another --option). Positionals come first.
+        let a = Args::parse_tokens(&toks("train pos1 --steps 100 --quick"), true).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("steps"), Some("100"));
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse_tokens(&toks("--lr 0.001 --steps 42"), false).unwrap();
+        assert_eq!(a.get_usize("steps", 7).unwrap(), 42);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!((a.get_f32("lr", 0.0).unwrap() - 0.001).abs() < 1e-9);
+        assert!(a.get_usize("lr", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let mut a = Args::parse_tokens(&toks("--bogus 1"), false).unwrap();
+        a.opt("steps", Some("100"), "number of steps");
+        assert!(a.finish().is_err());
+        let mut b = Args::parse_tokens(&toks("--steps 5"), false).unwrap();
+        b.opt("steps", Some("100"), "number of steps");
+        assert!(b.finish().is_ok());
+    }
+}

@@ -1,0 +1,50 @@
+//! Tiny leveled logger with wall-clock-relative timestamps.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+static QUIET: AtomicBool = AtomicBool::new(false);
+static START_MS: AtomicU64 = AtomicU64::new(0);
+
+fn now_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+pub fn set_quiet(q: bool) {
+    QUIET.store(q, Ordering::Relaxed);
+}
+
+fn elapsed() -> f64 {
+    let start = START_MS.load(Ordering::Relaxed);
+    let start = if start == 0 {
+        let n = now_ms();
+        START_MS.store(n, Ordering::Relaxed);
+        n
+    } else {
+        start
+    };
+    (now_ms().saturating_sub(start)) as f64 / 1000.0
+}
+
+pub fn info(msg: &str) {
+    if !QUIET.load(Ordering::Relaxed) {
+        println!("[{:8.1}s] {}", elapsed(), msg);
+    }
+}
+
+pub fn warn(msg: &str) {
+    eprintln!("[{:8.1}s] WARN {}", elapsed(), msg);
+}
+
+#[macro_export]
+macro_rules! loginfo {
+    ($($arg:tt)*) => { $crate::util::log::info(&format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! logwarn {
+    ($($arg:tt)*) => { $crate::util::log::warn(&format!($($arg)*)) };
+}

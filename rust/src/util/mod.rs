@@ -1,0 +1,15 @@
+//! Self-contained substrate utilities.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so the coordinator ships its own minimal
+//! JSON codec, deterministic RNG, CLI parser, stats helpers and thread
+//! pool instead of serde_json / rand / clap / rayon (DESIGN.md
+//! §Substitutions).
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod parallel;
+pub mod rng;
+pub mod stats;
+pub mod tensor;

@@ -1,0 +1,91 @@
+//! Scoped thread-pool helpers (rayon is unavailable offline).
+//!
+//! Used by the data pipeline (batch synthesis) and the metric trackers
+//! (per-segment scans). XLA's CPU backend already multi-threads the HLO
+//! execution, so the default worker count is deliberately modest.
+
+/// Map `f` over `0..n` with up to `workers` threads, preserving order.
+pub fn parallel_map_indexed<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = &next;
+            let f = &f;
+            let out_ptr: SendPtr<Option<T>> = out_ptr;
+            scope.spawn(move || {
+                // Bind the wrapper itself so 2021 precise capture moves
+                // the Send-able SendPtr, not its raw-pointer field.
+                let out_ptr = out_ptr;
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i);
+                    // SAFETY: each index i is claimed by exactly one
+                    // worker, so writes to out[i] never alias; the scope
+                    // join provides the happens-before edge back to the
+                    // caller.
+                    unsafe { *out_ptr.0.add(i) = Some(v) };
+                }
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("worker wrote all slots")).collect()
+}
+
+struct SendPtr<T>(*mut T);
+// Manual impls: derive(Copy) would add a spurious `T: Copy` bound.
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Default worker count: half the cores, clamped to [1, 8].
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get() / 2)
+        .unwrap_or(2)
+        .clamp(1, 8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_covers_all() {
+        let out = parallel_map_indexed(1000, 4, |i| i * i);
+        assert_eq!(out.len(), 1000);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn single_worker_and_empty() {
+        assert_eq!(parallel_map_indexed(3, 1, |i| i), vec![0, 1, 2]);
+        assert_eq!(parallel_map_indexed(0, 4, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn heavy_closure_parallel_consistency() {
+        let serial = parallel_map_indexed(64, 1, |i| (0..1000).map(|j| (i * j) % 97).sum::<usize>());
+        let par = parallel_map_indexed(64, 8, |i| (0..1000).map(|j| (i * j) % 97).sum::<usize>());
+        assert_eq!(serial, par);
+    }
+}

@@ -1,0 +1,81 @@
+//! Cross-layer golden test: the pure-Rust quant mirror must reproduce
+//! the python oracle (`kernels/ref.py`) bit-for-bit on the vectors
+//! exported by `python -m compile.aot` (`make artifacts`).
+//!
+//! This is the contract that lets the coordinator compute quantized-
+//! weight trajectories (R_w, confidence, rate-of-change) without
+//! bouncing through XLA.
+
+use std::path::PathBuf;
+
+use tetrajet::quant::{
+    fp4_format, int4_quantize, mx_quantize_cols, mx_quantize_stoch_cols,
+    qema_quantize_cols, Scaling,
+};
+use tetrajet::util::json::Json;
+
+fn golden_path() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/golden/quant_vectors.json");
+    p.exists().then_some(p)
+}
+
+#[test]
+fn golden_vectors_match_python_oracle() {
+    let Some(path) = golden_path() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let cases = j.req("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 18, "unexpectedly few golden cases: {}", cases.len());
+    let mut checked = 0usize;
+    for c in cases {
+        let kind = c.req("kind").unwrap().as_str().unwrap();
+        let shape = c.req("shape").unwrap().as_usize_vec().unwrap();
+        let cols = shape[1];
+        let x = c.req("x").unwrap().as_f32_vec().unwrap();
+        let u = c.req("u").unwrap().as_f32_vec().unwrap();
+        let want = c.req("q").unwrap().as_f32_vec().unwrap();
+        let rounding = c.req("rounding").unwrap().as_str().unwrap();
+        let tag = c.req("tag").unwrap().as_str().unwrap();
+        let got: Vec<f32> = match kind {
+            "mx" => {
+                let fmt = fp4_format(c.req("fmt").unwrap().as_str().unwrap()).unwrap();
+                let scaling =
+                    Scaling::parse(c.req("scaling").unwrap().as_str().unwrap()).unwrap();
+                if rounding == "det" {
+                    mx_quantize_cols(&x, cols, fmt, scaling)
+                } else {
+                    mx_quantize_stoch_cols(&x, &u, cols, fmt, scaling)
+                }
+            }
+            "qema" => {
+                let fmt = fp4_format(c.req("fmt").unwrap().as_str().unwrap()).unwrap();
+                // the 'u' slot carries the EMA weights for qema cases
+                qema_quantize_cols(&x, &u, cols, fmt, Scaling::TruncationFree)
+            }
+            "int4" => {
+                if rounding == "det" {
+                    int4_quantize(&x, None)
+                } else {
+                    int4_quantize(&x, Some(&u))
+                }
+            }
+            other => panic!("unknown golden kind {other}"),
+        };
+        assert_eq!(got.len(), want.len());
+        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            // Bit-exact comparison modulo -0.0 == 0.0 (json strips the
+            // sign of negative zero anyway).
+            assert!(
+                g == w || (g == 0.0 && w == 0.0),
+                "case kind={kind} rounding={rounding} tag={tag} idx={i}: \
+                 rust {g:?} != python {w:?} (x={})",
+                x[i]
+            );
+        }
+        checked += 1;
+    }
+    println!("verified {checked} golden cases bit-exactly");
+}

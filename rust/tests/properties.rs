@@ -1,0 +1,164 @@
+//! Property-based tests over the quant mirror and metric invariants
+//! (using the in-repo property-test driver; proptest is unavailable
+//! offline — DESIGN.md §Substitutions).
+
+use tetrajet::metrics::{quant_confidence, OscTracker};
+use tetrajet::quant::{
+    bracket, e2m1, e3m0, mx_quantize_cols, qema_quantize_cols, round_det,
+    Scaling,
+};
+use tetrajet::testing::{check, gen_f32_vec};
+
+#[test]
+fn prop_round_det_is_nearest_or_tie_up() {
+    for fmt in [e2m1(), e3m0()] {
+        check(
+            "round_det nearest",
+            3000,
+            |r| r.range(fmt.qn(), fmt.qp()),
+            |&y| {
+                let q = round_det(y, fmt);
+                // q must be a grid level...
+                if !fmt.levels.iter().any(|&l| l == q) {
+                    return false;
+                }
+                // ...and no level may be strictly closer.
+                let d = (y - q).abs();
+                fmt.levels.iter().all(|&l| (y - l).abs() >= d - 1e-7)
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_bracket_contains_value() {
+    for fmt in [e2m1(), e3m0()] {
+        check(
+            "bracket contains",
+            3000,
+            |r| r.range(fmt.qn(), fmt.qp()),
+            |&y| {
+                let (q1, q2) = bracket(y, fmt);
+                let ok_levels = fmt.levels.iter().any(|&l| l == q1)
+                    && fmt.levels.iter().any(|&l| l == q2);
+                // Consecutive levels with q1 <= y <= q2 (except at Qp
+                // where q1 is clamped one level down).
+                ok_levels && q1 < q2 && y >= q1 - 1e-6 && y <= q2 + 1e-6
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_quantization_idempotent_and_bounded() {
+    check(
+        "mx idempotent",
+        200,
+        |r| gen_f32_vec(r, 64, 2.0),
+        |x| {
+            for fmt in [e2m1(), e3m0()] {
+                for sc in [Scaling::TruncationFree, Scaling::Floor] {
+                    let q = mx_quantize_cols(x, 64, fmt, sc);
+                    if mx_quantize_cols(&q, 64, fmt, sc) != q {
+                        return false;
+                    }
+                    // Truncation-free never amplifies the group max by
+                    // more than one rounding step (<= 2x is a loose
+                    // bound; floor scaling truncates instead).
+                    if sc == Scaling::TruncationFree {
+                        let xm = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                        let qm = q.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                        if qm > 2.0 * xm.max(f32::MIN_POSITIVE) {
+                            return false;
+                        }
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_qema_output_bracketed_by_neighbors() {
+    check(
+        "qema picks bracket candidate",
+        200,
+        |r| {
+            let w = gen_f32_vec(r, 32, 1.0);
+            let ema: Vec<f32> = w.iter().map(|&v| v + r.normal() * 0.1).collect();
+            (w, ema)
+        },
+        |(w, ema)| {
+            let fmt = e2m1();
+            let q = qema_quantize_cols(w, ema, 32, fmt, Scaling::TruncationFree);
+            // Exact invariant (paper Alg. 1): each output is one of the
+            // two scaled bracket candidates around the latent weight.
+            let max_abs = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let scale = {
+                use tetrajet::quant::formats::exp2i;
+                exp2i(tetrajet::quant::scale_exponent(
+                    max_abs,
+                    fmt,
+                    Scaling::TruncationFree,
+                ))
+            };
+            for i in 0..w.len() {
+                let y = (w[i] / scale).clamp(fmt.qn(), fmt.qp());
+                let (q1, q2) = bracket(y, fmt);
+                if q[i] != q1 * scale && q[i] != q2 * scale {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_confidence_in_unit_interval() {
+    check(
+        "confidence bounded",
+        300,
+        |r| gen_f32_vec(r, 64, 3.0),
+        |x| {
+            let mut conf = Vec::new();
+            for fmt in [e2m1(), e3m0()] {
+                quant_confidence(x, 64, fmt, Scaling::TruncationFree, &mut conf);
+                if !conf.iter().all(|&c| (0.0..=1.0).contains(&c) && c.is_finite()) {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_osc_ratio_nonnegative_and_walk_has_small_ratio() {
+    check(
+        "osc ratio sane",
+        100,
+        |r| {
+            // A smooth random walk quantized on a coarse grid.
+            let mut w = vec![r.normal()];
+            for _ in 0..40 {
+                let last = *w.last().unwrap();
+                w.push(last + r.normal() * 0.3);
+            }
+            w
+        },
+        |walk| {
+            let q: Vec<f32> = walk.iter().map(|&v| round_det(v.clamp(-6.0, 6.0), e2m1())).collect();
+            let mut t = OscTracker::new(&[walk[0]], &[q[0]]);
+            for i in 1..walk.len() {
+                t.observe(&[walk[i]], &[q[i]]);
+            }
+            let r = t.ratios()[0];
+            // Ratios are nonnegative; a real random walk with step 0.3
+            // on a >= 0.5-spaced grid can't reach the paper's oscillation
+            // threshold of 16.
+            r >= 0.0 && r < 16.0
+        },
+    );
+}
