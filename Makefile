@@ -1,0 +1,28 @@
+# Builder entry points. `make tier1` is the repo's tier-1 verify plus
+# the format gate, in one command.
+
+RUST_DIR := rust
+
+.PHONY: tier1 build test fmt fmt-check bench artifacts
+
+tier1:
+	cd $(RUST_DIR) && cargo build --release && cargo test -q && cargo fmt --check
+
+build:
+	cd $(RUST_DIR) && cargo build --release
+
+test:
+	cd $(RUST_DIR) && cargo test -q
+
+fmt:
+	cd $(RUST_DIR) && cargo fmt
+
+fmt-check:
+	cd $(RUST_DIR) && cargo fmt --check
+
+bench:
+	cd $(RUST_DIR) && cargo bench
+
+# AOT-export HLO artifacts + golden vectors (needs python with jax).
+artifacts:
+	cd python && python -m compile.aot --core --out ../$(RUST_DIR)/artifacts

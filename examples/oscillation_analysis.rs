@@ -61,6 +61,22 @@ fn main() -> Result<()> {
         println!("step {s:>5}: {count} oscillating / window {win}");
     }
 
+    // The mirror the metrics above ran on is packed 4-bit codes, not a
+    // second f32 copy of the weights; show what that buys.
+    tr.mirror_wq();
+    let packed_bytes: usize = tr.packed_wq().iter().map(|p| p.bytes()).sum();
+    let f32_bytes = tr.wq().len() * std::mem::size_of::<f32>();
+    if packed_bytes > 0 {
+        println!(
+            "\n-- packed quant mirror --\n{} segments, {:.1} KiB packed codes+scales \
+             vs {:.1} KiB f32 mirror ({:.1}x smaller)",
+            tr.packed_wq().len(),
+            packed_bytes as f64 / 1024.0,
+            f32_bytes as f64 / 1024.0,
+            f32_bytes as f64 / packed_bytes as f64
+        );
+    }
+
     // Fig.3: concrete flipping elements across more steps.
     let (_, conf) = tr.snapshot_latents();
     let mut idx: Vec<usize> = (0..conf.len()).collect();

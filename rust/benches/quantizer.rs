@@ -1,5 +1,7 @@
 //! L3 quant-mirror throughput (the per-step metric hot path): MXFP4
-//! deterministic/stochastic, Q-EMA, INT4 over vit-micro-sized weights.
+//! deterministic/stochastic, Q-EMA, INT4 over vit-micro-sized weights,
+//! plus the packed-code mirror (quantize / dequantize / flip-count)
+//! against the f32 fake-quant baseline on a >= 1M-element segment.
 
 #[path = "harness.rs"]
 mod harness;
@@ -7,7 +9,8 @@ mod harness;
 use harness::Bench;
 use tetrajet::quant::{
     e2m1, e3m0, int4_quantize, mx_quantize_cols, mx_quantize_cols_into,
-    mx_quantize_stoch_cols, qema_quantize_cols_into, Scaling,
+    mx_quantize_stoch_cols, qema_quantize_cols_into, MxQuantizer, PackedMx,
+    Quantizer, Scaling,
 };
 use tetrajet::util::rng::Rng;
 
@@ -46,5 +49,49 @@ fn main() {
     });
     b.case("int4_per_tensor", n as u64, || {
         std::hint::black_box(int4_quantize(&x, None));
+    });
+
+    // --- packed core on a >= 1M-element segment (2^21 weights) ---
+    // Two consecutive training-step snapshots: xb2 perturbs ~1% of the
+    // elements hard enough to flip, the realistic sparse-flip regime the
+    // oscillation tracker sees every step.
+    let nb = 2_097_152usize;
+    let colsb = 256;
+    let xb: Vec<f32> = (0..nb).map(|_| rng.normal() * 0.1).collect();
+    let xb2: Vec<f32> = xb
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| if i % 97 == 0 { v * 1.4 + 0.01 } else { v })
+        .collect();
+    let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+    let mut outb = vec![0.0f32; nb];
+    let (mut pb, mut pb2) = (PackedMx::default(), PackedMx::default());
+    q.quantize_packed(&xb, colsb, &mut pb);
+    q.quantize_packed(&xb2, colsb, &mut pb2);
+    let qa = mx_quantize_cols(&xb, colsb, e2m1(), Scaling::TruncationFree);
+    let qb = mx_quantize_cols(&xb2, colsb, e2m1(), Scaling::TruncationFree);
+    assert_eq!(
+        pb2.flip_count(&pb),
+        qa.iter().zip(&qb).filter(|(a, b)| a != b).count(),
+        "packed and f32 flip counts must agree"
+    );
+
+    b.case("mx_f32_mirror 2M (into)", nb as u64, || {
+        mx_quantize_cols_into(&xb, colsb, e2m1(), Scaling::TruncationFree, &mut outb);
+        std::hint::black_box(&outb);
+    });
+    b.case("mx_packed_quantize 2M", nb as u64, || {
+        q.quantize_packed(&xb, colsb, &mut pb);
+        std::hint::black_box(&pb);
+    });
+    b.case("mx_packed_dequantize 2M", nb as u64, || {
+        pb.dequantize_into(&mut outb);
+        std::hint::black_box(&outb);
+    });
+    b.case("flip_count_f32 2M", nb as u64, || {
+        std::hint::black_box(qa.iter().zip(&qb).filter(|(a, b)| a != b).count());
+    });
+    b.case("flip_count_packed 2M", nb as u64, || {
+        std::hint::black_box(pb2.flip_count(&pb));
     });
 }

@@ -1,5 +1,11 @@
 //! The training driver: owns state, data, policies and metrics; calls
 //! the AOT HLO step functions. Python is never involved at run time.
+//!
+//! The per-step quant mirror runs on the packed 4-bit core: each
+//! quantized manifest segment is quantized to [`PackedMx`] codes in
+//! parallel, the oscillation tracker compares codes, and controllers
+//! (Q-Ramping / Freeze) observe an f32 dequant view that is bit-exact
+//! to the old fake-quant mirror.
 
 use anyhow::{bail, Result};
 
@@ -9,12 +15,15 @@ use crate::coordinator::qramping::QRampingController;
 use crate::coordinator::recorder::Recorder;
 use crate::coordinator::state::TrainState;
 use crate::data::{Batcher, EvalSet, SynthVision};
-use crate::metrics::{latents, quant_confidence, OscTracker, RateTracker};
+use crate::metrics::{
+    latents, quant_confidence, OscTracker, PackedOscTracker, RateTracker,
+};
 use crate::quant::{
-    fp4_format, int4_quantize, mx_quantize_cols_into, qema_quantize_cols_into,
-    Fp4Format, Scaling,
+    fp4_format, Fp4Format, Int4Quantizer, MxQuantizer, PackedMx,
+    QemaQuantizer, Quantizer, Scaling,
 };
 use crate::runtime::{Arg, ModelArtifacts};
+use crate::util::parallel::{default_workers, parallel_for_each_mut};
 
 #[derive(Debug, Clone, Copy)]
 pub struct EvalResult {
@@ -32,6 +41,51 @@ enum WqMirror {
     Int4,
 }
 
+/// One quantized manifest segment, pre-validated at construction to
+/// tile the [0, qw_total) prefix contiguously.
+#[derive(Debug, Clone, Copy)]
+struct SegMeta {
+    offset: usize,
+    size: usize,
+    cols: usize,
+}
+
+impl SegMeta {
+    fn range(&self) -> std::ops::Range<usize> {
+        self.offset..self.offset + self.size
+    }
+}
+
+/// The metric oscillation window: code-compare over the packed mirror
+/// when one exists, f32 compare for the identity (fp32) mirror.
+enum OscState {
+    F32(OscTracker),
+    Packed(PackedOscTracker),
+}
+
+impl OscState {
+    fn steps(&self) -> usize {
+        match self {
+            OscState::F32(t) => t.steps(),
+            OscState::Packed(t) => t.steps(),
+        }
+    }
+
+    fn oscillating_count(&self, threshold: f32) -> usize {
+        match self {
+            OscState::F32(t) => t.oscillating_count(threshold),
+            OscState::Packed(t) => t.oscillating_count(threshold),
+        }
+    }
+
+    fn reset_window(&mut self) {
+        match self {
+            OscState::F32(t) => t.reset_window(),
+            OscState::Packed(t) => t.reset_window(),
+        }
+    }
+}
+
 pub struct Trainer<'a> {
     pub arts: &'a ModelArtifacts,
     pub cfg: TrainConfig,
@@ -47,11 +101,15 @@ pub struct Trainer<'a> {
     mirror: WqMirror,
     fmt: &'static Fp4Format,
     scaling: Scaling,
+    seg_meta: Vec<SegMeta>,
+    /// Packed quant mirror, one buffer per quantized segment.
+    packed: Vec<PackedMx>,
+    /// f32 dequant view of `packed` (bit-exact to the fake-quant mirror).
     wq_buf: Vec<f32>,
     rate_w: RateTracker,
     rate_wq: RateTracker,
     rate_y: RateTracker,
-    osc: Option<OscTracker>,
+    osc: Option<OscState>,
     scratch_conf: Vec<f32>,
     scratch_lat: Vec<f32>,
 }
@@ -65,6 +123,22 @@ impl<'a> Trainer<'a> {
         if cfg.batch != man.batch {
             bail!("config batch {} != artifact batch {}", cfg.batch, man.batch);
         }
+        // The packed mirror and wq_buf slicing assume the quantized
+        // segments tile [0, qw_total) contiguously. Manifest::validate
+        // enforces this at load time; re-assert it cheaply here so a
+        // manifest that bypassed validation fails loudly, not silently.
+        let mut seg_meta = Vec::new();
+        let mut covered = 0usize;
+        for seg in man.quantized_segments() {
+            assert_eq!(
+                seg.offset, covered,
+                "quantized segment {:?} breaks the contiguous quantized prefix",
+                seg.name
+            );
+            seg_meta.push(SegMeta { offset: seg.offset, size: seg.size, cols: seg.cols() });
+            covered += seg.size;
+        }
+        assert_eq!(covered, man.qw_total, "quantized segments must cover qw_total");
         let state = TrainState::new(params, man.qw_total);
         let ds = SynthVision::new(
             man.model.img,
@@ -105,6 +179,7 @@ impl<'a> Trainer<'a> {
             _ => 0.0,
         };
         let qw = man.qw_total;
+        let packed = vec![PackedMx::default(); seg_meta.len()];
         Ok(Trainer {
             arts,
             cfg,
@@ -119,6 +194,8 @@ impl<'a> Trainer<'a> {
             mirror,
             fmt,
             scaling,
+            seg_meta,
+            packed,
             wq_buf: vec![0.0; qw],
             rate_w: RateTracker::new(),
             rate_wq: RateTracker::new(),
@@ -135,51 +212,67 @@ impl<'a> Trainer<'a> {
     }
 
     /// Mirror the forward quantized weights of the whole quantized
-    /// segment into `wq_buf` (pure Rust; bit-identical to the HLO).
+    /// segment (pure Rust; bit-identical to the HLO): quantize each
+    /// manifest segment to packed codes in parallel and refresh the
+    /// f32 dequant view in `wq_buf` for the controllers.
     pub fn mirror_wq(&mut self) {
-        let arts = self.arts;
-        let man = &arts.manifest;
+        self.mirror_wq_inner(true);
+    }
 
-        match self.mirror {
-            WqMirror::Identity => self.wq_buf.copy_from_slice(self.state.qw()),
-            WqMirror::Int4 => {
-                for seg in man.quantized_segments() {
-                    let r = seg.range();
-                    let q = int4_quantize(&self.state.params[r.clone()], None);
-                    self.wq_buf[r].copy_from_slice(&q);
-                }
-            }
-            WqMirror::Mx => {
-                for seg in man.quantized_segments() {
-                    let r = seg.range();
-                    mx_quantize_cols_into(
-                        &self.state.params[r.clone()],
-                        seg.cols(),
-                        self.fmt,
-                        self.scaling,
-                        &mut self.wq_buf[r],
-                    );
-                }
-            }
-            WqMirror::Qema => {
-                for seg in man.quantized_segments() {
-                    let r = seg.range();
-                    qema_quantize_cols_into(
-                        &self.state.params[r.clone()],
-                        &self.state.ema[r.clone()],
-                        seg.cols(),
-                        self.fmt,
-                        self.scaling,
-                        &mut self.wq_buf[r],
-                    );
-                }
-            }
+    /// One fused parallel pass over the quantized segments: quantize to
+    /// packed codes and, when something consumes the f32 view this step
+    /// (controllers, rate trackers, external callers), immediately
+    /// dequantize each segment into its `wq_buf` slice.
+    fn mirror_wq_inner(&mut self, refresh_view: bool) {
+        if self.mirror == WqMirror::Identity {
+            self.wq_buf.copy_from_slice(self.state.qw());
+            return;
         }
+        let segs = &self.seg_meta;
+        let params = &self.state.params;
+        let ema = &self.state.ema;
+        let (mirror, fmt, scaling) = (self.mirror, self.fmt, self.scaling);
+        let workers = default_workers().min(segs.len().max(1));
+        let quantize = |i: usize, p: &mut PackedMx| {
+            let seg = segs[i];
+            let w = &params[seg.range()];
+            match mirror {
+                WqMirror::Mx => {
+                    MxQuantizer { fmt, scaling }.quantize_packed(w, seg.cols, p)
+                }
+                WqMirror::Qema => QemaQuantizer { fmt, scaling, ema: &ema[seg.range()] }
+                    .quantize_packed(w, seg.cols, p),
+                WqMirror::Int4 => Int4Quantizer.quantize_packed(w, seg.cols, p),
+                WqMirror::Identity => unreachable!(),
+            }
+        };
+        if !refresh_view {
+            parallel_for_each_mut(&mut self.packed, workers, |i, p| quantize(i, p));
+            return;
+        }
+        let mut pairs: Vec<(&mut PackedMx, &mut [f32])> = Vec::with_capacity(segs.len());
+        let mut rest: &mut [f32] = &mut self.wq_buf;
+        for (seg, p) in segs.iter().zip(&mut self.packed) {
+            let (head, tail) = rest.split_at_mut(seg.size);
+            pairs.push((p, head));
+            rest = tail;
+        }
+        debug_assert!(rest.is_empty(), "segments tile the quantized prefix");
+        parallel_for_each_mut(&mut pairs, workers, |i, (p, out)| {
+            quantize(i, p);
+            p.dequantize_into(out);
+        });
     }
 
     /// Latest mirrored quantized weights (call `mirror_wq` first).
     pub fn wq(&self) -> &[f32] {
         &self.wq_buf
+    }
+
+    /// Latest packed quant mirror, one [`PackedMx`] per quantized
+    /// manifest segment (empty buffers for the identity mirror).
+    pub fn packed_wq(&self) -> &[PackedMx] {
+        &self.packed
     }
 
     /// Latent weights / confidences over all quantized segments.
@@ -250,13 +343,18 @@ impl<'a> Trainer<'a> {
 
         let need_wq = self.qramp.is_some() || self.freeze.is_some() || self.metrics_enabled();
         if need_wq {
-            self.mirror_wq();
+            // The osc tracker reads packed codes directly; only the
+            // controllers and the rate tracker consume the f32 view.
+            let need_view = self.qramp.is_some()
+                || self.freeze.is_some()
+                || self.cfg.metrics.rate_window > 0;
+            self.mirror_wq_inner(need_view);
         }
         if let Some(q) = &mut self.qramp {
-            q.observe(step, &self.state.params[..self.wq_buf.len()], &self.wq_buf);
+            q.observe(step, self.state.qw(), &self.wq_buf);
         }
         if let Some(f) = &mut self.freeze {
-            f.observe(step, &self.state.params[..self.wq_buf.len()], &self.wq_buf);
+            f.observe(step, self.state.qw(), &self.wq_buf);
         }
 
         let m = self.cfg.metrics.clone();
@@ -280,13 +378,20 @@ impl<'a> Trainer<'a> {
         if m.osc_window > 0 {
             match &mut self.osc {
                 None => {
-                    self.osc = Some(OscTracker::new(
-                        &self.state.params[..self.wq_buf.len()],
-                        &self.wq_buf,
-                    ))
+                    self.osc = Some(if self.mirror == WqMirror::Identity {
+                        OscState::F32(OscTracker::new(self.state.qw(), &self.wq_buf))
+                    } else {
+                        OscState::Packed(PackedOscTracker::new(
+                            self.state.qw(),
+                            &self.packed,
+                        ))
+                    });
                 }
                 Some(t) => {
-                    t.observe(&self.state.params[..self.wq_buf.len()], &self.wq_buf);
+                    match t {
+                        OscState::F32(t) => t.observe(self.state.qw(), &self.wq_buf),
+                        OscState::Packed(t) => t.observe(self.state.qw(), &self.packed),
+                    }
                     if t.steps() >= m.osc_window {
                         let count = t.oscillating_count(m.rw_threshold);
                         self.rec.osc_series.push((step + 1, count, m.osc_window));

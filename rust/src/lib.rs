@@ -16,6 +16,16 @@
 //!   confidence, oscillation ratio), checkpoints, CLI and the experiment
 //!   harness that regenerates every table and figure of the paper.
 //!
+//! Inside L3 the quant stack ([`quant`]) has two faces behind one
+//! [`quant::Quantizer`] trait: the legacy f32 fake-quant mirror
+//! (golden-tested against the python oracle) and the packed 4-bit core
+//! ([`quant::PackedMx`]: two level codes per byte + one E8M0 scale byte
+//! per 32-group). The trainer mirrors weights as packed codes per
+//! manifest segment in parallel; oscillation metrics compare codes
+//! ([`metrics::PackedOscTracker`]) and controllers observe a bit-exact
+//! f32 dequant view. The packed layout is the substrate for packed
+//! checkpoints and a native FP4 serving path (ROADMAP).
+//!
 //! Python never runs on the training path: `make artifacts` lowers the
 //! model once; afterwards the `tetrajet` binary is self-contained.
 

@@ -9,6 +9,9 @@
 //! * [`oscillation::OscTracker`] — per-element dist_W / dist_Q windows,
 //!   oscillation ratio R_w (App. A.1, §6.1, Fig. 6) and Nagel et al.'s
 //!   flipping frequency f (used by the Freeze baseline),
+//! * [`oscillation::PackedOscTracker`] — the same windows over the
+//!   packed 4-bit quant mirror: flips by code compare, dist_Q by
+//!   dequantizing only flipped elements,
 //! * [`confidence`] — latent weights and quantization confidence
 //!   (§4.2 / App. A.2, Fig. 4/5).
 
@@ -17,5 +20,5 @@ pub mod oscillation;
 pub mod rate;
 
 pub use confidence::{latents, quant_confidence};
-pub use oscillation::OscTracker;
+pub use oscillation::{OscTracker, OscWindow, PackedOscTracker};
 pub use rate::RateTracker;

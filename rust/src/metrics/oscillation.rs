@@ -9,49 +9,40 @@
 //! The tracker also counts quantized-value flips (Nagel et al. 2022's
 //! flipping frequency f), which drives the Freeze baseline, and keeps a
 //! running average of the master weight (Freeze's pin value).
+//!
+//! Two trackers share the accumulators and statistics ([`OscWindow`]):
+//!
+//! * [`OscTracker`] — observes f32 snapshots (master + fake-quant
+//!   mirror); still used by the Freeze/Q-Ramping controllers and the
+//!   fp32-identity variant.
+//! * [`PackedOscTracker`] — observes [`PackedMx`] snapshots from the
+//!   packed quant mirror. Flips are detected by comparing 4-bit codes
+//!   (a byte memcmp per unchanged group instead of 32 f32 compares,
+//!   and 8x less previous-snapshot state); dist_Q only dequantizes the
+//!   elements that actually flipped, since an unflipped element
+//!   contributes |q_t - q_{t-1}| = 0. Counts and ratios are exactly
+//!   equal to the f32 tracker's (property-tested).
 
+use crate::quant::packed::PackedMx;
+
+/// Shared per-element window accumulators + statistics: dist_W, dist_Q,
+/// flip counts and the step counter. Both trackers feed this, so the
+/// R_w conventions live in exactly one place.
 #[derive(Debug, Clone)]
-pub struct OscTracker {
-    prev_w: Vec<f32>,
-    prev_q: Vec<f32>,
+pub struct OscWindow {
     dist_w: Vec<f32>,
     dist_q: Vec<f32>,
     flips: Vec<u32>,
-    /// Running mean of the master weight over the window (Freeze value).
-    run_avg: Vec<f32>,
     steps: usize,
 }
 
-impl OscTracker {
-    /// Start a window at snapshot (w0, q0).
-    pub fn new(w0: &[f32], q0: &[f32]) -> OscTracker {
-        assert_eq!(w0.len(), q0.len());
-        OscTracker {
-            prev_w: w0.to_vec(),
-            prev_q: q0.to_vec(),
-            dist_w: vec![0.0; w0.len()],
-            dist_q: vec![0.0; w0.len()],
-            flips: vec![0; w0.len()],
-            run_avg: w0.to_vec(),
+impl OscWindow {
+    fn new(n: usize) -> OscWindow {
+        OscWindow {
+            dist_w: vec![0.0; n],
+            dist_q: vec![0.0; n],
+            flips: vec![0; n],
             steps: 0,
-        }
-    }
-
-    /// Feed the post-step snapshot (w^t, w_Q^t).
-    pub fn observe(&mut self, w: &[f32], q: &[f32]) {
-        debug_assert_eq!(w.len(), self.prev_w.len());
-        debug_assert_eq!(q.len(), self.prev_q.len());
-        self.steps += 1;
-        let inv = 1.0 / (self.steps + 1) as f32;
-        for i in 0..w.len() {
-            self.dist_w[i] += (w[i] - self.prev_w[i]).abs();
-            self.dist_q[i] += (q[i] - self.prev_q[i]).abs();
-            if q[i] != self.prev_q[i] {
-                self.flips[i] += 1;
-            }
-            self.run_avg[i] += (w[i] - self.run_avg[i]) * inv;
-            self.prev_w[i] = w[i];
-            self.prev_q[i] = q[i];
         }
     }
 
@@ -103,6 +94,73 @@ impl OscTracker {
         out.extend(self.flips.iter().map(|&f| f as f32 / n));
     }
 
+    fn reset(&mut self) {
+        self.dist_w.iter_mut().for_each(|x| *x = 0.0);
+        self.dist_q.iter_mut().for_each(|x| *x = 0.0);
+        self.flips.iter_mut().for_each(|x| *x = 0);
+        self.steps = 0;
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct OscTracker {
+    prev_w: Vec<f32>,
+    prev_q: Vec<f32>,
+    win: OscWindow,
+    /// Running mean of the master weight over the window (Freeze value).
+    run_avg: Vec<f32>,
+}
+
+impl OscTracker {
+    /// Start a window at snapshot (w0, q0).
+    pub fn new(w0: &[f32], q0: &[f32]) -> OscTracker {
+        assert_eq!(w0.len(), q0.len());
+        OscTracker {
+            prev_w: w0.to_vec(),
+            prev_q: q0.to_vec(),
+            win: OscWindow::new(w0.len()),
+            run_avg: w0.to_vec(),
+        }
+    }
+
+    /// Feed the post-step snapshot (w^t, w_Q^t).
+    pub fn observe(&mut self, w: &[f32], q: &[f32]) {
+        debug_assert_eq!(w.len(), self.prev_w.len());
+        debug_assert_eq!(q.len(), self.prev_q.len());
+        self.win.steps += 1;
+        let inv = 1.0 / (self.win.steps + 1) as f32;
+        for i in 0..w.len() {
+            self.win.dist_w[i] += (w[i] - self.prev_w[i]).abs();
+            self.win.dist_q[i] += (q[i] - self.prev_q[i]).abs();
+            if q[i] != self.prev_q[i] {
+                self.win.flips[i] += 1;
+            }
+            self.run_avg[i] += (w[i] - self.run_avg[i]) * inv;
+            self.prev_w[i] = w[i];
+            self.prev_q[i] = q[i];
+        }
+    }
+
+    pub fn steps(&self) -> usize {
+        self.win.steps()
+    }
+
+    pub fn ratios_into(&self, out: &mut Vec<f32>) {
+        self.win.ratios_into(out);
+    }
+
+    pub fn ratios(&self) -> Vec<f32> {
+        self.win.ratios()
+    }
+
+    pub fn oscillating_count(&self, threshold: f32) -> usize {
+        self.win.oscillating_count(threshold)
+    }
+
+    pub fn flip_freq_into(&self, out: &mut Vec<f32>) {
+        self.win.flip_freq_into(out);
+    }
+
     /// Running average of the master weight (Freeze pin value).
     pub fn running_avg(&self) -> &[f32] {
         &self.run_avg
@@ -110,12 +168,109 @@ impl OscTracker {
 
     /// Start a new window from the current snapshots.
     pub fn reset_window(&mut self) {
-        self.dist_w.iter_mut().for_each(|x| *x = 0.0);
-        self.dist_q.iter_mut().for_each(|x| *x = 0.0);
-        self.flips.iter_mut().for_each(|x| *x = 0);
+        self.win.reset();
         self.run_avg.copy_from_slice(&self.prev_w);
-        self.steps = 0;
     }
+}
+
+/// Per-element oscillation windows over the *packed* quant mirror: same
+/// accumulators as [`OscTracker`], but the quantized trajectory arrives
+/// as per-segment [`PackedMx`] snapshots and the previous quantized
+/// state is kept as codes, not floats.
+#[derive(Debug, Clone)]
+pub struct PackedOscTracker {
+    prev_w: Vec<f32>,
+    /// Previous packed snapshot, one entry per manifest segment.
+    prev: Vec<PackedMx>,
+    win: OscWindow,
+}
+
+impl PackedOscTracker {
+    /// Start a window at snapshot (w0, q0); `q0` is the packed mirror,
+    /// segment by segment, covering exactly `w0.len()` elements.
+    pub fn new(w0: &[f32], q0: &[PackedMx]) -> PackedOscTracker {
+        let n: usize = q0.iter().map(|p| p.len()).sum();
+        assert_eq!(w0.len(), n, "packed segments must cover the master slice");
+        PackedOscTracker {
+            prev_w: w0.to_vec(),
+            prev: q0.to_vec(),
+            win: OscWindow::new(n),
+        }
+    }
+
+    /// Feed the post-step snapshot (w^t, packed w_Q^t).
+    pub fn observe(&mut self, w: &[f32], q: &[PackedMx]) {
+        debug_assert_eq!(w.len(), self.prev_w.len());
+        debug_assert_eq!(q.len(), self.prev.len());
+        self.win.steps += 1;
+        for i in 0..w.len() {
+            self.win.dist_w[i] += (w[i] - self.prev_w[i]).abs();
+            self.prev_w[i] = w[i];
+        }
+        let mut base = 0usize;
+        for (cur, prev) in q.iter().zip(&mut self.prev) {
+            assert_eq!(cur.len(), prev.len());
+            observe_segment(cur, prev, base, &mut self.win.dist_q, &mut self.win.flips);
+            prev.clone_from(cur);
+            base += cur.len();
+        }
+        debug_assert_eq!(base, w.len());
+    }
+
+    pub fn steps(&self) -> usize {
+        self.win.steps()
+    }
+
+    pub fn ratios_into(&self, out: &mut Vec<f32>) {
+        self.win.ratios_into(out);
+    }
+
+    pub fn ratios(&self) -> Vec<f32> {
+        self.win.ratios()
+    }
+
+    pub fn oscillating_count(&self, threshold: f32) -> usize {
+        self.win.oscillating_count(threshold)
+    }
+
+    pub fn flip_freq_into(&self, out: &mut Vec<f32>) {
+        self.win.flip_freq_into(out);
+    }
+
+    /// Start a new window from the current snapshots.
+    pub fn reset_window(&mut self) {
+        self.win.reset();
+    }
+}
+
+/// Accumulate flips + dist_Q for one segment transition `prev -> cur`.
+/// Group-granular: an unchanged (scale byte, code bytes) pair skips the
+/// whole group with one memcmp; only flipped elements dequantize.
+fn observe_segment(
+    cur: &PackedMx,
+    prev: &PackedMx,
+    base: usize,
+    dist_q: &mut [f32],
+    flips: &mut [u32],
+) {
+    if cur.num_groups() == 0 {
+        // Per-tensor scale (INT4): the scale moves with the tensor max,
+        // so compare dequantized values directly.
+        for i in 0..cur.len() {
+            let (a, b) = (cur.value(i), prev.value(i));
+            if a != b {
+                flips[base + i] += 1;
+                dist_q[base + i] += (a - b).abs();
+            }
+        }
+        return;
+    }
+    cur.for_each_group(|g, a, b| {
+        cur.group_flips(prev, g, a, b, |i, delta| {
+            flips[base + i] += 1;
+            dist_q[base + i] += delta;
+        });
+    });
 }
 
 #[cfg(test)]
@@ -175,5 +330,83 @@ mod tests {
         t.reset_window();
         assert_eq!(t.steps(), 0);
         assert_eq!(t.ratios()[0], 0.0);
+    }
+
+    mod packed {
+        use super::super::*;
+        use crate::quant::{e2m1, mx_quantize_cols, MxQuantizer, Quantizer, Scaling};
+
+        /// Drive both trackers over the same master trajectory and check
+        /// every window statistic matches exactly.
+        fn parity(traj: &[Vec<f32>], cols: usize) {
+            let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+            let pack = |w: &[f32]| {
+                let mut p = PackedMx::default();
+                q.quantize_packed(w, cols, &mut p);
+                p
+            };
+            let fake = |w: &[f32]| mx_quantize_cols(w, cols, e2m1(), Scaling::TruncationFree);
+
+            let mut tf = OscTracker::new(&traj[0], &fake(&traj[0]));
+            let mut tp = PackedOscTracker::new(&traj[0], &[pack(&traj[0])]);
+            for w in &traj[1..] {
+                tf.observe(w, &fake(w));
+                tp.observe(w, &[pack(w)]);
+            }
+            assert_eq!(tf.steps(), tp.steps());
+            let (mut ff, mut fp) = (Vec::new(), Vec::new());
+            tf.flip_freq_into(&mut ff);
+            tp.flip_freq_into(&mut fp);
+            assert_eq!(ff, fp, "flip frequencies diverge");
+            assert_eq!(tf.ratios(), tp.ratios(), "oscillation ratios diverge");
+            for th in [0.0, 1.0, 16.0, 1e6] {
+                assert_eq!(tf.oscillating_count(th), tp.oscillating_count(th));
+            }
+        }
+
+        #[test]
+        fn matches_f32_tracker_on_oscillating_trajectory() {
+            // Element 0 oscillates across the 0.75 threshold; element 1
+            // walks; the rest of the group drifts slowly. Ragged cols.
+            let n = 48;
+            let mut traj = Vec::new();
+            for t in 0..8 {
+                let mut w: Vec<f32> = (0..n).map(|i| (i as f32 * 0.13).sin()).collect();
+                w[0] = if t % 2 == 0 { 0.749 } else { 0.751 };
+                w[1] = 0.1 * t as f32;
+                w[5] = 6.0; // pins the group scale
+                traj.push(w);
+            }
+            parity(&traj, n);
+        }
+
+        #[test]
+        fn matches_f32_tracker_across_scale_shift() {
+            // Whole-group magnitude doubling flips every nonzero element
+            // while codes stay identical — the case a naive code compare
+            // would miss.
+            let n = 32;
+            let base: Vec<f32> = (0..n).map(|i| (i as f32 * 0.21).cos() * 2.0).collect();
+            let traj: Vec<Vec<f32>> = (0..4)
+                .map(|t| base.iter().map(|&v| v * (1 << t) as f32).collect())
+                .collect();
+            parity(&traj, n);
+        }
+
+        #[test]
+        fn static_packed_window_counts_nothing() {
+            let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+            let w: Vec<f32> = (0..32).map(|i| i as f32 * 0.1).collect();
+            let mut p = PackedMx::default();
+            q.quantize_packed(&w, 32, &mut p);
+            let mut t = PackedOscTracker::new(&w, std::slice::from_ref(&p));
+            t.observe(&w, std::slice::from_ref(&p));
+            t.observe(&w, std::slice::from_ref(&p));
+            assert_eq!(t.steps(), 2);
+            assert!(t.ratios().iter().all(|&r| r == 0.0));
+            assert_eq!(t.oscillating_count(0.0), 0);
+            t.reset_window();
+            assert_eq!(t.steps(), 0);
+        }
     }
 }

@@ -78,8 +78,11 @@ impl Fp4Format {
     }
 
     /// Index of the level a latent deterministically rounds to.
+    /// Boundaries are sorted and the predicate `y >= b` is monotone, so
+    /// the filter-count is a partition point (binary search).
+    #[inline]
     pub fn level_index(&self, y: f32) -> usize {
-        self.boundaries.iter().filter(|&&b| y >= b).count()
+        self.boundaries.partition_point(|&b| y >= b)
     }
 }
 

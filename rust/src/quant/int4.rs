@@ -1,33 +1,90 @@
 //! Per-tensor symmetric INT4 fake quantization (baseline; ref.int4_quantize_ref).
+//!
+//! [`Int4Quantizer`] adapts the baseline to the
+//! [`Quantizer`](super::packed::Quantizer) trait; its packed form uses
+//! the same nibble codes as the MX formats (level index into
+//! [`INT4_LEVELS`], zero at code 7) with a single per-tensor f32 scale
+//! instead of per-group E8M0 bytes.
+
+use super::packed::{PackedMx, Quantizer};
 
 pub const INT4_QMAX: f32 = 7.0;
 
-/// Deterministic (u = None) or stochastic INT4 fake quantization.
-pub fn int4_quantize(x: &[f32], u: Option<&[f32]>) -> Vec<f32> {
+/// Symmetric INT4 grid -7..=7; code = level + 7.
+pub static INT4_LEVELS: [f32; 15] = [
+    -7.0, -6.0, -5.0, -4.0, -3.0, -2.0, -1.0, 0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0,
+];
+
+#[inline]
+fn tensor_scale(x: &[f32]) -> f32 {
     let m = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-    let scale = if m == 0.0 { 1.0 } else { m / INT4_QMAX };
+    if m == 0.0 {
+        1.0
+    } else {
+        m / INT4_QMAX
+    }
+}
+
+/// round half away from zero (ref: sign(y)*floor(|y|+0.5)), clamped.
+#[inline]
+fn round_half_away(y: f32) -> f32 {
+    (y.abs() + 0.5).floor().copysign(y).clamp(-INT4_QMAX, INT4_QMAX)
+}
+
+/// Deterministic (u = None) or stochastic INT4 fake quantization into a
+/// caller-owned buffer (no allocation on the per-step metric path).
+pub fn int4_quantize_into(x: &[f32], u: Option<&[f32]>, out: &mut [f32]) {
+    assert_eq!(out.len(), x.len());
+    let scale = tensor_scale(x);
     let inv = 1.0 / scale;
     match u {
-        None => x
-            .iter()
-            .map(|&v| {
-                let y = v * inv;
-                // round half away from zero (ref: sign(y)*floor(|y|+0.5))
-                let q = (y.abs() + 0.5).floor().copysign(y);
-                q.clamp(-INT4_QMAX, INT4_QMAX) * scale
-            })
-            .collect(),
+        None => {
+            for (o, &v) in out.iter_mut().zip(x) {
+                *o = round_half_away(v * inv) * scale;
+            }
+        }
         Some(u) => {
             assert_eq!(u.len(), x.len());
-            x.iter()
-                .zip(u)
-                .map(|(&v, &uu)| {
-                    let y = v * inv;
-                    let lo = y.floor();
-                    let q = if (y - lo) > uu { lo + 1.0 } else { lo };
-                    q.clamp(-INT4_QMAX, INT4_QMAX) * scale
-                })
-                .collect()
+            for ((o, &v), &uu) in out.iter_mut().zip(x).zip(u) {
+                let y = v * inv;
+                let lo = y.floor();
+                let q = if (y - lo) > uu { lo + 1.0 } else { lo };
+                *o = q.clamp(-INT4_QMAX, INT4_QMAX) * scale;
+            }
+        }
+    }
+}
+
+/// Deterministic (u = None) or stochastic INT4 fake quantization,
+/// allocating variant.
+pub fn int4_quantize(x: &[f32], u: Option<&[f32]>) -> Vec<f32> {
+    let mut out = vec![0.0; x.len()];
+    int4_quantize_into(x, u, &mut out);
+    out
+}
+
+/// Deterministic INT4 baseline as a [`Quantizer`]. `cols` is carried
+/// for shape bookkeeping only; scaling is per tensor.
+#[derive(Debug, Clone, Copy)]
+pub struct Int4Quantizer;
+
+impl Quantizer for Int4Quantizer {
+    fn name(&self) -> &'static str {
+        "int4"
+    }
+
+    fn quantize_f32(&self, x: &[f32], _cols: usize, out: &mut [f32]) {
+        int4_quantize_into(x, None, out);
+    }
+
+    fn quantize_packed(&self, x: &[f32], cols: usize, out: &mut PackedMx) {
+        let scale = tensor_scale(x);
+        out.begin_per_tensor(x.len(), cols, &INT4_LEVELS, scale);
+        let inv = 1.0 / scale;
+        for (i, &v) in x.iter().enumerate() {
+            // q is integral in [-7, 7]; +7 is the INT4_LEVELS index.
+            // (-0.0 + 7.0 == 7.0, so signed zeros collapse to code 7.)
+            out.set_code(i, (round_half_away(v * inv) + INT4_QMAX) as u8);
         }
     }
 }
@@ -63,5 +120,17 @@ mod tests {
         let q = int4_quantize(&x, Some(&[0.5, 0.9, 0.1]));
         // 2.5: frac 0.5 > 0.9? no -> 2; > 0.1? yes -> 3.
         assert_eq!(q, vec![7.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn into_variant_matches() {
+        let x: Vec<f32> = (0..33).map(|i| (i as f32 * 0.37).sin() * 9.0).collect();
+        let u: Vec<f32> = (0..33).map(|i| ((i * 7) % 13) as f32 / 13.0).collect();
+        for uu in [None, Some(&u[..])] {
+            let a = int4_quantize(&x, uu);
+            let mut b = vec![0.0; x.len()];
+            int4_quantize_into(&x, uu, &mut b);
+            assert_eq!(a, b);
+        }
     }
 }

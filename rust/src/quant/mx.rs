@@ -5,10 +5,40 @@
 //! coordinator-side metrics track. Ragged tails (cols % 32 != 0) are
 //! handled as partial groups, equivalent to the zero-padding the L2
 //! wrapper applies.
+//!
+//! All variants (deterministic, stochastic, Q-EMA in `qema.rs`, and the
+//! packed-code path in `packed.rs`) share one group loop,
+//! [`for_each_group`], so the shared-scale computation is written once.
+//! [`MxQuantizer`] is the [`Quantizer`](super::packed::Quantizer)-trait
+//! face of the deterministic path.
 
 use super::formats::{
-    bracket, exp2i, round_det, scale_exponent, Fp4Format, Scaling, GROUP,
+    bracket, exp2i, round_det, scale_exponent, Fp4Format, Scaling,
 };
+use super::packed::{PackedMx, Quantizer};
+
+/// Iterate the 1x32 groups of a row-major `(rows, cols)` matrix,
+/// computing the shared-scale exponent of each group once. The closure
+/// receives the flat element range, the scale exponent `s`, and the
+/// scale `2^s`. Ragged tails (`cols % 32 != 0`) become partial groups.
+/// Group order comes from the shared [`packed::group_ranges`] layout
+/// definition, so scales pushed in this order decode correctly.
+pub(crate) fn for_each_group<F>(
+    x: &[f32],
+    cols: usize,
+    fmt: &Fp4Format,
+    scaling: Scaling,
+    mut f: F,
+) where
+    F: FnMut(std::ops::Range<usize>, i32, f32),
+{
+    assert_eq!(x.len() % cols.max(1), 0);
+    super::packed::group_ranges(x.len(), cols, |_g, a, b| {
+        let max_abs = x[a..b].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let s = scale_exponent(max_abs, fmt, scaling);
+        f(a..b, s, exp2i(s));
+    });
+}
 
 /// Deterministic MXFP4 fake-quantization, allocating variant.
 pub fn mx_quantize_cols(
@@ -31,25 +61,19 @@ pub fn mx_quantize_cols_into(
     scaling: Scaling,
     out: &mut [f32],
 ) {
-    assert_eq!(x.len() % cols.max(1), 0);
     assert_eq!(out.len(), x.len());
-    for (row, orow) in x.chunks_exact(cols).zip(out.chunks_exact_mut(cols)) {
-        for (g, og) in row.chunks(GROUP).zip(orow.chunks_mut(GROUP)) {
-            let max_abs = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-            let s = scale_exponent(max_abs, fmt, scaling);
-            let scale = exp2i(s);
-            let inv = 1.0 / scale;
-            for (&v, o) in g.iter().zip(og.iter_mut()) {
-                let y = (v * inv).clamp(fmt.qn(), fmt.qp());
-                *o = round_det(y, fmt) * scale;
-            }
+    for_each_group(x, cols, fmt, scaling, |rng, _s, scale| {
+        let inv = 1.0 / scale;
+        for i in rng {
+            let y = (x[i] * inv).clamp(fmt.qn(), fmt.qp());
+            out[i] = round_det(y, fmt) * scale;
         }
-    }
+    });
 }
 
 /// Stochastic MXFP4 fake-quantization with explicit uniforms (used by
 /// the golden tests; the training path's stochastic rounding runs in
-/// the AOT HLO, not here).
+/// the AOT HLO, not here). Allocating variant.
 pub fn mx_quantize_stoch_cols(
     x: &[f32],
     u: &[f32],
@@ -57,26 +81,31 @@ pub fn mx_quantize_stoch_cols(
     fmt: &Fp4Format,
     scaling: Scaling,
 ) -> Vec<f32> {
-    assert_eq!(x.len(), u.len());
     let mut out = vec![0.0; x.len()];
-    for r in 0..x.len() / cols {
-        let row = &x[r * cols..(r + 1) * cols];
-        let urow = &u[r * cols..(r + 1) * cols];
-        for g0 in (0..cols).step_by(GROUP) {
-            let g1 = (g0 + GROUP).min(cols);
-            let max_abs = row[g0..g1].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-            let s = scale_exponent(max_abs, fmt, scaling);
-            let scale = exp2i(s);
-            let inv = 1.0 / scale;
-            for i in g0..g1 {
-                let y = (row[i] * inv).clamp(fmt.qn(), fmt.qp());
-                let (q1, q2) = bracket(y, fmt);
-                let q = if (y - q1) > urow[i] * (q2 - q1) { q2 } else { q1 };
-                out[r * cols + i] = q * scale;
-            }
-        }
-    }
+    mx_quantize_stoch_cols_into(x, u, cols, fmt, scaling, &mut out);
     out
+}
+
+/// Stochastic MXFP4 fake-quantization into a caller-owned buffer.
+pub fn mx_quantize_stoch_cols_into(
+    x: &[f32],
+    u: &[f32],
+    cols: usize,
+    fmt: &Fp4Format,
+    scaling: Scaling,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), u.len());
+    assert_eq!(out.len(), x.len());
+    for_each_group(x, cols, fmt, scaling, |rng, _s, scale| {
+        let inv = 1.0 / scale;
+        for i in rng {
+            let y = (x[i] * inv).clamp(fmt.qn(), fmt.qp());
+            let (q1, q2) = bracket(y, fmt);
+            let q = if (y - q1) > u[i] * (q2 - q1) { q2 } else { q1 };
+            out[i] = q * scale;
+        }
+    });
 }
 
 /// Per-group scale exponents for a 1x32-grouped matrix; used by the
@@ -89,18 +118,47 @@ pub fn group_scales(
     out: &mut Vec<f32>,
 ) {
     out.clear();
-    for row in x.chunks_exact(cols) {
-        for g in row.chunks(GROUP) {
-            let max_abs = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-            out.push(exp2i(scale_exponent(max_abs, fmt, scaling)));
-        }
+    for_each_group(x, cols, fmt, scaling, |_rng, _s, scale| out.push(scale));
+}
+
+/// Deterministic MXFP4 as a [`Quantizer`]: the forward-weight quantizer
+/// Q^(2) of the TetraJet variants without Q-EMA.
+#[derive(Debug, Clone, Copy)]
+pub struct MxQuantizer {
+    pub fmt: &'static Fp4Format,
+    pub scaling: Scaling,
+}
+
+impl Quantizer for MxQuantizer {
+    fn name(&self) -> &'static str {
+        "mx"
+    }
+
+    fn quantize_f32(&self, x: &[f32], cols: usize, out: &mut [f32]) {
+        mx_quantize_cols_into(x, cols, self.fmt, self.scaling, out);
+    }
+
+    fn quantize_packed(&self, x: &[f32], cols: usize, out: &mut PackedMx) {
+        let fmt = self.fmt;
+        out.begin_grouped(x.len(), cols, &fmt.levels);
+        for_each_group(x, cols, fmt, self.scaling, |rng, s, scale| {
+            out.push_group_scale(s);
+            let inv = 1.0 / scale;
+            for i in rng {
+                let y = (x[i] * inv).clamp(fmt.qn(), fmt.qp());
+                // round_det lands exactly on a level (golden-tested), so
+                // its index recovers the identical value on dequant.
+                let q = round_det(y, fmt);
+                out.set_code(i, fmt.level_index(q) as u8);
+            }
+        });
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::formats::{e2m1, e3m0};
+    use crate::quant::formats::{e2m1, e3m0, GROUP};
 
     #[test]
     fn values_land_on_scaled_grid() {
@@ -175,5 +233,28 @@ mod tests {
         let mut b = vec![0.0; 96];
         mx_quantize_cols_into(&x, 32, e2m1(), Scaling::Floor, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stoch_into_variant_matches() {
+        let x: Vec<f32> = (0..96).map(|i| (i as f32 * 0.77).cos() * 4.0).collect();
+        let u: Vec<f32> = (0..96).map(|i| ((i * 31) % 17) as f32 / 17.0).collect();
+        let a = mx_quantize_stoch_cols(&x, &u, 48, e2m1(), Scaling::TruncationFree);
+        let mut b = vec![0.0; 96];
+        mx_quantize_stoch_cols_into(&x, &u, 48, e2m1(), Scaling::TruncationFree, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn group_scales_match_shared_loop() {
+        let x: Vec<f32> = (0..96).map(|i| (i as f32).sin() * 2.0).collect();
+        let mut s = Vec::new();
+        group_scales(&x, 48, e2m1(), Scaling::TruncationFree, &mut s);
+        // 2 rows x 2 groups (32 + ragged 16) per row.
+        assert_eq!(s.len(), 4);
+        for (g, x48) in s.chunks(2).zip(x.chunks(48)) {
+            let m0 = x48[..32].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            assert_eq!(g[0], exp2i(scale_exponent(m0, e2m1(), Scaling::TruncationFree)));
+        }
     }
 }

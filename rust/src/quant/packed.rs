@@ -1,0 +1,470 @@
+//! Packed MXFP4 core: the [`Quantizer`] trait and the [`PackedMx`]
+//! representation the coordinator mirrors weights into.
+//!
+//! The fake-quant mirror (`mx.rs`/`qema.rs`/`int4.rs`) simulates FP4 by
+//! round-tripping every weight through f32, which costs 4 bytes of
+//! state per element and an f32 compare per flip test. `PackedMx`
+//! instead stores the *codes*: two 4-bit level indices per byte plus
+//! one E8M0 scale byte per 32-element group (~0.53 bytes/element, 7.5x
+//! smaller). Flip detection degenerates to byte compares, and the f32
+//! view is recovered bit-exactly on demand via [`PackedMx::dequantize_into`]
+//! — `dequantize(quantize_packed(x))` equals the fake-quant output
+//! exactly (property-tested in `tests/properties.rs` and golden-pinned
+//! through the trainer mirror).
+//!
+//! The same packed layout is the substrate for packed checkpoints and a
+//! native FP4 serving path (see ROADMAP.md).
+
+use super::formats::{exp2i, GROUP};
+
+/// Iterate `(group_index, flat_start, flat_end)` of the row-major 1x32
+/// group layout of a `(len/cols, cols)` matrix, ragged tails included.
+/// This is THE definition of the group order: the encode side
+/// (`mx::for_each_group`, which drives `push_group_scale`) and the
+/// decode side ([`PackedMx::for_each_group`], which drives scale-byte
+/// consumption) both delegate here, so they cannot desynchronize.
+#[inline]
+pub(crate) fn group_ranges<F: FnMut(usize, usize, usize)>(len: usize, cols: usize, mut f: F) {
+    let cols = cols.max(1);
+    let mut g = 0;
+    for r0 in (0..len).step_by(cols) {
+        for g0 in (0..cols).step_by(GROUP) {
+            f(g, r0 + g0, r0 + (g0 + GROUP).min(cols));
+            g += 1;
+        }
+    }
+}
+
+/// Bias of the E8M0 scale byte: `byte = scale_exponent + 127`, covering
+/// the clamped exponent range [-127, 127] in 0..=254 (255 unused/NaN,
+/// matching the OCP MX E8M0 encoding).
+pub const E8M0_BIAS: i32 = 127;
+
+/// Largest scale byte for which "same scale + same code <=> same value"
+/// is exact: past 2^121 the `level * scale` product can overflow to inf
+/// (collapsing distinct codes) for Qp up to 16, so comparisons above
+/// this fall back to dequantized values.
+const CODE_CMP_MAX_SCALE_BYTE: u8 = (121 + E8M0_BIAS) as u8;
+
+/// A quantizer with both the legacy fake-quant (f32 in, f32 grid values
+/// out) path and the packed-code path. Implementations must keep the
+/// two bit-exact: `dequantize(quantize_packed(x)) == quantize_f32(x)`.
+pub trait Quantizer {
+    /// Short name for logs and benches.
+    fn name(&self) -> &'static str;
+
+    /// Fake-quantize `x` (row-major, trailing dim `cols`) into `out`.
+    fn quantize_f32(&self, x: &[f32], cols: usize, out: &mut [f32]);
+
+    /// Quantize `x` into packed 4-bit codes + shared scales, reusing
+    /// `out`'s buffers (no steady-state allocation).
+    fn quantize_packed(&self, x: &[f32], cols: usize, out: &mut PackedMx);
+
+    /// Expand packed codes back to f32 grid values; bit-exact to
+    /// `quantize_f32` on the tensor the codes came from.
+    fn dequantize(&self, p: &PackedMx, out: &mut [f32]) {
+        p.dequantize_into(out);
+    }
+}
+
+/// Packed 4-bit quantized tensor: level codes (two per byte, low nibble
+/// = even flat index) plus either one E8M0 scale byte per 1x32 group
+/// (MX formats) or a single per-tensor f32 scale (INT4). Carries its
+/// decode table, so it dequantizes without knowing which quantizer
+/// produced it.
+#[derive(Debug, Clone, Default)]
+pub struct PackedMx {
+    codes: Vec<u8>,
+    /// E8M0 scale byte per group, row-major; empty for per-tensor mode.
+    scales: Vec<u8>,
+    /// Per-tensor scale (INT4); 1.0 and unused in grouped mode.
+    tensor_scale: f32,
+    /// Level-decode table: `value(i) = levels[code(i)] * scale`.
+    levels: &'static [f32],
+    len: usize,
+    cols: usize,
+}
+
+impl PackedMx {
+    /// Elements represented (not bytes).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Trailing (group-axis) dimension.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of 1x32 groups (0 in per-tensor mode).
+    #[inline]
+    pub fn num_groups(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Groups per row, including a ragged tail group.
+    #[inline]
+    pub fn groups_per_row(&self) -> usize {
+        (self.cols + GROUP - 1) / GROUP.max(1)
+    }
+
+    /// Packed state footprint in bytes (codes + scales).
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + self.scales.len()
+    }
+
+    /// Decode table for this tensor's codes.
+    #[inline]
+    pub fn levels(&self) -> &'static [f32] {
+        self.levels
+    }
+
+    /// The 4-bit level code of flat element `i`.
+    #[inline]
+    pub fn code(&self, i: usize) -> u8 {
+        (self.codes[i / 2] >> ((i % 2) * 4)) & 0x0F
+    }
+
+    /// Level value of a code.
+    #[inline]
+    pub fn level(&self, code: u8) -> f32 {
+        self.levels[code as usize]
+    }
+
+    /// Raw E8M0 byte of group `g`.
+    #[inline]
+    pub fn scale_byte(&self, g: usize) -> u8 {
+        self.scales[g]
+    }
+
+    /// Shared-scale exponent of group `g`.
+    #[inline]
+    pub fn group_scale_exp(&self, g: usize) -> i32 {
+        self.scales[g] as i32 - E8M0_BIAS
+    }
+
+    /// Shared scale of group `g` (or the per-tensor scale).
+    #[inline]
+    pub fn group_scale(&self, g: usize) -> f32 {
+        if self.scales.is_empty() {
+            self.tensor_scale
+        } else {
+            exp2i(self.group_scale_exp(g))
+        }
+    }
+
+    /// Group index of flat element `i`.
+    #[inline]
+    pub fn group_of(&self, i: usize) -> usize {
+        if self.scales.is_empty() {
+            return 0;
+        }
+        let row = i / self.cols;
+        let col = i % self.cols;
+        row * self.groups_per_row() + col / GROUP
+    }
+
+    /// Dequantized value of flat element `i` (random access; use
+    /// [`dequantize_into`](Self::dequantize_into) for bulk decode).
+    #[inline]
+    pub fn value(&self, i: usize) -> f32 {
+        self.level(self.code(i)) * self.group_scale(self.group_of(i))
+    }
+
+    /// The byte slice covering codes of flat range `[a, b)`. Boundary
+    /// bytes may include a neighboring element's nibble, so equality of
+    /// these slices implies (but is not implied by) equality of the
+    /// range's codes — a conservative fast path for flip scans.
+    #[inline]
+    pub fn code_bytes(&self, a: usize, b: usize) -> &[u8] {
+        &self.codes[a / 2..(b + 1) / 2]
+    }
+
+    /// Start a grouped (MX) tensor: zeroed codes, scales to be pushed
+    /// row-major via [`push_group_scale`](Self::push_group_scale).
+    pub(crate) fn begin_grouped(&mut self, len: usize, cols: usize, levels: &'static [f32]) {
+        self.reset(len, cols, levels);
+    }
+
+    /// Start a per-tensor-scaled (INT4) tensor.
+    pub(crate) fn begin_per_tensor(
+        &mut self,
+        len: usize,
+        cols: usize,
+        levels: &'static [f32],
+        scale: f32,
+    ) {
+        self.reset(len, cols, levels);
+        self.tensor_scale = scale;
+    }
+
+    fn reset(&mut self, len: usize, cols: usize, levels: &'static [f32]) {
+        self.codes.clear();
+        self.codes.resize((len + 1) / 2, 0);
+        self.scales.clear();
+        self.tensor_scale = 1.0;
+        self.levels = levels;
+        self.len = len;
+        self.cols = cols;
+    }
+
+    pub(crate) fn push_group_scale(&mut self, s: i32) {
+        debug_assert!((-E8M0_BIAS..=E8M0_BIAS).contains(&s));
+        self.scales.push((s + E8M0_BIAS) as u8);
+    }
+
+    #[inline]
+    pub(crate) fn set_code(&mut self, i: usize, c: u8) {
+        debug_assert!(c < 16);
+        let b = &mut self.codes[i / 2];
+        if i % 2 == 0 {
+            *b = (*b & 0xF0) | c;
+        } else {
+            *b = (*b & 0x0F) | (c << 4);
+        }
+    }
+
+    /// Iterate `(group_index, flat_start, flat_end)` over this tensor's
+    /// 1x32 groups in storage order (delegates to the shared
+    /// [`group_ranges`] layout definition).
+    #[inline]
+    pub fn for_each_group<F: FnMut(usize, usize, usize)>(&self, f: F) {
+        group_ranges(self.len, self.cols, f);
+    }
+
+    /// Bulk decode into a caller-owned buffer; bit-exact to the
+    /// producing quantizer's fake-quant output.
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len);
+        if self.scales.is_empty() {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = self.level(self.code(i)) * self.tensor_scale;
+            }
+            return;
+        }
+        self.for_each_group(|g, a, b| {
+            let scale = self.group_scale(g);
+            for i in a..b {
+                out[i] = self.level(self.code(i)) * scale;
+            }
+        });
+    }
+
+    /// Allocating decode.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.len];
+        self.dequantize_into(&mut out);
+        out
+    }
+
+    /// Count elements whose dequantized value differs from `prev`'s —
+    /// the flip count of the step `prev -> self`. Groups with an
+    /// unchanged scale byte compare codes (a 16-byte memcmp per full
+    /// group when nothing flipped); groups whose scale moved compare
+    /// dequantized values, which keeps the count exactly equal to an
+    /// f32-mirror comparison even when a scale shift renumbers codes.
+    pub fn flip_count(&self, prev: &PackedMx) -> usize {
+        assert_eq!(self.len, prev.len);
+        assert_eq!(self.cols, prev.cols);
+        let mut flips = 0usize;
+        if self.scales.is_empty() || prev.scales.is_empty() {
+            for i in 0..self.len {
+                if self.value(i) != prev.value(i) {
+                    flips += 1;
+                }
+            }
+            return flips;
+        }
+        self.for_each_group(|g, a, b| {
+            flips += self.group_flips(prev, g, a, b, |_, _| ());
+        });
+        flips
+    }
+
+    /// Shared group-scan core for flip counting: returns the number of
+    /// flips in flat range `[a, b)` of group `g` and invokes
+    /// `on_flip(i, |delta|)` for each flipped element. The
+    /// equal-scale-byte fast path is only trusted below the overflow
+    /// threshold where code equality is equivalent to value equality.
+    #[inline]
+    pub(crate) fn group_flips<F: FnMut(usize, f32)>(
+        &self,
+        prev: &PackedMx,
+        g: usize,
+        a: usize,
+        b: usize,
+        mut on_flip: F,
+    ) -> usize {
+        let sb = self.scale_byte(g);
+        let exact_codes = sb == prev.scale_byte(g) && sb <= CODE_CMP_MAX_SCALE_BYTE;
+        if exact_codes && self.code_bytes(a, b) == prev.code_bytes(a, b) {
+            return 0;
+        }
+        let (sa, sp) = (self.group_scale(g), prev.group_scale(g));
+        let mut flips = 0;
+        for i in a..b {
+            let (ca, cp) = (self.code(i), prev.code(i));
+            if exact_codes && ca == cp {
+                continue;
+            }
+            let va = self.level(ca) * sa;
+            let vp = prev.level(cp) * sp;
+            if va != vp {
+                flips += 1;
+                on_flip(i, (va - vp).abs());
+            }
+        }
+        flips
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::formats::{e2m1, e3m0, Scaling};
+    use crate::quant::int4::{int4_quantize, Int4Quantizer};
+    use crate::quant::mx::{mx_quantize_cols, MxQuantizer};
+    use crate::quant::qema::{qema_quantize_cols, QemaQuantizer};
+
+    fn sample(n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i * 37) % 113) as f32 / 9.0 - 6.0).collect()
+    }
+
+    #[test]
+    fn roundtrip_matches_fake_quant_all_formats_and_scalings() {
+        for fmt in [e2m1(), e3m0()] {
+            for scaling in [Scaling::TruncationFree, Scaling::Floor] {
+                // Ragged tail: 48 cols -> 32 + 16 per row.
+                for cols in [32usize, 48, 64] {
+                    let x = sample(cols * 3);
+                    let q = MxQuantizer { fmt, scaling };
+                    let mut p = PackedMx::default();
+                    q.quantize_packed(&x, cols, &mut p);
+                    let want = mx_quantize_cols(&x, cols, fmt, scaling);
+                    assert_eq!(
+                        p.dequantize(),
+                        want,
+                        "fmt={} scaling={scaling:?} cols={cols}",
+                        fmt.name
+                    );
+                    // Trait-default dequantize is the same decode.
+                    let mut out = vec![0.0; x.len()];
+                    q.dequantize(&p, &mut out);
+                    assert_eq!(out, want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_group_roundtrips() {
+        let mut x = vec![0.0f32; 64];
+        x[40] = 3.0; // second group non-zero, first all-zero
+        let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+        let mut p = PackedMx::default();
+        q.quantize_packed(&x, 64, &mut p);
+        assert_eq!(p.dequantize(), mx_quantize_cols(&x, 64, e2m1(), Scaling::TruncationFree));
+        assert!(p.dequantize()[..32].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn qema_roundtrip_matches_fake_quant() {
+        let w = sample(96);
+        let ema: Vec<f32> = w.iter().map(|&v| v * 0.9 + 0.03).collect();
+        let fmt = e2m1();
+        let q = QemaQuantizer { fmt, scaling: Scaling::TruncationFree, ema: &ema };
+        let mut p = PackedMx::default();
+        q.quantize_packed(&w, 48, &mut p);
+        assert_eq!(
+            p.dequantize(),
+            qema_quantize_cols(&w, &ema, 48, fmt, Scaling::TruncationFree)
+        );
+    }
+
+    #[test]
+    fn int4_roundtrip_matches_fake_quant() {
+        let x = sample(37);
+        let mut p = PackedMx::default();
+        Int4Quantizer.quantize_packed(&x, 37, &mut p);
+        let want = int4_quantize(&x, None);
+        let got = p.dequantize();
+        assert_eq!(got.len(), want.len());
+        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            // modulo -0.0 == 0.0 (sign of zero is not representable in codes)
+            assert!(g == w, "i={i}: {g:?} != {w:?}");
+        }
+        assert_eq!(p.num_groups(), 0, "int4 is per-tensor scaled");
+    }
+
+    #[test]
+    fn packed_layout_and_footprint() {
+        let x = sample(96);
+        let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+        let mut p = PackedMx::default();
+        q.quantize_packed(&x, 48, &mut p);
+        assert_eq!(p.len(), 96);
+        assert_eq!(p.cols(), 48);
+        assert_eq!(p.groups_per_row(), 2);
+        assert_eq!(p.num_groups(), 4);
+        // 48 code bytes + 4 scale bytes vs 384 f32 bytes.
+        assert_eq!(p.bytes(), 96 / 2 + 4);
+        for i in 0..p.len() {
+            assert!(p.code(i) < 15, "4-bit level index");
+            assert_eq!(p.value(i), p.dequantize()[i]);
+        }
+    }
+
+    #[test]
+    fn scale_bytes_are_biased_exponents() {
+        let mut x = vec![0.0f32; 32];
+        x[0] = 6.0; // max 6 with Qp 6 -> scale exponent 0
+        let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+        let mut p = PackedMx::default();
+        q.quantize_packed(&x, 32, &mut p);
+        assert_eq!(p.scale_byte(0), E8M0_BIAS as u8);
+        assert_eq!(p.group_scale_exp(0), 0);
+        assert_eq!(p.group_scale(0), 1.0);
+    }
+
+    #[test]
+    fn flip_count_matches_value_compare() {
+        let x = sample(128);
+        // Perturb a few elements across grid thresholds.
+        let mut y = x.clone();
+        for i in (0..128).step_by(11) {
+            y[i] = y[i] * 1.3 + 0.21;
+        }
+        let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+        let (mut pa, mut pb) = (PackedMx::default(), PackedMx::default());
+        q.quantize_packed(&x, 64, &mut pa);
+        q.quantize_packed(&y, 64, &mut pb);
+        let (da, db) = (pa.dequantize(), pb.dequantize());
+        let want = da.iter().zip(&db).filter(|(a, b)| a != b).count();
+        assert_eq!(pb.flip_count(&pa), want);
+        assert_eq!(pa.flip_count(&pa), 0);
+    }
+
+    #[test]
+    fn flip_count_exact_across_scale_shift() {
+        // Doubling every element doubles the group scale but keeps all
+        // codes identical: every non-zero element flips, zeros don't.
+        let x = sample(64);
+        let y: Vec<f32> = x.iter().map(|&v| v * 2.0).collect();
+        let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+        let (mut pa, mut pb) = (PackedMx::default(), PackedMx::default());
+        q.quantize_packed(&x, 32, &mut pa);
+        q.quantize_packed(&y, 32, &mut pb);
+        for i in 0..64 {
+            assert_eq!(pa.code(i), pb.code(i), "codes invariant under x2");
+        }
+        let nonzero = pa.dequantize().iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(pb.flip_count(&pa), nonzero);
+    }
+}

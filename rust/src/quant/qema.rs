@@ -3,9 +3,13 @@
 //! Scale and bracketing candidates [q1, q2] from the *current* weight
 //! block; the choice between them from the EMA latent weight. Used by
 //! the coordinator to track the forward quantized weights of the
-//! `tetrajet_qema` variant.
+//! `tetrajet_qema` variant. [`QemaQuantizer`] binds the EMA slice so
+//! the selection rule fits the [`Quantizer`](super::packed::Quantizer)
+//! trait's `(x, cols)` signature.
 
-use super::formats::{bracket, exp2i, scale_exponent, Fp4Format, Scaling, GROUP};
+use super::formats::{bracket, Fp4Format, Scaling};
+use super::mx::for_each_group;
+use super::packed::{PackedMx, Quantizer};
 
 pub fn qema_quantize_cols(
     w: &[f32],
@@ -29,25 +33,62 @@ pub fn qema_quantize_cols_into(
 ) {
     assert_eq!(w.len(), ema.len());
     assert_eq!(w.len(), out.len());
-    assert_eq!(w.len() % cols.max(1), 0);
-    for r in 0..w.len() / cols {
-        let row = &w[r * cols..(r + 1) * cols];
-        let erow = &ema[r * cols..(r + 1) * cols];
-        let orow = &mut out[r * cols..(r + 1) * cols];
-        for g0 in (0..cols).step_by(GROUP) {
-            let g1 = (g0 + GROUP).min(cols);
-            let max_abs = row[g0..g1].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-            let scale = exp2i(scale_exponent(max_abs, fmt, scaling));
-            let inv = 1.0 / scale;
-            for i in g0..g1 {
-                let y = (row[i] * inv).clamp(fmt.qn(), fmt.qp());
-                let ye = erow[i] * inv;
-                let (q1, q2) = bracket(y, fmt);
-                // Strictly-nearer to EMA -> q1; ties -> q2 (matches ref).
-                let q = if (ye - q1).abs() < (ye - q2).abs() { q1 } else { q2 };
-                orow[i] = q * scale;
-            }
+    for_each_group(w, cols, fmt, scaling, |rng, _s, scale| {
+        let inv = 1.0 / scale;
+        for i in rng {
+            let q = qema_pick(w[i], ema[i], inv, fmt);
+            out[i] = q * scale;
         }
+    });
+}
+
+/// The Alg. 1 selection for one element: bracket the current latent,
+/// let the EMA latent choose between the candidates (strictly-nearer ->
+/// q1; ties -> q2, matching ref).
+#[inline]
+fn qema_pick(w: f32, ema: f32, inv: f32, fmt: &Fp4Format) -> f32 {
+    let y = (w * inv).clamp(fmt.qn(), fmt.qp());
+    let ye = ema * inv;
+    let (q1, q2) = bracket(y, fmt);
+    if (ye - q1).abs() < (ye - q2).abs() {
+        q1
+    } else {
+        q2
+    }
+}
+
+/// Q-EMA as a [`Quantizer`]: the EMA slice rides in the struct and must
+/// be element-aligned with every `x` passed in.
+#[derive(Debug, Clone, Copy)]
+pub struct QemaQuantizer<'e> {
+    pub fmt: &'static Fp4Format,
+    pub scaling: Scaling,
+    pub ema: &'e [f32],
+}
+
+impl Quantizer for QemaQuantizer<'_> {
+    fn name(&self) -> &'static str {
+        "qema"
+    }
+
+    fn quantize_f32(&self, x: &[f32], cols: usize, out: &mut [f32]) {
+        qema_quantize_cols_into(x, self.ema, cols, self.fmt, self.scaling, out);
+    }
+
+    fn quantize_packed(&self, x: &[f32], cols: usize, out: &mut PackedMx) {
+        assert_eq!(x.len(), self.ema.len());
+        let fmt = self.fmt;
+        out.begin_grouped(x.len(), cols, &fmt.levels);
+        for_each_group(x, cols, fmt, self.scaling, |rng, s, scale| {
+            out.push_group_scale(s);
+            let inv = 1.0 / scale;
+            for i in rng {
+                // The picked candidate is exactly a grid level, so its
+                // index decodes to the identical value.
+                let q = qema_pick(x[i], self.ema[i], inv, fmt);
+                out.set_code(i, fmt.level_index(q) as u8);
+            }
+        });
     }
 }
 

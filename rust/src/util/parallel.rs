@@ -44,6 +44,50 @@ where
     out.into_iter().map(|v| v.expect("worker wrote all slots")).collect()
 }
 
+/// Apply `f(i, &mut items[i])` over all elements with up to `workers`
+/// threads. In-place sibling of [`parallel_map_indexed`] for callers
+/// that own per-index buffers to refill (e.g. the trainer's per-segment
+/// packed quant mirror) rather than values to produce.
+pub fn parallel_for_each_mut<T, F>(items: &mut [T], workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let ptr = SendPtr(items.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = &next;
+            let f = &f;
+            let ptr: SendPtr<T> = ptr;
+            scope.spawn(move || {
+                // Bind the wrapper itself so 2021 precise capture moves
+                // the Send-able SendPtr, not its raw-pointer field.
+                let ptr = ptr;
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    // SAFETY: each index i is claimed by exactly one
+                    // worker, so the &mut references never alias; the
+                    // scope join provides the happens-before edge back
+                    // to the caller.
+                    unsafe { f(i, &mut *ptr.0.add(i)) };
+                }
+            });
+        }
+    });
+}
+
 struct SendPtr<T>(*mut T);
 // Manual impls: derive(Copy) would add a spurious `T: Copy` bound.
 impl<T> Clone for SendPtr<T> {
@@ -80,6 +124,20 @@ mod tests {
     fn single_worker_and_empty() {
         assert_eq!(parallel_map_indexed(3, 1, |i| i), vec![0, 1, 2]);
         assert_eq!(parallel_map_indexed(0, 4, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn for_each_mut_updates_every_slot() {
+        let mut v: Vec<usize> = (0..500).collect();
+        parallel_for_each_mut(&mut v, 4, |i, x| *x = i * 3 + *x);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * 4);
+        }
+        let mut small = vec![7usize];
+        parallel_for_each_mut(&mut small, 8, |_, x| *x += 1);
+        assert_eq!(small, vec![8]);
+        let mut empty: Vec<usize> = Vec::new();
+        parallel_for_each_mut(&mut empty, 4, |_, _| unreachable!());
     }
 
     #[test]

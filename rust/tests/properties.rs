@@ -2,10 +2,10 @@
 //! (using the in-repo property-test driver; proptest is unavailable
 //! offline — DESIGN.md §Substitutions).
 
-use tetrajet::metrics::{quant_confidence, OscTracker};
+use tetrajet::metrics::{quant_confidence, OscTracker, PackedOscTracker};
 use tetrajet::quant::{
     bracket, e2m1, e3m0, mx_quantize_cols, qema_quantize_cols, round_det,
-    Scaling,
+    MxQuantizer, PackedMx, QemaQuantizer, Quantizer, Scaling,
 };
 use tetrajet::testing::{check, gen_f32_vec};
 
@@ -130,6 +130,136 @@ fn prop_confidence_in_unit_interval() {
                 }
             }
             true
+        },
+    );
+}
+
+#[test]
+fn prop_packed_roundtrip_is_bit_exact() {
+    // dequantize(quantize_packed(x)) == mx_quantize_cols(x) for both
+    // formats, both scalings, and ragged tails (cols % 32 != 0).
+    for fmt in [e2m1(), e3m0()] {
+        for scaling in [Scaling::TruncationFree, Scaling::Floor] {
+            for cols in [32usize, 48, 7] {
+                check(
+                    "packed roundtrip",
+                    120,
+                    |r| gen_f32_vec(r, cols * 2, 2.0),
+                    |x| {
+                        let q = MxQuantizer { fmt, scaling };
+                        let mut p = PackedMx::default();
+                        q.quantize_packed(x, cols, &mut p);
+                        let mut deq = vec![0.0; x.len()];
+                        q.dequantize(&p, &mut deq);
+                        deq == mx_quantize_cols(x, cols, fmt, scaling)
+                    },
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_packed_roundtrip_all_zero_groups() {
+    // All-zero groups use the epsilon scale; codes must still decode to
+    // exact zeros.
+    check(
+        "packed zero groups",
+        200,
+        |r| {
+            let mut x = gen_f32_vec(r, 96, 1.0);
+            // Zero out a whole group and a ragged tail group.
+            for v in &mut x[..32] {
+                *v = 0.0;
+            }
+            for v in &mut x[64..] {
+                *v = 0.0;
+            }
+            x
+        },
+        |x| {
+            let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+            let mut p = PackedMx::default();
+            q.quantize_packed(x, 96, &mut p);
+            let deq = p.dequantize();
+            deq == mx_quantize_cols(x, 96, e2m1(), Scaling::TruncationFree)
+                && deq[..32].iter().all(|&v| v == 0.0)
+        },
+    );
+}
+
+#[test]
+fn prop_packed_qema_roundtrip_is_bit_exact() {
+    check(
+        "packed qema roundtrip",
+        150,
+        |r| {
+            let w = gen_f32_vec(r, 64, 1.0);
+            let ema: Vec<f32> = w.iter().map(|&v| v + r.normal() * 0.1).collect();
+            (w, ema)
+        },
+        |(w, ema)| {
+            let fmt = e2m1();
+            let q = QemaQuantizer { fmt, scaling: Scaling::TruncationFree, ema };
+            let mut p = PackedMx::default();
+            q.quantize_packed(w, 32, &mut p);
+            p.dequantize() == qema_quantize_cols(w, ema, 32, fmt, Scaling::TruncationFree)
+        },
+    );
+}
+
+#[test]
+fn prop_packed_flip_counts_match_f32_tracker() {
+    // Recorded random-walk trajectory over two segments with different
+    // (ragged) cols: the code-comparing tracker must report exactly the
+    // flip frequencies, ratios and oscillating counts of the f32 one.
+    const COLS_A: usize = 32;
+    const LEN_A: usize = 64;
+    const COLS_B: usize = 17;
+    const LEN_B: usize = 34;
+    const STEPS: usize = 6;
+    check(
+        "packed flip parity",
+        40,
+        |r| {
+            let mut traj = vec![gen_f32_vec(r, LEN_A + LEN_B, 1.0)];
+            for _ in 0..STEPS {
+                let last = traj.last().unwrap().clone();
+                let next: Vec<f32> =
+                    last.iter().map(|&v| v + r.normal() * 0.05).collect();
+                traj.push(next);
+            }
+            traj
+        },
+        |traj| {
+            let fmt = e2m1();
+            let q = MxQuantizer { fmt, scaling: Scaling::TruncationFree };
+            let fake = |w: &[f32]| {
+                let mut out = mx_quantize_cols(&w[..LEN_A], COLS_A, fmt, Scaling::TruncationFree);
+                out.extend(mx_quantize_cols(&w[LEN_A..], COLS_B, fmt, Scaling::TruncationFree));
+                out
+            };
+            let pack = |w: &[f32]| {
+                let (mut pa, mut pb) = (PackedMx::default(), PackedMx::default());
+                q.quantize_packed(&w[..LEN_A], COLS_A, &mut pa);
+                q.quantize_packed(&w[LEN_A..], COLS_B, &mut pb);
+                vec![pa, pb]
+            };
+            let mut tf = OscTracker::new(&traj[0], &fake(&traj[0]));
+            let mut tp = PackedOscTracker::new(&traj[0], &pack(&traj[0]));
+            for w in &traj[1..] {
+                tf.observe(w, &fake(w));
+                tp.observe(w, &pack(w));
+            }
+            let (mut ff, mut fp) = (Vec::new(), Vec::new());
+            tf.flip_freq_into(&mut ff);
+            tp.flip_freq_into(&mut fp);
+            if ff != fp || tf.ratios() != tp.ratios() {
+                return false;
+            }
+            [0.0f32, 1.0, 16.0]
+                .iter()
+                .all(|&th| tf.oscillating_count(th) == tp.oscillating_count(th))
         },
     );
 }

@@ -1,0 +1,200 @@
+//! Minimal offline stand-in for the `anyhow` crate (the build image
+//! cannot reach crates.io). Implements exactly the surface this repo
+//! uses: [`Error`], [`Result`], `anyhow!`, `bail!`,
+//! [`Context::context`]/[`Context::with_context`] on both plain
+//! `Result<_, E: std::error::Error>` and `anyhow::Result`, `{:#}`
+//! cause-chain formatting, and a `Debug` impl with a "Caused by" list.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error with a message and an optional boxed cause chain. Like the
+/// real `anyhow::Error`, it deliberately does NOT implement
+/// `std::error::Error`, so the blanket `From<E: std::error::Error>`
+/// impl stays coherent.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from a display-able message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Construct from a concrete error, preserving it as the cause.
+    pub fn new<E: StdError + Send + Sync + 'static>(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+
+    /// Wrap with an outer context message; `self` becomes the cause.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: c.to_string(), source: Some(Box::new(Chained(self))) }
+    }
+
+    fn source_dyn(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_ref().map(|b| &**b as &(dyn StdError + 'static))
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::new(e)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut src = self.source_dyn();
+            while let Some(e) = src {
+                write!(f, ": {e}")?;
+                src = e.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src = self.source_dyn();
+        if src.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = src {
+            write!(f, "\n    {e}")?;
+            src = e.source();
+        }
+        Ok(())
+    }
+}
+
+/// Adapter that lets an [`Error`] sit inside a `dyn std::error::Error`
+/// cause chain without `Error` itself implementing the trait.
+struct Chained(Error);
+
+impl fmt::Display for Chained {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)
+    }
+}
+
+impl fmt::Debug for Chained {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl StdError for Chained {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.0.source_dyn()
+    }
+}
+
+/// `.context(...)` / `.with_context(...)` on results. Mirrors anyhow's
+/// trick: one generic impl over an internal `IntoError` bound that both
+/// std errors and `Error` itself satisfy.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+pub trait IntoError {
+    fn into_error(self) -> Error;
+}
+
+impl<E: StdError + Send + Sync + 'static> IntoError for E {
+    fn into_error(self) -> Error {
+        Error::new(self)
+    }
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+impl<T, E: IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn context_chains_and_alternate_formats() {
+        let r: Result<()> = Err(io_err()).context("loading manifest");
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: missing file");
+        let e2 = Err::<(), Error>(e).with_context(|| "opening artifacts").unwrap_err();
+        assert_eq!(format!("{e2:#}"), "opening artifacts: loading manifest: missing file");
+        assert!(format!("{e2:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn macros_and_question_mark() {
+        fn inner(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("bad value {}", 7);
+            }
+            let parsed: u32 = "42".parse()?; // From<ParseIntError>
+            Ok(parsed)
+        }
+        assert_eq!(inner(false).unwrap(), 42);
+        assert_eq!(format!("{}", inner(true).unwrap_err()), "bad value 7");
+        let e = anyhow!("x = {}", 1);
+        assert_eq!(e.to_string(), "x = 1");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing here").unwrap_err();
+        assert_eq!(e.to_string(), "nothing here");
+    }
+}
