@@ -5,8 +5,10 @@ RUST_DIR := rust
 
 .PHONY: tier1 build test fmt fmt-check bench artifacts
 
+# `cargo bench --no-run` keeps the bench code compiling without paying
+# for a full measurement sweep.
 tier1:
-	cd $(RUST_DIR) && cargo build --release && cargo test -q && cargo fmt --check
+	cd $(RUST_DIR) && cargo build --release && cargo test -q && cargo bench --no-run && cargo fmt --check
 
 build:
 	cd $(RUST_DIR) && cargo build --release

@@ -6,17 +6,80 @@
 //!
 //! ```bash
 //! cargo run --release --example oscillation_analysis -- --steps 200
+//! # or skip training and inspect/serve an existing packed checkpoint:
+//! cargo run --release --example oscillation_analysis -- --ckpt results/oscillation.ckpt
 //! ```
+//!
+//! With `--ckpt` pointing at a TJCKPT02 file (written below, or by
+//! `tetrajet train --ckpt-packed`), the example loads the model through
+//! the packed serving path — codes + E8M0 scales straight into the
+//! fused dequant-matmul engine, no HLO artifacts and no f32 weight
+//! mirror — and reports serving accuracy/latency.
 
 use anyhow::Result;
 use tetrajet::config::{MetricsCfg, TrainConfig};
-use tetrajet::coordinator::Trainer;
-use tetrajet::runtime::{artifacts, cpu_client, ModelArtifacts};
+use tetrajet::coordinator::{Trainer, TrainState};
+use tetrajet::data::{EvalSet, SynthVision};
+use tetrajet::runtime::{artifacts, cpu_client, Manifest, ModelArtifacts};
+use tetrajet::serve::{PackedVit, ServeConfig, ServeEngine};
 use tetrajet::util::cli::Args;
 use tetrajet::util::stats::Histogram;
 
+/// Serve a packed checkpoint: the demonstration of the TJCKPT02 ->
+/// PackedVit -> ServeEngine API from example code. `variant` must be
+/// the one the checkpoint was trained with — its manifest supplies the
+/// layer geometry and the forward quant recipe.
+fn serve_packed(ckpt: &str, model: &str, batch: usize, variant: &str) -> Result<()> {
+    let root = artifacts::default_root();
+    let dir = artifacts::variant_dir(&root, model, batch, variant);
+    let man = Manifest::load(&dir.join("manifest.json"))?;
+    let (state, segs) = TrainState::load_with_packed(std::path::Path::new(ckpt))?;
+    println!(
+        "loaded {} (step {}): {} packed segments, {} f32 params",
+        ckpt,
+        state.step,
+        segs.len(),
+        state.params.len()
+    );
+    let vit = PackedVit::from_checkpoint(&man, &state.params, Some(&state.ema), &segs)?;
+    println!(
+        "resident quantized weights: {:.1} KiB packed vs {:.1} KiB f32 mirror \
+         (fully packed: {})",
+        vit.quantized_weight_bytes() as f64 / 1024.0,
+        vit.f32_mirror_bytes() as f64 / 1024.0,
+        vit.is_fully_packed()
+    );
+    let engine = ServeEngine::new(vit, ServeConfig::default())?;
+    let cfg = TrainConfig::default_run(variant);
+    let ds = SynthVision::new(
+        man.model.img,
+        man.model.classes,
+        cfg.data_seed,
+        cfg.train_size,
+        cfg.val_size,
+    );
+    let t0 = std::time::Instant::now();
+    let ev = engine.eval(&EvalSet::new(ds, man.batch, 256));
+    println!(
+        "packed serve eval: top-1 {:.2}%  val-loss {:.4}  ({} samples in {:.1} ms)",
+        ev.acc_pct,
+        ev.mean_loss,
+        ev.samples,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::parse_tokens(&std::env::args().skip(1).collect::<Vec<_>>(), false)?;
+    if let Some(ckpt) = args.get("ckpt") {
+        return serve_packed(
+            ckpt,
+            args.get_or("model", "vit-micro"),
+            args.get_usize("batch", 16)?,
+            args.get_or("variant", "tetrajet"),
+        );
+    }
     let steps = args.get_usize("steps", 200)?;
     let root = artifacts::default_root();
     let client = cpu_client()?;
@@ -92,5 +155,12 @@ fn main() -> Result<()> {
     }
     tr.rec.save_json(std::path::Path::new("results/oscillation_analysis.json"))?;
     println!("\nfull series saved to results/oscillation_analysis.json");
+
+    // Export the packed mirror as a TJCKPT02 checkpoint and round-trip
+    // it through the serving subsystem.
+    let ckpt = std::path::Path::new("results/oscillation.ckpt");
+    tr.save_packed_checkpoint(ckpt)?;
+    println!("packed checkpoint saved to {} — serving it:", ckpt.display());
+    serve_packed("results/oscillation.ckpt", "vit-micro", 16, "tetrajet")?;
     Ok(())
 }

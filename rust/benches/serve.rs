@@ -1,0 +1,109 @@
+//! Serving-path benchmarks: the fused packed GEMM against the
+//! dequantize-then-matmul baseline on ViT-block-sized layers, plus
+//! end-to-end engine throughput at batch 1/16/64.
+//!
+//! Engine results are also emitted as machine-readable `BENCH {...}`
+//! JSON lines (one per batch size) so CI can track throughput/latency.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use harness::Bench;
+use tetrajet::quant::{e2m1, MxQuantizer, PackedMx, Quantizer, Scaling};
+use tetrajet::serve::{
+    fused_matmul, matmul_ref, ActQuant, PackedVit, ServeConfig, ServeEngine,
+    ServeGeom, WeightQuant,
+};
+use tetrajet::util::json::{num, obj, s};
+use tetrajet::util::rng::Rng;
+
+fn main() {
+    let b = Bench::new("serve");
+    let mut rng = Rng::new(42);
+    let workers = 4;
+
+    // --- fused GEMM vs dequant + matmul ---
+    // vit-micro block shapes at batch 16: n = 16 * 65 tokens.
+    let n = 16 * 65;
+    for (label, rows, d) in
+        [("qkv 192x64", 192usize, 64usize), ("fc1 256x64", 256, 64), ("fc2 64x256", 64, 256)]
+    {
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..rows * d).map(|_| rng.normal() * 0.1).collect();
+        let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+        let mut p = PackedMx::default();
+        q.quantize_packed(&w, d, &mut p);
+        let mut wbuf = vec![0.0f32; rows * d];
+        // Bit-exactness of the two paths, re-asserted where measured.
+        p.dequantize_into(&mut wbuf);
+        assert_eq!(
+            fused_matmul(&x, n, &p, 0, rows, None, workers),
+            matmul_ref(&x, n, d, &wbuf, rows, None),
+            "fused must match dequant+matmul ({label})"
+        );
+        let items = (n * rows * d) as u64;
+        b.case(&format!("fused_packed {label} (n={n})"), items, || {
+            std::hint::black_box(fused_matmul(&x, n, &p, 0, rows, None, workers));
+        });
+        b.case(&format!("dequant+matmul {label} (n={n})"), items, || {
+            p.dequantize_into(&mut wbuf);
+            std::hint::black_box(matmul_ref(&x, n, d, &wbuf, rows, None));
+        });
+    }
+
+    // --- engine throughput at batch 1 / 16 / 64 ---
+    let geom = ServeGeom::new(32, 4, 64, 4, 4, 10, 4); // vit-micro
+    let params: Vec<f32> = (0..geom.total_params()).map(|_| rng.normal() * 0.05).collect();
+    let fmt = e2m1();
+    let model = PackedVit::build(
+        geom.clone(),
+        &params,
+        None,
+        WeightQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+        ActQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+    )
+    .expect("synthetic vit-micro");
+    println!(
+        "engine: {} B packed weights ({:.1}x below f32 mirror)",
+        model.quantized_weight_bytes(),
+        model.f32_mirror_bytes() as f64 / model.quantized_weight_bytes() as f64
+    );
+    let px = geom.img * geom.img * 3;
+    for batch in [1usize, 16, 64] {
+        let engine = ServeEngine::new(
+            model.clone(),
+            ServeConfig { micro_batch: batch.min(16), workers },
+        )
+        .unwrap();
+        let x: Vec<f32> = (0..batch * px).map(|_| rng.normal()).collect();
+        // Warmup + timed samples (the harness reports wall times; the
+        // JSON line wants latency percentiles per batch size).
+        std::hint::black_box(engine.infer_logits(&x, batch));
+        let iters = (64 / batch).clamp(3, 32);
+        let mut samples: Vec<f64> = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(engine.infer_logits(&x, batch));
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = samples[samples.len() / 2];
+        let max = samples[samples.len() - 1];
+        b.case(&format!("engine vit-micro batch {batch}"), batch as u64, || {
+            std::hint::black_box(engine.infer_logits(&x, batch));
+        });
+        let j = obj(vec![
+            ("bench", s("serve")),
+            ("case", s("engine_throughput")),
+            ("model", s("vit-micro")),
+            ("batch", num(batch as f64)),
+            ("imgs_per_s", num(batch as f64 / med)),
+            ("latency_ms_p50", num(med * 1e3)),
+            ("latency_ms_max", num(max * 1e3)),
+            ("packed_weight_bytes", num(model.quantized_weight_bytes() as f64)),
+        ]);
+        println!("BENCH {}", j.to_string());
+    }
+}

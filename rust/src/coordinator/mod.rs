@@ -25,5 +25,5 @@ pub mod trainer;
 pub use freeze::FreezeController;
 pub use qramping::QRampingController;
 pub use recorder::Recorder;
-pub use state::TrainState;
+pub use state::{PackedSeg, TrainState};
 pub use trainer::{EvalResult, Trainer};

@@ -4,13 +4,52 @@
 //! (state, batch, scalars) -> state'. Checkpoints are a simple
 //! versioned little-endian binary: good enough for resumable runs and
 //! the analysis examples, with no external dependencies.
+//!
+//! Two on-disk versions exist:
+//!
+//! * **TJCKPT01** — the original format: header + eight little-endian
+//!   f32 sections (params, opt moments, EMA, Q-Ramping, Freeze).
+//! * **TJCKPT02** — TJCKPT01 plus an optional *packed-weights* section:
+//!   per quantized manifest segment, the 4-bit level codes and E8M0
+//!   scale bytes of the trainer's [`PackedMx`] mirror (written via
+//!   `train --ckpt-packed`). The serving subsystem ([`crate::serve`])
+//!   loads this section directly and never re-materializes the f32
+//!   quantized weights. [`TrainState::load`] accepts both versions.
+//!
+//! TJCKPT02 packed-section layout (all integers little-endian):
+//!
+//! ```text
+//! u32 nseg
+//! per segment:
+//!   u16 name_len, name bytes (utf-8, the manifest segment name)
+//!   u64 offset   (flat element offset into the quantized prefix)
+//!   u64 len      (elements)
+//!   u64 cols     (trailing group axis)
+//!   u8  table_id (level-decode table: 0=e2m1, 1=e3m0, 2=int4)
+//!   f32 tensor_scale (per-tensor mode; 1.0 in grouped mode)
+//!   u64 nscales, scale bytes (E8M0, one per 1x32 group; 0 = per-tensor)
+//!   u64 ncodes,  code bytes  (two 4-bit level indices per byte)
+//! ```
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-const MAGIC: &[u8; 8] = b"TJCKPT01";
+use crate::quant::{level_table_from_id, level_table_id, PackedMx};
+
+const MAGIC_V1: &[u8; 8] = b"TJCKPT01";
+const MAGIC_V2: &[u8; 8] = b"TJCKPT02";
+
+/// One quantized manifest segment in packed form, as stored in a
+/// TJCKPT02 checkpoint: the segment's name, its flat offset into the
+/// quantized prefix, and the codes + scales themselves.
+#[derive(Debug, Clone)]
+pub struct PackedSeg {
+    pub name: String,
+    pub offset: usize,
+    pub packed: PackedMx,
+}
 
 #[derive(Debug, Clone)]
 pub struct TrainState {
@@ -27,6 +66,42 @@ pub struct TrainState {
     pub freeze_mask: Vec<f32>,
     pub freeze_value: Vec<f32>,
     pub step: usize,
+}
+
+fn write_f32s<W: Write>(w: &mut W, buf: &[f32]) -> Result<()> {
+    // Chunked so a 100M-param vector doesn't double resident memory.
+    let mut bytes = Vec::with_capacity(4 * buf.len().min(1 << 16));
+    for chunk in buf.chunks(1 << 16) {
+        bytes.clear();
+        for &v in chunk {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+fn write_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Bound all length prefixes read from a checkpoint so a corrupt file
+/// fails with a clear error instead of a giant allocation.
+const MAX_SECTION: u64 = 1 << 33;
+
+fn read_len<R: Read>(r: &mut R, what: &str) -> Result<usize> {
+    let n = read_u64(r)?;
+    if n > MAX_SECTION {
+        bail!("implausible {what} length {n}");
+    }
+    Ok(n as usize)
 }
 
 impl TrainState {
@@ -56,14 +131,8 @@ impl TrainState {
         &self.params[..self.qw_total()]
     }
 
-    pub fn save(&self, path: &Path) -> Result<()> {
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("creating checkpoint {}", path.display()))?;
-        f.write_all(MAGIC)?;
-        f.write_all(&(self.step as u64).to_le_bytes())?;
-        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
-        f.write_all(&(self.qw_total() as u64).to_le_bytes())?;
-        for buf in [
+    fn sections(&self) -> [&Vec<f32>; 8] {
+        [
             &self.params,
             &self.m,
             &self.v,
@@ -72,31 +141,95 @@ impl TrainState {
             &self.nw,
             &self.freeze_mask,
             &self.freeze_value,
-        ] {
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(buf.as_ptr() as *const u8, buf.len() * 4)
-            };
-            f.write_all(bytes)?;
+        ]
+    }
+
+    fn write_header_and_sections<W: Write>(&self, f: &mut W, magic: &[u8; 8]) -> Result<()> {
+        f.write_all(magic)?;
+        write_u64(f, self.step as u64)?;
+        write_u64(f, self.params.len() as u64)?;
+        write_u64(f, self.qw_total() as u64)?;
+        for buf in self.sections() {
+            write_f32s(f, buf)?;
         }
         Ok(())
     }
 
+    /// Plain TJCKPT01 checkpoint (no packed section) — loadable by any
+    /// version of the tooling.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating checkpoint {}", path.display()))?;
+        self.write_header_and_sections(&mut f, MAGIC_V1)
+    }
+
+    /// TJCKPT02 checkpoint carrying the packed quantized-weight mirror
+    /// alongside the f32 training state. `segs` normally comes from
+    /// [`Trainer::packed_segments`](crate::coordinator::Trainer::packed_segments);
+    /// an empty slice writes a valid TJCKPT02 with zero packed segments
+    /// (e.g. the fp32 variant, which has no quant mirror).
+    pub fn save_packed(&self, path: &Path, segs: &[PackedSeg]) -> Result<()> {
+        for seg in segs {
+            if level_table_id(seg.packed.levels()).is_none() {
+                bail!("segment {:?} uses an unregistered level table", seg.name);
+            }
+            if seg.offset + seg.packed.len() > self.qw_total() {
+                bail!(
+                    "segment {:?} [{}..{}) exceeds quantized prefix {}",
+                    seg.name,
+                    seg.offset,
+                    seg.offset + seg.packed.len(),
+                    self.qw_total()
+                );
+            }
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating checkpoint {}", path.display()))?;
+        self.write_header_and_sections(&mut f, MAGIC_V2)?;
+        f.write_all(&(segs.len() as u32).to_le_bytes())?;
+        for seg in segs {
+            let name = seg.name.as_bytes();
+            if name.len() > u16::MAX as usize {
+                bail!("segment name too long: {} bytes", name.len());
+            }
+            f.write_all(&(name.len() as u16).to_le_bytes())?;
+            f.write_all(name)?;
+            write_u64(&mut f, seg.offset as u64)?;
+            write_u64(&mut f, seg.packed.len() as u64)?;
+            write_u64(&mut f, seg.packed.cols() as u64)?;
+            f.write_all(&[level_table_id(seg.packed.levels()).unwrap()])?;
+            f.write_all(&seg.packed.tensor_scale().to_le_bytes())?;
+            write_u64(&mut f, seg.packed.scale_bytes().len() as u64)?;
+            f.write_all(seg.packed.scale_bytes())?;
+            write_u64(&mut f, seg.packed.codes().len() as u64)?;
+            f.write_all(seg.packed.codes())?;
+        }
+        Ok(())
+    }
+
+    /// Load either checkpoint version, discarding any packed section.
     pub fn load(path: &Path) -> Result<TrainState> {
+        Ok(TrainState::load_with_packed(path)?.0)
+    }
+
+    /// Load either checkpoint version; TJCKPT02 also yields the packed
+    /// quantized-weight segments (empty for TJCKPT01). Errors on
+    /// truncated files and on trailing bytes after the last section, so
+    /// concatenated or partially-written checkpoints fail loudly.
+    pub fn load_with_packed(path: &Path) -> Result<(TrainState, Vec<PackedSeg>)> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening checkpoint {}", path.display()))?;
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("bad checkpoint magic in {}", path.display());
-        }
-        let mut u64buf = [0u8; 8];
-        f.read_exact(&mut u64buf)?;
-        let step = u64::from_le_bytes(u64buf) as usize;
-        f.read_exact(&mut u64buf)?;
-        let p = u64::from_le_bytes(u64buf) as usize;
-        f.read_exact(&mut u64buf)?;
-        let qw = u64::from_le_bytes(u64buf) as usize;
-        if qw > p || p > (1 << 33) {
+        let v2 = match &magic {
+            m if m == MAGIC_V1 => false,
+            m if m == MAGIC_V2 => true,
+            _ => bail!("bad checkpoint magic in {}", path.display()),
+        };
+        let step = read_u64(&mut f)? as usize;
+        let p = read_len(&mut f, "params")?;
+        let qw = read_len(&mut f, "qw")?;
+        if qw > p {
             bail!("implausible checkpoint sizes p={p} qw={qw}");
         }
         let mut read_vec = |n: usize| -> Result<Vec<f32>> {
@@ -107,7 +240,7 @@ impl TrainState {
                 .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect())
         };
-        Ok(TrainState {
+        let state = TrainState {
             params: read_vec(p)?,
             m: read_vec(p)?,
             v: read_vec(p)?,
@@ -117,13 +250,70 @@ impl TrainState {
             freeze_mask: read_vec(qw)?,
             freeze_value: read_vec(qw)?,
             step,
-        })
+        };
+        let mut segs = Vec::new();
+        if v2 {
+            let mut b4 = [0u8; 4];
+            f.read_exact(&mut b4).context("packed section count")?;
+            let nseg = u32::from_le_bytes(b4);
+            for _ in 0..nseg {
+                let mut b2 = [0u8; 2];
+                f.read_exact(&mut b2)?;
+                let mut name = vec![0u8; u16::from_le_bytes(b2) as usize];
+                f.read_exact(&mut name)?;
+                let name = String::from_utf8(name).context("packed segment name")?;
+                let offset = read_len(&mut f, "segment offset")?;
+                let len = read_len(&mut f, "segment len")?;
+                let cols = read_len(&mut f, "segment cols")?;
+                // Geometry gates the allocations below: a corrupt
+                // length prefix must fail here, not as a giant vec.
+                if offset + len > qw {
+                    bail!("segment {name:?} [{offset}..{}) exceeds qw {qw}", offset + len);
+                }
+                let mut b1 = [0u8; 1];
+                f.read_exact(&mut b1)?;
+                let Some(levels) = level_table_from_id(b1[0]) else {
+                    bail!("segment {name:?}: unknown level table id {}", b1[0]);
+                };
+                f.read_exact(&mut b4)?;
+                let tensor_scale = f32::from_le_bytes(b4);
+                let nscales = read_len(&mut f, "segment scales")?;
+                if nscales > len {
+                    bail!("segment {name:?}: {nscales} scale bytes for {len} elements");
+                }
+                let mut scales = vec![0u8; nscales];
+                f.read_exact(&mut scales)?;
+                let ncodes = read_len(&mut f, "segment codes")?;
+                if ncodes != (len + 1) / 2 {
+                    bail!("segment {name:?}: {ncodes} code bytes for {len} elements");
+                }
+                let mut codes = vec![0u8; ncodes];
+                f.read_exact(&mut codes)?;
+                let packed = PackedMx::from_parts(len, cols, codes, scales, tensor_scale, levels)
+                    .with_context(|| format!("packed segment {name:?}"))?;
+                segs.push(PackedSeg { name, offset, packed });
+            }
+        }
+        // Harden against truncated/concatenated files: the format is
+        // self-delimiting, so any trailing byte means corruption.
+        let mut extra = [0u8; 1];
+        match f.read(&mut extra)? {
+            0 => Ok((state, segs)),
+            _ => bail!("trailing bytes after last section in {}", path.display()),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::{e2m1, MxQuantizer, Quantizer, Scaling};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("tj_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
 
     #[test]
     fn new_state_invariants() {
@@ -137,9 +327,7 @@ mod tests {
 
     #[test]
     fn checkpoint_roundtrip() {
-        let dir = std::env::temp_dir().join("tj_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("s.ckpt");
+        let path = tmp("s.ckpt");
         let mut s = TrainState::new((0..10).map(|i| i as f32 * 0.5).collect(), 4);
         s.step = 77;
         s.nw[1] = 6.0;
@@ -154,12 +342,102 @@ mod tests {
     }
 
     #[test]
+    fn save_writes_explicit_little_endian() {
+        // The header is followed by params[0]; byte order must be LE
+        // regardless of host endianness (the old unsafe cast was not).
+        let path = tmp("le.ckpt");
+        let mut s = TrainState::new(vec![0.0; 2], 1);
+        s.params[0] = 1.5f32;
+        s.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], MAGIC_V1);
+        assert_eq!(&bytes[32..36], &1.5f32.to_le_bytes());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn load_rejects_garbage() {
-        let dir = std::env::temp_dir().join("tj_ckpt_test2");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.ckpt");
+        let path = tmp("bad.ckpt");
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
         assert!(TrainState::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_trailing_bytes() {
+        let path = tmp("trail.ckpt");
+        let s = TrainState::new(vec![1.0; 6], 2);
+        s.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.push(0xAB);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = TrainState::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_truncated_packed_section() {
+        let path = tmp("trunc.ckpt");
+        let s = TrainState::new(vec![0.25; 64], 64);
+        let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+        let mut p = PackedMx::default();
+        q.quantize_packed(s.qw(), 32, &mut p);
+        let segs = vec![PackedSeg { name: "w".into(), offset: 0, packed: p }];
+        s.save_packed(&path, &segs).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(TrainState::load_with_packed(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn packed_checkpoint_roundtrip_bit_exact() {
+        let path = tmp("packed.ckpt");
+        let n = 96;
+        let params: Vec<f32> = (0..n).map(|i| ((i * 37) % 113) as f32 / 9.0 - 6.0).collect();
+        let mut s = TrainState::new(params, 64);
+        s.step = 5;
+        let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+        let mut p = PackedMx::default();
+        q.quantize_packed(&s.qw()[..64], 32, &mut p);
+        let segs = vec![PackedSeg { name: "blocks.qkv_w".into(), offset: 0, packed: p.clone() }];
+        s.save_packed(&path, &segs).unwrap();
+
+        let (t, back) = TrainState::load_with_packed(&path).unwrap();
+        assert_eq!(t.params, s.params);
+        assert_eq!(t.step, 5);
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].name, "blocks.qkv_w");
+        assert_eq!(back[0].offset, 0);
+        assert_eq!(back[0].packed.codes(), p.codes());
+        assert_eq!(back[0].packed.scale_bytes(), p.scale_bytes());
+        assert_eq!(back[0].packed.dequantize(), p.dequantize());
+        // `load` (v1 API) still works on v2 files, dropping the section.
+        assert_eq!(TrainState::load(&path).unwrap().params, s.params);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_files_still_load_after_v2() {
+        let path = tmp("v1.ckpt");
+        let s = TrainState::new(vec![0.5; 10], 4);
+        s.save(&path).unwrap();
+        let (t, segs) = TrainState::load_with_packed(&path).unwrap();
+        assert_eq!(t.params, s.params);
+        assert!(segs.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_packed_rejects_out_of_range_segment() {
+        let path = tmp("oob.ckpt");
+        let s = TrainState::new(vec![0.5; 40], 32);
+        let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+        let mut p = PackedMx::default();
+        q.quantize_packed(&s.qw()[..32], 32, &mut p);
+        let segs = vec![PackedSeg { name: "w".into(), offset: 8, packed: p }];
+        assert!(s.save_packed(&path, &segs).is_err());
         std::fs::remove_file(&path).ok();
     }
 }

@@ -13,7 +13,7 @@ use crate::config::{Policy, TrainConfig};
 use crate::coordinator::freeze::FreezeController;
 use crate::coordinator::qramping::QRampingController;
 use crate::coordinator::recorder::Recorder;
-use crate::coordinator::state::TrainState;
+use crate::coordinator::state::{PackedSeg, TrainState};
 use crate::data::{Batcher, EvalSet, SynthVision};
 use crate::metrics::{
     latents, quant_confidence, OscTracker, PackedOscTracker, RateTracker,
@@ -273,6 +273,33 @@ impl<'a> Trainer<'a> {
     /// manifest segment (empty buffers for the identity mirror).
     pub fn packed_wq(&self) -> &[PackedMx] {
         &self.packed
+    }
+
+    /// Refresh the packed mirror and snapshot it as named checkpoint
+    /// segments (the TJCKPT02 packed section). Empty for the identity
+    /// (fp32) mirror, which has no packed form.
+    pub fn packed_segments(&mut self) -> Vec<PackedSeg> {
+        if self.mirror == WqMirror::Identity {
+            return Vec::new();
+        }
+        self.mirror_wq_inner(false);
+        self.arts
+            .manifest
+            .quantized_segments()
+            .zip(&self.packed)
+            .map(|(seg, p)| PackedSeg {
+                name: seg.name.clone(),
+                offset: seg.offset,
+                packed: p.clone(),
+            })
+            .collect()
+    }
+
+    /// Write a TJCKPT02 checkpoint carrying the packed quantized-weight
+    /// mirror, the input of the native serving path (`tetrajet serve`).
+    pub fn save_packed_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        let segs = self.packed_segments();
+        self.state.save_packed(path, &segs)
     }
 
     /// Latent weights / confidences over all quantized segments.

@@ -16,6 +16,11 @@
 //!   confidence, oscillation ratio), checkpoints, CLI and the experiment
 //!   harness that regenerates every table and figure of the paper.
 //!
+//! On top of training sits the packed-native serving subsystem
+//! ([`serve`]): TJCKPT02 checkpoints carry the packed codes, and a
+//! fused group-wise dequant-matmul drives a forward-only ViT engine
+//! that never materializes an f32 weight mirror.
+//!
 //! Inside L3 the quant stack ([`quant`]) has two faces behind one
 //! [`quant::Quantizer`] trait: the legacy f32 fake-quant mirror
 //! (golden-tested against the python oracle) and the packed 4-bit core
@@ -36,5 +41,6 @@ pub mod experiments;
 pub mod metrics;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod util;

@@ -17,6 +17,7 @@ tetrajet — Oscillation-Reduced MXFP4 Training (TetraJet, ICML 2025)
 subcommands:
   train          train one configuration
   eval           evaluate a checkpoint
+  serve          packed-native inference over a checkpoint (no XLA)
   exp <id>       run an experiment harness (table1..table7, fig2..fig6, all)
   list-variants  print all known method variants
   help           this text
@@ -38,11 +39,28 @@ train options:
   --eval-samples N  validation samples (default 512)
   --seed N          init seed (default 0)
   --ckpt-out PATH   save final checkpoint
+  --ckpt-packed     write a TJCKPT02 checkpoint carrying the packed
+                    4-bit quant mirror (input of `serve`/`eval --packed`)
   --metrics LEVEL   off | standard | full (default off)
 
 eval options:
   --variant NAME    method variant artifact to evaluate with
   --ckpt PATH       checkpoint produced by train --ckpt-out
+  --packed          evaluate through the packed serving engine (fused
+                    dequant-matmul over codes; needs only the manifest,
+                    not the compiled HLO)
+  --verify-mirror   with --packed: also run the dequantize-then-matmul
+                    mirror and assert bit-identical accuracy/loss
+
+serve options:
+  --ckpt PATH       checkpoint (TJCKPT02 serves codes directly;
+                    TJCKPT01 re-quantizes the f32 params)
+  --variant NAME    manifest to take geometry/recipe from
+  --requests N      synthetic request count (default 32)
+  --request-size N  images per request (default 4)
+  --micro-batch N   engine micro-batch (default: artifact batch)
+  --workers N       kernel worker threads (default: half the cores)
+  --eval-samples N  also report accuracy on N val samples (default 256)
 
 exp options:
   --quick           reduced steps/eval for smoke runs
@@ -90,6 +108,7 @@ fn run() -> Result<()> {
         }
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
         "exp" => cmd_exp(&args),
         other => bail!("unknown subcommand {other:?}\n{USAGE}"),
     }
@@ -133,6 +152,9 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let params = artifacts::run_init(&client, &root, &model, cfg.init_seed)?;
     let ckpt_out = args.get("ckpt-out").map(std::path::PathBuf::from);
+    if args.has_flag("ckpt-packed") && ckpt_out.is_none() {
+        bail!("--ckpt-packed requires --ckpt-out PATH");
+    }
     let mut tr = Trainer::new(&arts, cfg, params)?;
     let ev = tr.run()?;
     println!(
@@ -140,13 +162,100 @@ fn cmd_train(args: &Args) -> Result<()> {
         ev.acc_pct, ev.mean_loss, ev.samples
     );
     if let Some(p) = ckpt_out {
-        tr.state.save(&p)?;
-        loginfo!("checkpoint saved to {}", p.display());
+        if args.has_flag("ckpt-packed") {
+            tr.save_packed_checkpoint(&p)?;
+            loginfo!("packed checkpoint (TJCKPT02) saved to {}", p.display());
+        } else {
+            tr.state.save(&p)?;
+            loginfo!("checkpoint saved to {}", p.display());
+        }
     }
     Ok(())
 }
 
+/// Manifest + checkpoint -> packed serving model; the path shared by
+/// `eval --packed` and `serve` (no PJRT client, no HLO compilation).
+fn load_packed_model(
+    args: &Args,
+) -> Result<(tetrajet::runtime::Manifest, tetrajet::serve::PackedVit, usize)> {
+    let (root, model, batch) = base_paths(args);
+    let variant = args.get_or("variant", "tetrajet").to_string();
+    let Some(ckpt) = args.get("ckpt") else { bail!("--ckpt required") };
+    let dir = tetrajet::runtime::artifacts::variant_dir(&root, &model, batch, &variant);
+    let man = tetrajet::runtime::Manifest::load(&dir.join("manifest.json"))?;
+    let (state, packed) =
+        tetrajet::coordinator::TrainState::load_with_packed(std::path::Path::new(ckpt))?;
+    loginfo!(
+        "checkpoint step {}: {} params, {} packed segments",
+        state.step,
+        state.params.len(),
+        packed.len()
+    );
+    let vit = tetrajet::serve::PackedVit::from_checkpoint(
+        &man,
+        &state.params,
+        Some(&state.ema),
+        &packed,
+    )?;
+    Ok((man, vit, state.step))
+}
+
+fn cmd_eval_packed(args: &Args) -> Result<()> {
+    let (man, vit, step) = load_packed_model(args)?;
+    let cfg = TrainConfig::default_run(&man.variant.name);
+    let eval_samples = args.get_usize("eval-samples", 512)?;
+    let ds = tetrajet::data::SynthVision::new(
+        man.model.img,
+        man.model.classes,
+        cfg.data_seed,
+        cfg.train_size,
+        cfg.val_size,
+    );
+    let evalset = tetrajet::data::EvalSet::new(ds, man.batch, eval_samples);
+    let scfg = tetrajet::serve::ServeConfig {
+        micro_batch: man.batch,
+        workers: args.get_usize("workers", tetrajet::util::parallel::default_workers())?,
+    };
+    if args.has_flag("verify-mirror") {
+        let mirror = tetrajet::serve::ServeEngine::new(vit.to_dense(), scfg)?;
+        let em = mirror.eval(&evalset);
+        let engine = tetrajet::serve::ServeEngine::new(vit, scfg)?;
+        let ev = engine.eval(&evalset);
+        if (ev.acc_pct, ev.mean_loss) != (em.acc_pct, em.mean_loss) {
+            bail!(
+                "fused/packed eval ({:.4}%, {:.6}) != dequant-mirror eval ({:.4}%, {:.6})",
+                ev.acc_pct,
+                ev.mean_loss,
+                em.acc_pct,
+                em.mean_loss
+            );
+        }
+        loginfo!("verify-mirror: fused == dequant-then-matmul (bit-exact)");
+        print_eval(&ev, step, "packed");
+        return Ok(());
+    }
+    let engine = tetrajet::serve::ServeEngine::new(vit, scfg)?;
+    let ev = engine.eval(&evalset);
+    loginfo!(
+        "resident quantized weights: {} B packed vs {} B f32 mirror",
+        engine.resident_weight_bytes(),
+        engine.model().f32_mirror_bytes()
+    );
+    print_eval(&ev, step, "packed");
+    Ok(())
+}
+
+fn print_eval(ev: &tetrajet::coordinator::EvalResult, step: usize, tag: &str) {
+    println!(
+        "eval[{tag}]: top-1 {:.2}%  val-loss {:.4}  ({} samples, step {})",
+        ev.acc_pct, ev.mean_loss, ev.samples, step
+    );
+}
+
 fn cmd_eval(args: &Args) -> Result<()> {
+    if args.has_flag("packed") {
+        return cmd_eval_packed(args);
+    }
     let (root, model, batch) = base_paths(args);
     let variant = args.get_or("variant", "tetrajet").to_string();
     let Some(ckpt) = args.get("ckpt") else { bail!("--ckpt required") };
@@ -164,6 +273,96 @@ fn cmd_eval(args: &Args) -> Result<()> {
         "eval: top-1 {:.2}%  val-loss {:.4}  ({} samples, step {})",
         ev.acc_pct, ev.mean_loss, ev.samples, tr.state.step
     );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (man, vit, step) = load_packed_model(args)?;
+    let requests = args.get_usize("requests", 32)?;
+    let request_size = args.get_usize("request-size", 4)?;
+    if requests == 0 || request_size == 0 {
+        bail!("--requests and --request-size must be >= 1");
+    }
+    let scfg = tetrajet::serve::ServeConfig {
+        micro_batch: args.get_usize("micro-batch", man.batch)?,
+        workers: args.get_usize("workers", tetrajet::util::parallel::default_workers())?,
+    };
+    let packed_bytes = vit.quantized_weight_bytes();
+    let mirror_bytes = vit.f32_mirror_bytes();
+    let engine = tetrajet::serve::ServeEngine::new(vit, scfg)?;
+    loginfo!(
+        "serving {} (step {}): {} blocks, dim {}, micro-batch {}, {} workers, \
+         {:.1} KiB packed weights ({:.1}x below the f32 mirror)",
+        man.variant.name,
+        step,
+        man.model.depth,
+        man.model.dim,
+        scfg.micro_batch,
+        scfg.workers,
+        packed_bytes as f64 / 1024.0,
+        mirror_bytes as f64 / packed_bytes.max(1) as f64
+    );
+
+    // Synthetic request stream drawn from the validation split.
+    let cfg = TrainConfig::default_run(&man.variant.name);
+    let ds = tetrajet::data::SynthVision::new(
+        man.model.img,
+        man.model.classes,
+        cfg.data_seed,
+        cfg.train_size,
+        cfg.val_size,
+    );
+    let px = engine.pixels_per_image();
+    let mut session = tetrajet::serve::ServeSession::new(engine);
+    let mut labels: Vec<Vec<i32>> = Vec::with_capacity(requests);
+    let mut idx = 0usize;
+    for _ in 0..requests {
+        let mut imgs = vec![0.0f32; request_size * px];
+        let mut ls = Vec::with_capacity(request_size);
+        for i in 0..request_size {
+            ls.push(ds.sample_into(
+                tetrajet::data::Split::Val,
+                idx % cfg.val_size,
+                &mut imgs[i * px..(i + 1) * px],
+            ));
+            idx += 1;
+        }
+        labels.push(ls);
+        session.submit(imgs, request_size)?;
+    }
+    let responses = session.flush();
+    let mut correct = 0usize;
+    for (r, ls) in responses.iter().zip(&labels) {
+        for (&pred, &label) in r.preds.iter().zip(ls.iter()) {
+            if pred == label as usize {
+                correct += 1;
+            }
+        }
+    }
+    let st = session.stats();
+    println!(
+        "serve: {} requests x {} imgs in {:.1} ms -> {:.1} imgs/s  \
+         latency p50 {:.2} ms  p95 {:.2} ms  max {:.2} ms",
+        st.requests,
+        request_size,
+        st.wall_ms,
+        st.imgs_per_sec(),
+        st.latency_pct_ms(0.5),
+        st.latency_pct_ms(0.95),
+        st.latency_pct_ms(1.0),
+    );
+    println!(
+        "serve: top-1 {:.2}% over the {} request images ({} micro-batches)",
+        100.0 * correct as f64 / st.images.max(1) as f64,
+        st.images,
+        st.batches
+    );
+    let eval_samples = args.get_usize("eval-samples", 256)?;
+    if eval_samples > 0 {
+        let evalset = tetrajet::data::EvalSet::new(ds, man.batch, eval_samples);
+        let ev = session.engine().eval(&evalset);
+        print_eval(&ev, step, "serve");
+    }
     Ok(())
 }
 

@@ -37,5 +37,7 @@ pub use mx::{
     group_scales, mx_quantize_cols, mx_quantize_cols_into,
     mx_quantize_stoch_cols, mx_quantize_stoch_cols_into, MxQuantizer,
 };
-pub use packed::{PackedMx, Quantizer, E8M0_BIAS};
+pub use packed::{
+    level_table_from_id, level_table_id, PackedMx, Quantizer, E8M0_BIAS,
+};
 pub use qema::{qema_quantize_cols, qema_quantize_cols_into, QemaQuantizer};

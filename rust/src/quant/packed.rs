@@ -15,7 +15,35 @@
 //! The same packed layout is the substrate for packed checkpoints and a
 //! native FP4 serving path (see ROADMAP.md).
 
-use super::formats::{exp2i, GROUP};
+use anyhow::{bail, Result};
+
+use super::formats::{e2m1, e3m0, exp2i, GROUP};
+
+/// Stable on-disk identifiers for the `'static` level-decode tables a
+/// [`PackedMx`] can carry (TJCKPT02 packed-checkpoint interchange).
+/// Codes are nibble indices into these tables, so a checkpoint only
+/// needs this one byte to reconstruct the decode side.
+pub fn level_table_id(levels: &[f32]) -> Option<u8> {
+    if levels == &e2m1().levels[..] {
+        Some(0)
+    } else if levels == &e3m0().levels[..] {
+        Some(1)
+    } else if levels == &super::int4::INT4_LEVELS[..] {
+        Some(2)
+    } else {
+        None
+    }
+}
+
+/// Inverse of [`level_table_id`].
+pub fn level_table_from_id(id: u8) -> Option<&'static [f32]> {
+    match id {
+        0 => Some(&e2m1().levels),
+        1 => Some(&e3m0().levels),
+        2 => Some(&super::int4::INT4_LEVELS),
+        _ => None,
+    }
+}
 
 /// Iterate `(group_index, flat_start, flat_end)` of the row-major 1x32
 /// group layout of a `(len/cols, cols)` matrix, ragged tails included.
@@ -124,6 +152,76 @@ impl PackedMx {
     #[inline]
     pub fn levels(&self) -> &'static [f32] {
         self.levels
+    }
+
+    /// Raw packed code bytes (two 4-bit level indices per byte, low
+    /// nibble = even flat index). Serving kernels and the TJCKPT02
+    /// checkpoint writer read this directly.
+    #[inline]
+    pub fn codes(&self) -> &[u8] {
+        &self.codes
+    }
+
+    /// Raw E8M0 scale bytes, one per 1x32 group in storage order
+    /// (empty in per-tensor mode).
+    #[inline]
+    pub fn scale_bytes(&self) -> &[u8] {
+        &self.scales
+    }
+
+    /// Per-tensor scale (INT4 mode; 1.0 and unused in grouped mode).
+    #[inline]
+    pub fn tensor_scale(&self) -> f32 {
+        self.tensor_scale
+    }
+
+    /// Reassemble a packed tensor from serialized parts (TJCKPT02
+    /// load path). Validates the byte counts against the geometry so a
+    /// corrupt checkpoint fails here, not deep inside a serving kernel.
+    pub fn from_parts(
+        len: usize,
+        cols: usize,
+        codes: Vec<u8>,
+        scales: Vec<u8>,
+        tensor_scale: f32,
+        levels: &'static [f32],
+    ) -> Result<PackedMx> {
+        if codes.len() != (len + 1) / 2 {
+            bail!("packed codes: {} bytes for {len} elements", codes.len());
+        }
+        if levels.is_empty() || levels.len() > 16 {
+            bail!("packed level table has {} entries", levels.len());
+        }
+        if len > 0 && (cols == 0 || len % cols != 0) {
+            bail!("packed tensor: len {len} not a multiple of cols {cols}");
+        }
+        if !scales.is_empty() {
+            if len == 0 {
+                bail!("packed scales: {} bytes for an empty tensor", scales.len());
+            }
+            let groups = (len / cols) * ((cols + GROUP - 1) / GROUP);
+            if scales.len() != groups {
+                bail!("packed scales: {} bytes for {groups} groups", scales.len());
+            }
+        }
+        if !tensor_scale.is_finite() {
+            bail!("packed tensor scale {tensor_scale} not finite");
+        }
+        if levels.len() < 16 {
+            // All registered tables have 15 entries, leaving nibble 15
+            // unmapped; the pad nibble of an odd-length tensor is
+            // exempt.
+            let max = (levels.len() - 1) as u8;
+            for (i, &b) in codes.iter().enumerate() {
+                if (b & 0x0F) > max || ((b >> 4) > max && 2 * i + 1 < len) {
+                    bail!(
+                        "packed code byte {i} indexes past the {}-entry level table",
+                        levels.len()
+                    );
+                }
+            }
+        }
+        Ok(PackedMx { codes, scales, tensor_scale, levels, len, cols })
     }
 
     /// The 4-bit level code of flat element `i`.
@@ -449,6 +547,64 @@ mod tests {
         let want = da.iter().zip(&db).filter(|(a, b)| a != b).count();
         assert_eq!(pb.flip_count(&pa), want);
         assert_eq!(pa.flip_count(&pa), 0);
+    }
+
+    #[test]
+    fn from_parts_roundtrips_serialized_tensor() {
+        let x = sample(96);
+        let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+        let mut p = PackedMx::default();
+        q.quantize_packed(&x, 48, &mut p);
+        let id = level_table_id(p.levels()).expect("e2m1 table registered");
+        let back = PackedMx::from_parts(
+            p.len(),
+            p.cols(),
+            p.codes().to_vec(),
+            p.scale_bytes().to_vec(),
+            p.tensor_scale(),
+            level_table_from_id(id).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.dequantize(), p.dequantize());
+        assert_eq!(back.flip_count(&p), 0);
+        // Geometry mismatches are rejected.
+        let lv = &e2m1().levels;
+        assert!(PackedMx::from_parts(96, 48, vec![0; 3], Vec::new(), 1.0, lv).is_err());
+        assert!(PackedMx::from_parts(96, 48, vec![0; 48], vec![0; 3], 1.0, lv).is_err());
+        assert!(PackedMx::from_parts(95, 48, vec![0; 48], vec![0; 4], 1.0, lv).is_err());
+    }
+
+    #[test]
+    fn from_parts_rejects_codes_past_level_table() {
+        // Every registered table has 15 entries (7 negatives + zero +
+        // 7 positives, or INT4's 15 grid points), so nibble 15 is
+        // unmapped; a corrupt checkpoint must fail at load, not panic
+        // in a kernel.
+        let iv = &crate::quant::int4::INT4_LEVELS[..];
+        assert!(PackedMx::from_parts(4, 4, vec![0x00, 0x0F], Vec::new(), 1.0, iv).is_err());
+        assert!(PackedMx::from_parts(4, 4, vec![0x00, 0xF0], Vec::new(), 1.0, iv).is_err());
+        // The pad nibble of an odd-length tensor is exempt.
+        assert!(PackedMx::from_parts(3, 3, vec![0x00, 0xF0], Vec::new(), 1.0, iv).is_ok());
+        // e2m1's table is 15 entries too: code 14 is the top level,
+        // nibble 15 is invalid.
+        assert_eq!(e2m1().levels.len(), 15);
+        assert!(PackedMx::from_parts(4, 4, vec![0xEE, 0xEE], Vec::new(), 1.0, &e2m1().levels)
+            .is_ok());
+        assert!(PackedMx::from_parts(4, 4, vec![0xFF, 0xFF], Vec::new(), 1.0, &e2m1().levels)
+            .is_err());
+    }
+
+    #[test]
+    fn level_table_ids_cover_all_formats() {
+        use crate::quant::int4::INT4_LEVELS;
+        assert_eq!(level_table_id(&e2m1().levels), Some(0));
+        assert_eq!(level_table_id(&e3m0().levels), Some(1));
+        assert_eq!(level_table_id(&INT4_LEVELS), Some(2));
+        assert_eq!(level_table_id(&[1.0, 2.0]), None);
+        for id in 0..3u8 {
+            assert_eq!(level_table_id(level_table_from_id(id).unwrap()), Some(id));
+        }
+        assert!(level_table_from_id(9).is_none());
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! The batched serving engine: owns a [`PackedVit`], micro-batches
+//! incoming images through the fused forward, and exposes the same
+//! eval semantics as the trainer so accuracy parity is directly
+//! checkable (`tetrajet eval --packed` vs the HLO eval path).
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::EvalResult;
+use crate::data::EvalSet;
+use crate::serve::model::PackedVit;
+use crate::util::parallel::default_workers;
+
+/// Engine knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Maximum images per forward call; larger requests are split.
+    pub micro_batch: usize,
+    /// Threads for the row-parallel fused kernel.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { micro_batch: 16, workers: default_workers() }
+    }
+}
+
+/// Forward-only inference engine over packed weights.
+pub struct ServeEngine {
+    model: PackedVit,
+    pub cfg: ServeConfig,
+}
+
+impl ServeEngine {
+    pub fn new(model: PackedVit, cfg: ServeConfig) -> Result<ServeEngine> {
+        if cfg.micro_batch == 0 {
+            bail!("micro_batch must be >= 1");
+        }
+        Ok(ServeEngine { model, cfg })
+    }
+
+    pub fn model(&self) -> &PackedVit {
+        &self.model
+    }
+
+    /// Pixels per image expected by [`infer_logits`](Self::infer_logits).
+    pub fn pixels_per_image(&self) -> usize {
+        let g = &self.model.geom;
+        g.img * g.img * 3
+    }
+
+    pub fn classes(&self) -> usize {
+        self.model.geom.classes
+    }
+
+    /// Logits for `n` images, micro-batched through the fused forward.
+    pub fn infer_logits(&self, images: &[f32], n: usize) -> Vec<f32> {
+        let px = self.pixels_per_image();
+        assert_eq!(images.len(), n * px, "images must be (n, img, img, 3)");
+        let classes = self.classes();
+        let mut logits = Vec::with_capacity(n * classes);
+        let mut done = 0;
+        while done < n {
+            let m = self.cfg.micro_batch.min(n - done);
+            let chunk = &images[done * px..(done + m) * px];
+            logits.extend(self.model.forward(chunk, m, self.cfg.workers));
+            done += m;
+        }
+        logits
+    }
+
+    /// Predicted class per image (first-max argmax, like jnp.argmax).
+    pub fn predict(&self, images: &[f32], n: usize) -> Vec<usize> {
+        argmax_rows(&self.infer_logits(images, n), self.classes())
+    }
+
+    /// Full validation pass with the trainer's eval semantics: per
+    /// batch, sum of cross-entropy losses and count of correct top-1
+    /// predictions; aggregated exactly like
+    /// [`Trainer::eval`](crate::coordinator::Trainer::eval).
+    pub fn eval(&self, evalset: &EvalSet) -> EvalResult {
+        let nb = evalset.num_batches();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        for b in 0..nb {
+            let (x, y) = evalset.batch(b);
+            let batch = y.len();
+            let logits = self.model.forward(&x, batch, self.cfg.workers);
+            let (ls, c) = batch_loss_correct(&logits, &y, self.classes());
+            loss_sum += ls as f64;
+            correct += c as f64;
+        }
+        let n = evalset.num_samples().max(1);
+        EvalResult {
+            acc_pct: 100.0 * correct / n as f64,
+            mean_loss: loss_sum / n as f64,
+            samples: n,
+        }
+    }
+
+    /// Resident bytes of the engine's quantized weights — codes +
+    /// scales when fully packed; the no-f32-mirror guarantee is
+    /// asserted against this in tests.
+    pub fn resident_weight_bytes(&self) -> usize {
+        self.model.quantized_weight_bytes()
+    }
+}
+
+/// First-max argmax of one logit row (the jnp.argmax tie rule).
+fn argmax_row(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (j, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+/// Row-wise first-max argmax over a (n, classes) logit block.
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<usize> {
+    logits.chunks_exact(classes).map(argmax_row).collect()
+}
+
+/// Sum of cross-entropy losses + correct count for one batch (mirror of
+/// the eval_step HLO: log-softmax with max subtraction, f32 sums).
+fn batch_loss_correct(logits: &[f32], y: &[i32], classes: usize) -> (f32, f32) {
+    let mut loss_sum = 0.0f32;
+    let mut correct = 0.0f32;
+    for (row, &label) in logits.chunks_exact(classes).zip(y) {
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let lse = m + row.iter().map(|&v| (v - m).exp()).sum::<f32>().ln();
+        loss_sum += lse - row[label as usize];
+        if argmax_row(row) == label as usize {
+            correct += 1.0;
+        }
+    }
+    (loss_sum, correct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthVision;
+    use crate::quant::{e2m1, Scaling};
+    use crate::serve::model::{ActQuant, PackedVit, ServeGeom, WeightQuant};
+    use crate::util::rng::Rng;
+
+    fn tiny_engine(micro_batch: usize) -> ServeEngine {
+        let geom = ServeGeom::new(8, 4, 32, 2, 4, 3, 4);
+        let mut rng = Rng::new(7);
+        let params: Vec<f32> = (0..geom.total_params()).map(|_| rng.normal() * 0.05).collect();
+        let fmt = e2m1();
+        let model = PackedVit::build(
+            geom,
+            &params,
+            None,
+            WeightQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+            ActQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+        )
+        .unwrap();
+        ServeEngine::new(model, ServeConfig { micro_batch, workers: 2 }).unwrap()
+    }
+
+    #[test]
+    fn micro_batching_is_transparent_for_mx() {
+        // MX activation groups are per token row, so splitting a
+        // request across micro-batches cannot change any logit.
+        let e1 = tiny_engine(1);
+        let e4 = tiny_engine(4);
+        let mut rng = Rng::new(1);
+        let n = 5;
+        let x: Vec<f32> = (0..n * e1.pixels_per_image()).map(|_| rng.normal()).collect();
+        assert_eq!(e1.infer_logits(&x, n), e4.infer_logits(&x, n));
+        assert_eq!(e1.predict(&x, n).len(), n);
+    }
+
+    #[test]
+    fn eval_runs_on_synth_data() {
+        let e = tiny_engine(4);
+        let ds = SynthVision::new(8, 3, 1, 64, 32);
+        let ev = crate::data::EvalSet::new(ds, 4, 16);
+        let r = e.eval(&ev);
+        assert_eq!(r.samples, 16);
+        assert!(r.acc_pct >= 0.0 && r.acc_pct <= 100.0);
+        assert!(r.mean_loss.is_finite());
+    }
+
+    #[test]
+    fn argmax_is_first_max() {
+        assert_eq!(argmax_rows(&[1.0, 3.0, 3.0, 0.0, -1.0, -1.0], 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn zero_micro_batch_rejected() {
+        let e = tiny_engine(4);
+        let model = e.model().clone();
+        assert!(ServeEngine::new(model, ServeConfig { micro_batch: 0, workers: 1 }).is_err());
+    }
+}

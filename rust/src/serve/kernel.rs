@@ -1,0 +1,268 @@
+//! Fused group-wise dequant-matmul: the serving GEMM that consumes
+//! [`PackedMx`] codes directly.
+//!
+//! `Y = X · W_Q^T` with `X: (n, d)` activations and `W_Q` a packed
+//! quantized weight whose rows live in a [`PackedMx`] (optionally a row
+//! range of a depth-stacked tensor). The kernel walks the codes one
+//! 1x32 group at a time: the E8M0 scale is decoded once per group (one
+//! `exp2i`), the group's nibbles are expanded through the level table
+//! into a 32-wide stack tile, and that tile is FMAed against every
+//! activation row before the next group is touched. No full f32 weight
+//! matrix ever exists.
+//!
+//! **Bit-exactness guarantee:** for every output element the fused
+//! kernel performs *the same f32 operations in the same order* as
+//! [`matmul_ref`] over [`PackedMx::dequantize_into`]'s output —
+//! per-element products against `level * scale` values accumulated in
+//! ascending contraction order, bias added once at the end. The two
+//! paths therefore agree bit-for-bit (property-tested in
+//! `tests/serve.rs`, including ragged non-multiple-of-32 columns).
+//!
+//! Parallelism: output rows of the internal `(rows, n)` transposed tile
+//! (i.e. the rows of `W_Q`) are distributed over a scoped thread pool
+//! ([`crate::util::parallel`]), so decode work is done exactly once per
+//! weight row regardless of batch size.
+
+use crate::quant::{PackedMx, GROUP};
+use crate::util::parallel::parallel_for_each_mut;
+
+/// Reference GEMM over an already-dequantized weight: `x (n, d)` times
+/// `wq (rows, d)` transposed, accumulating the contraction axis in
+/// ascending order, plus an optional per-output-column bias. This is
+/// the "dequantize-then-matmul" baseline the fused kernel is measured
+/// and verified against.
+pub fn matmul_ref(
+    x: &[f32],
+    n: usize,
+    d: usize,
+    wq: &[f32],
+    rows: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    assert_eq!(x.len(), n * d, "x must be (n, d)");
+    assert_eq!(wq.len(), rows * d, "wq must be (rows, d)");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), rows);
+    }
+    let mut out = vec![0.0f32; n * rows];
+    for i in 0..n {
+        let xi = &x[i * d..(i + 1) * d];
+        let oi = &mut out[i * rows..(i + 1) * rows];
+        for (c, o) in oi.iter_mut().enumerate() {
+            let wr = &wq[c * d..(c + 1) * d];
+            let mut acc = 0.0f32;
+            for j in 0..d {
+                acc += xi[j] * wr[j];
+            }
+            *o = acc + bias.map_or(0.0, |b| b[c]);
+        }
+    }
+    out
+}
+
+/// Row-parallel dense GEMM with [`matmul_ref`]'s exact per-element
+/// accumulation order (ascending contraction index, bias last), so the
+/// dense mirror of a packed model stays bit-exact to the serial
+/// reference while sharing the fused kernel's strip parallelism.
+/// `wq` is the `(rows, d)` row range already sliced by the caller.
+pub fn dense_matmul(
+    x: &[f32],
+    n: usize,
+    d: usize,
+    wq: &[f32],
+    rows: usize,
+    bias: Option<&[f32]>,
+    workers: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), n * d, "x must be (n, d)");
+    assert_eq!(wq.len(), rows * d, "wq must be (rows, d)");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), rows);
+    }
+    if n == 0 || rows == 0 {
+        return Vec::new();
+    }
+    let mut out_t = vec![0.0f32; rows * n];
+    let mut strips: Vec<&mut [f32]> = out_t.chunks_mut(n).collect();
+    let workers = workers.max(1).min(rows);
+    parallel_for_each_mut(&mut strips, workers, |c, acc| {
+        let wr = &wq[c * d..(c + 1) * d];
+        for (i, av) in acc.iter_mut().enumerate() {
+            let xi = &x[i * d..(i + 1) * d];
+            let mut s = 0.0f32;
+            for (xv, wv) in xi.iter().zip(wr) {
+                s += xv * wv;
+            }
+            *av = s + bias.map_or(0.0, |b| b[c]);
+        }
+    });
+    let mut out = vec![0.0f32; n * rows];
+    for c in 0..rows {
+        let strip = &out_t[c * n..(c + 1) * n];
+        for (i, &v) in strip.iter().enumerate() {
+            out[i * rows + c] = v;
+        }
+    }
+    out
+}
+
+/// Fused dequant-matmul over a row range of a packed weight:
+/// `out (n, rows)` with `out[i][c] = x[i] · dequant(w.row(row0 + c)) +
+/// bias[c]`, without materializing the dequantized weight. `w.cols()`
+/// is the contraction dimension; `row0`/`rows` select a block of a
+/// depth-stacked tensor (e.g. one transformer block's slice of
+/// `blocks.fc1_w`). Bit-exact to [`matmul_ref`] over the dequantized
+/// rows.
+pub fn fused_matmul(
+    x: &[f32],
+    n: usize,
+    w: &PackedMx,
+    row0: usize,
+    rows: usize,
+    bias: Option<&[f32]>,
+    workers: usize,
+) -> Vec<f32> {
+    let d = w.cols();
+    assert!(d > 0 && w.len() % d == 0, "packed weight must be rectangular");
+    assert!((row0 + rows) * d <= w.len(), "row range exceeds packed weight");
+    assert_eq!(x.len(), n * d, "x must be (n, d)");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), rows);
+    }
+    if n == 0 || rows == 0 {
+        return Vec::new();
+    }
+    let gpr = w.groups_per_row();
+    let grouped = w.num_groups() > 0;
+
+    // Transposed output tile (rows, n): each weight row owns a
+    // contiguous strip, so the row-parallel workers never share cache
+    // lines and the codes of a row are decoded exactly once.
+    let mut out_t = vec![0.0f32; rows * n];
+    let mut strips: Vec<&mut [f32]> = out_t.chunks_mut(n).collect();
+    let workers = workers.max(1).min(rows);
+    parallel_for_each_mut(&mut strips, workers, |c, acc| {
+        let r = row0 + c;
+        let mut tile = [0.0f32; GROUP];
+        for k in 0..gpr {
+            let a = r * d + k * GROUP;
+            let b = r * d + ((k + 1) * GROUP).min(d);
+            let glen = b - a;
+            // One scale decode (exp2i) per group, hoisted out of the
+            // element loop; per-tensor (INT4) weights share one scale.
+            let scale = if grouped { w.group_scale(r * gpr + k) } else { w.tensor_scale() };
+            for (j, t) in tile[..glen].iter_mut().enumerate() {
+                *t = w.level(w.code(a + j)) * scale;
+            }
+            let col0 = k * GROUP;
+            for (i, av) in acc.iter_mut().enumerate() {
+                let xg = &x[i * d + col0..i * d + col0 + glen];
+                let mut s = *av;
+                for (xv, tv) in xg.iter().zip(&tile[..glen]) {
+                    s += xv * tv;
+                }
+                *av = s;
+            }
+        }
+        if let Some(bias) = bias {
+            let bv = bias[c];
+            for av in acc.iter_mut() {
+                *av += bv;
+            }
+        }
+    });
+
+    // Back to the caller's (n, rows) layout.
+    let mut out = vec![0.0f32; n * rows];
+    for c in 0..rows {
+        let strip = &out_t[c * n..(c + 1) * n];
+        for (i, &v) in strip.iter().enumerate() {
+            out[i * rows + c] = v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{e2m1, Int4Quantizer, MxQuantizer, Quantizer, Scaling};
+    use crate::util::rng::Rng;
+
+    fn fused_vs_ref(n: usize, d: usize, rows: usize, bias: bool, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..rows * d).map(|_| rng.normal() * 0.2).collect();
+        let b: Vec<f32> = (0..rows).map(|_| rng.normal() * 0.1).collect();
+        let bias = bias.then_some(&b[..]);
+        let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+        let mut p = PackedMx::default();
+        q.quantize_packed(&w, d, &mut p);
+        let wq = p.dequantize();
+        let want = matmul_ref(&x, n, d, &wq, rows, bias);
+        for workers in [1, 4] {
+            let got = fused_matmul(&x, n, &p, 0, rows, bias, workers);
+            assert_eq!(got, want, "n={n} d={d} rows={rows} workers={workers}");
+        }
+    }
+
+    #[test]
+    fn fused_matches_dequant_matmul_exact() {
+        fused_vs_ref(1, 32, 4, false, 1);
+        fused_vs_ref(3, 64, 8, true, 2);
+        // Ragged contraction dims: 48 = 32 + 16, 57 = 32 + 25.
+        fused_vs_ref(5, 48, 7, true, 3);
+        fused_vs_ref(2, 57, 3, false, 4);
+    }
+
+    #[test]
+    fn fused_row_range_selects_block() {
+        let mut rng = Rng::new(9);
+        let (d, rows) = (32usize, 12usize);
+        let w: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..2 * d).map(|_| rng.normal()).collect();
+        let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+        let mut p = PackedMx::default();
+        q.quantize_packed(&w, d, &mut p);
+        let wq = p.dequantize();
+        // Rows 4..8 only — a "block 1 of 3" slice of a stacked weight.
+        let want = matmul_ref(&x, 2, d, &wq[4 * d..8 * d], 4, None);
+        assert_eq!(fused_matmul(&x, 2, &p, 4, 4, None, 2), want);
+    }
+
+    #[test]
+    fn fused_handles_per_tensor_int4() {
+        let mut rng = Rng::new(5);
+        let (n, d, rows) = (3usize, 40usize, 6usize);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..rows * d).map(|_| rng.normal() * 3.0).collect();
+        let mut p = PackedMx::default();
+        Int4Quantizer.quantize_packed(&w, d, &mut p);
+        assert_eq!(p.num_groups(), 0, "per-tensor mode");
+        let want = matmul_ref(&x, n, d, &p.dequantize(), rows, None);
+        assert_eq!(fused_matmul(&x, n, &p, 0, rows, None, 3), want);
+    }
+
+    #[test]
+    fn dense_matmul_matches_ref_exact() {
+        let mut rng = Rng::new(21);
+        for (n, d, rows, bias) in [(1usize, 32usize, 4usize, false), (3, 57, 7, true)] {
+            let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+            let w: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..rows).map(|_| rng.normal()).collect();
+            let bias = bias.then_some(&b[..]);
+            let want = matmul_ref(&x, n, d, &w, rows, bias);
+            for workers in [1, 4] {
+                assert_eq!(dense_matmul(&x, n, d, &w, rows, bias, workers), want);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+        let mut p = PackedMx::default();
+        q.quantize_packed(&[1.0; 32], 32, &mut p);
+        assert!(fused_matmul(&[], 0, &p, 0, 1, None, 4).is_empty());
+    }
+}

@@ -1,0 +1,35 @@
+//! Packed-native serving: forward-only inference over 4-bit codes.
+//!
+//! Training (the [`crate::coordinator`]) round-trips quantized weights
+//! through an f32 view every step because the controllers need it; a
+//! serving process does not. This subsystem keeps the model in the
+//! [`crate::quant::PackedMx`] representation end to end:
+//!
+//! * [`kernel`] — the fused group-wise dequant-matmul: nibble decode →
+//!   level table → one `exp2i` per 1x32 group, FMAed straight into the
+//!   output tile, row-parallel. Bit-exact to dequantize-then-matmul.
+//! * [`model`] — [`model::PackedVit`]: manifest-derived geometry + the
+//!   quantized ViT forward (Eq. 3: `Y = Q1(X) · Q2(W)^T`) over packed
+//!   stores, never materializing an f32 weight mirror.
+//! * [`engine`] — [`engine::ServeEngine`]: micro-batched inference +
+//!   trainer-parity eval.
+//! * [`session`] — [`session::ServeSession`]: request queue with
+//!   cross-request micro-batching, per-request latency and aggregate
+//!   throughput stats.
+//!
+//! Models load from TJCKPT02 packed checkpoints
+//! ([`crate::coordinator::TrainState::load_with_packed`]) written by
+//! `tetrajet train --ckpt-packed`; a TJCKPT01 (or packed-less) file
+//! falls back to re-quantizing the f32 parameters with the variant's
+//! forward recipe. CLI entry points: `tetrajet serve` and
+//! `tetrajet eval --packed`.
+
+pub mod engine;
+pub mod kernel;
+pub mod model;
+pub mod session;
+
+pub use engine::{ServeConfig, ServeEngine};
+pub use kernel::{dense_matmul, fused_matmul, matmul_ref};
+pub use model::{variant_quant, ActQuant, PackedVit, ServeGeom, WeightQuant};
+pub use session::{Response, ServeSession, SessionStats};

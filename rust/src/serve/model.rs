@@ -1,0 +1,827 @@
+//! Packed ViT model for serving: geometry, weight stores, forward pass.
+//!
+//! [`ServeGeom`] re-derives the flat parameter layout of
+//! `python/compile/vit.py::param_spec` from manifest segment shapes and
+//! cross-validates every name/shape/offset, so the serving forward and
+//! the AOT HLO can never silently disagree about where a tensor lives.
+//!
+//! [`PackedVit`] holds the four depth-stacked quantized weight tensors
+//! (qkv / proj / fc1 / fc2) as [`PackedMx`] codes + scales — never as a
+//! full f32 matrix — plus the small full-precision tail (patch embed,
+//! layernorms, biases, classifier head). Its forward mirrors
+//! `vit.py::forward` exactly: pre-LN attention + MLP blocks with the
+//! paper's Eq. 3 quantized linears `Y = Q1(X) · Q2(W)^T`, tanh-GELU
+//! (JAX's default), and max-subtracted softmax. The quantized matmuls
+//! run through [`fused_matmul`]; [`PackedVit::to_dense`] swaps every
+//! store for its dequantized f32 form behind the same forward code,
+//! which is how the fused path's bit-exactness is asserted end-to-end.
+//!
+//! Faithfulness note: MX activation/weight groups are per-row 1x32, so
+//! quantizing a depth-stacked weight in one call is identical to
+//! quantizing each block's matrix separately. The INT4 baseline is
+//! per-*tensor* scaled; like the trainer's mirror we scale per stacked
+//! segment, while the HLO scales per block matrix — MX variants (the
+//! paper's subject) are exact, INT4 is the same approximation the
+//! trainer already makes.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::PackedSeg;
+use crate::quant::{
+    fp4_format, int4_quantize, mx_quantize_cols, Fp4Format, Int4Quantizer,
+    MxQuantizer, PackedMx, QemaQuantizer, Quantizer, Scaling,
+};
+use crate::runtime::Manifest;
+use crate::serve::kernel::{dense_matmul, fused_matmul, matmul_ref};
+
+/// One entry of the flat parameter layout (mirror of vit.py ParamSeg).
+#[derive(Debug, Clone)]
+pub struct SegSpec {
+    pub name: &'static str,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub quantized: bool,
+}
+
+impl SegSpec {
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.offset..self.offset + self.size
+    }
+}
+
+/// ViT geometry for the serving path. Constructible directly (tests,
+/// benches, synthetic models) or from an artifact [`Manifest`] with
+/// full layout cross-validation.
+#[derive(Debug, Clone)]
+pub struct ServeGeom {
+    pub img: usize,
+    pub patch: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub classes: usize,
+    pub hidden: usize,
+    pub seq: usize,
+    pub patch_dim: usize,
+    pub head_dim: usize,
+}
+
+impl ServeGeom {
+    pub fn new(
+        img: usize,
+        patch: usize,
+        dim: usize,
+        depth: usize,
+        heads: usize,
+        classes: usize,
+        mlp_ratio: usize,
+    ) -> ServeGeom {
+        assert!(patch > 0 && img % patch == 0, "img must tile into patches");
+        assert!(heads > 0 && dim % heads == 0, "dim must split into heads");
+        let hp = img / patch;
+        ServeGeom {
+            img,
+            patch,
+            dim,
+            depth,
+            heads,
+            classes,
+            hidden: dim * mlp_ratio,
+            seq: hp * hp + 1,
+            patch_dim: patch * patch * 3,
+            head_dim: dim / heads,
+        }
+    }
+
+    /// The flat parameter layout, quantized weight matrices first —
+    /// byte-for-byte the order of `vit.py::param_spec`.
+    pub fn param_spec(&self) -> Vec<SegSpec> {
+        let (d, dim, hidden) = (self.depth, self.dim, self.hidden);
+        let entries: Vec<(&'static str, Vec<usize>, bool)> = vec![
+            ("blocks.qkv_w", vec![d, 3 * dim, dim], true),
+            ("blocks.proj_w", vec![d, dim, dim], true),
+            ("blocks.fc1_w", vec![d, hidden, dim], true),
+            ("blocks.fc2_w", vec![d, dim, hidden], true),
+            ("patch_embed.w", vec![dim, self.patch_dim], false),
+            ("patch_embed.b", vec![dim], false),
+            ("cls", vec![dim], false),
+            ("pos", vec![self.seq, dim], false),
+            ("blocks.ln1.g", vec![d, dim], false),
+            ("blocks.ln1.b", vec![d, dim], false),
+            ("blocks.qkv_b", vec![d, 3 * dim], false),
+            ("blocks.proj_b", vec![d, dim], false),
+            ("blocks.ln2.g", vec![d, dim], false),
+            ("blocks.ln2.b", vec![d, dim], false),
+            ("blocks.fc1_b", vec![d, hidden], false),
+            ("blocks.fc2_b", vec![d, dim], false),
+            ("ln_f.g", vec![dim], false),
+            ("ln_f.b", vec![dim], false),
+            ("head.w", vec![self.classes, dim], false),
+            ("head.b", vec![self.classes], false),
+        ];
+        let mut out = Vec::with_capacity(entries.len());
+        let mut off = 0;
+        for (name, shape, quantized) in entries {
+            let size = shape.iter().product();
+            out.push(SegSpec { name, shape, offset: off, size, quantized });
+            off += size;
+        }
+        out
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.param_spec().iter().map(|s| s.size).sum()
+    }
+
+    pub fn qw_total(&self) -> usize {
+        self.param_spec().iter().filter(|s| s.quantized).map(|s| s.size).sum()
+    }
+
+    /// Derive the geometry from a manifest and validate the full layout
+    /// against it: every segment name, shape, offset and quantized flag
+    /// must match, i.e. the manifest segment shapes *are* the layer
+    /// geometry of the serving forward.
+    pub fn from_manifest(man: &Manifest) -> Result<ServeGeom> {
+        let m = &man.model;
+        let fc1 = man
+            .segment("blocks.fc1_w")
+            .context("manifest has no blocks.fc1_w segment")?;
+        if fc1.shape.len() != 3 || fc1.shape[2] != m.dim || fc1.shape[1] % m.dim != 0 {
+            bail!("blocks.fc1_w shape {:?} incompatible with dim {}", fc1.shape, m.dim);
+        }
+        let mlp_ratio = fc1.shape[1] / m.dim;
+        if m.patch == 0 || m.img % m.patch != 0 || m.heads == 0 || m.dim % m.heads != 0 {
+            bail!("implausible model geometry {m:?}");
+        }
+        let geom = ServeGeom::new(m.img, m.patch, m.dim, m.depth, m.heads, m.classes, mlp_ratio);
+        if geom.seq != m.seq {
+            bail!("derived seq {} != manifest seq {}", geom.seq, m.seq);
+        }
+        for spec in geom.param_spec() {
+            let seg = man
+                .segment(spec.name)
+                .with_context(|| format!("manifest missing segment {:?}", spec.name))?;
+            if seg.shape != spec.shape
+                || seg.offset != spec.offset
+                || seg.size != spec.size
+                || seg.quantized != spec.quantized
+            {
+                bail!(
+                    "segment {:?} layout mismatch: manifest {:?}@{} vs serve {:?}@{}",
+                    spec.name,
+                    seg.shape,
+                    seg.offset,
+                    spec.shape,
+                    spec.offset
+                );
+            }
+        }
+        if man.total_params != geom.total_params() || man.qw_total != geom.qw_total() {
+            bail!(
+                "manifest totals ({}, {}) != serve layout ({}, {})",
+                man.total_params,
+                man.qw_total,
+                geom.total_params(),
+                geom.qw_total()
+            );
+        }
+        Ok(geom)
+    }
+}
+
+/// Forward weight quantizer Q^(2) used when building a model from f32
+/// parameters (matches the trainer's mirror selection).
+#[derive(Debug, Clone, Copy)]
+pub enum WeightQuant {
+    /// Full-precision weights (fp32 variant, or Q2 toggled off).
+    Dense,
+    Mx { fmt: &'static Fp4Format, scaling: Scaling },
+    Qema { fmt: &'static Fp4Format, scaling: Scaling },
+    Int4,
+}
+
+/// Activation quantizer Q^(1) applied to every quantized linear's input.
+#[derive(Debug, Clone, Copy)]
+pub enum ActQuant {
+    None,
+    Mx { fmt: &'static Fp4Format, scaling: Scaling },
+    Int4,
+}
+
+/// Map a manifest variant to its forward quantization recipe (mirror of
+/// `model.py::VariantCfg.linear_cfg`, forward quantizers only).
+pub fn variant_quant(man: &Manifest) -> (WeightQuant, ActQuant) {
+    let v = &man.variant;
+    let q1_on = v.enabled.first().copied().unwrap_or(true);
+    let q2_on = v.enabled.get(1).copied().unwrap_or(true);
+    if v.kind == "fp32" {
+        return (WeightQuant::Dense, ActQuant::None);
+    }
+    if v.kind == "int4" {
+        return (
+            if q2_on { WeightQuant::Int4 } else { WeightQuant::Dense },
+            if q1_on { ActQuant::Int4 } else { ActQuant::None },
+        );
+    }
+    let fmt = fp4_format(&v.fwd_fmt).unwrap_or_else(crate::quant::e2m1);
+    let scaling = Scaling::parse(&v.scaling).unwrap_or(Scaling::TruncationFree);
+    let wq = if !q2_on {
+        WeightQuant::Dense
+    } else if v.qema {
+        WeightQuant::Qema { fmt, scaling }
+    } else {
+        WeightQuant::Mx { fmt, scaling }
+    };
+    let aq = if q1_on { ActQuant::Mx { fmt, scaling } } else { ActQuant::None };
+    (wq, aq)
+}
+
+/// One quantized weight tensor's storage: packed codes (the serving
+/// path) or a dense f32 matrix (fp32 variants and the mirror used to
+/// verify the fused kernel).
+#[derive(Debug, Clone)]
+enum Store {
+    Packed(PackedMx),
+    Dense { w: Vec<f32>, cols: usize },
+}
+
+impl Store {
+    fn linear(
+        &self,
+        x: &[f32],
+        n: usize,
+        row0: usize,
+        rows: usize,
+        bias: Option<&[f32]>,
+        workers: usize,
+    ) -> Vec<f32> {
+        match self {
+            Store::Packed(p) => fused_matmul(x, n, p, row0, rows, bias, workers),
+            Store::Dense { w, cols } => dense_matmul(
+                x,
+                n,
+                *cols,
+                &w[row0 * cols..(row0 + rows) * cols],
+                rows,
+                bias,
+                workers,
+            ),
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            Store::Packed(p) => p.bytes(),
+            Store::Dense { w, .. } => w.len() * std::mem::size_of::<f32>(),
+        }
+    }
+
+    fn is_packed(&self) -> bool {
+        matches!(self, Store::Packed(_))
+    }
+
+    fn to_dense(&self) -> Store {
+        match self {
+            Store::Packed(p) => Store::Dense { w: p.dequantize(), cols: p.cols() },
+            d => d.clone(),
+        }
+    }
+}
+
+/// Names of the four quantized stacked weight tensors, in layout order.
+const QW_NAMES: [&str; 4] = ["blocks.qkv_w", "blocks.proj_w", "blocks.fc1_w", "blocks.fc2_w"];
+
+/// A forward-only ViT whose quantized weights stay packed.
+#[derive(Debug, Clone)]
+pub struct PackedVit {
+    pub geom: ServeGeom,
+    /// qkv / proj / fc1 / fc2, depth-stacked, in [`QW_NAMES`] order.
+    stores: [Store; 4],
+    /// Non-quantized parameters `[qw_total, total_params)`.
+    rest: Vec<f32>,
+    /// Name -> range into `rest`, precomputed so the forward's tensor
+    /// lookups never rebuild the spec on the hot path.
+    rest_spec: Vec<(&'static str, std::ops::Range<usize>)>,
+    act_quant: ActQuant,
+}
+
+fn rest_ranges(geom: &ServeGeom) -> Vec<(&'static str, std::ops::Range<usize>)> {
+    let qw = geom.qw_total();
+    geom.param_spec()
+        .iter()
+        .filter(|s| !s.quantized)
+        .map(|s| (s.name, s.offset - qw..s.offset + s.size - qw))
+        .collect()
+}
+
+impl PackedVit {
+    /// Build from a flat f32 parameter vector, quantizing the four
+    /// weight groups with `wq` (the trainer-mirror recipe). `ema` is
+    /// required for [`WeightQuant::Qema`].
+    pub fn build(
+        geom: ServeGeom,
+        params: &[f32],
+        ema: Option<&[f32]>,
+        wq: WeightQuant,
+        act: ActQuant,
+    ) -> Result<PackedVit> {
+        if params.len() != geom.total_params() {
+            bail!("params {} != layout total {}", params.len(), geom.total_params());
+        }
+        let spec = geom.param_spec();
+        let qw_total = geom.qw_total();
+        let mut stores = Vec::with_capacity(4);
+        for name in QW_NAMES {
+            let seg = spec.iter().find(|s| s.name == name).unwrap();
+            let w = &params[seg.range()];
+            let cols = seg.cols();
+            let store = match wq {
+                WeightQuant::Dense => Store::Dense { w: w.to_vec(), cols },
+                WeightQuant::Mx { fmt, scaling } => {
+                    let mut p = PackedMx::default();
+                    MxQuantizer { fmt, scaling }.quantize_packed(w, cols, &mut p);
+                    Store::Packed(p)
+                }
+                WeightQuant::Qema { fmt, scaling } => {
+                    let ema = ema.context("Q-EMA weight quantizer needs the EMA state")?;
+                    if ema.len() < qw_total {
+                        bail!("ema {} shorter than quantized prefix {qw_total}", ema.len());
+                    }
+                    let mut p = PackedMx::default();
+                    QemaQuantizer { fmt, scaling, ema: &ema[seg.range()] }
+                        .quantize_packed(w, cols, &mut p);
+                    Store::Packed(p)
+                }
+                WeightQuant::Int4 => {
+                    let mut p = PackedMx::default();
+                    Int4Quantizer.quantize_packed(w, cols, &mut p);
+                    Store::Packed(p)
+                }
+            };
+            stores.push(store);
+        }
+        let stores: [Store; 4] = stores.try_into().expect("four quantized stores");
+        Ok(PackedVit {
+            rest_spec: rest_ranges(&geom),
+            geom,
+            stores,
+            rest: params[qw_total..].to_vec(),
+            act_quant: act,
+        })
+    }
+
+    /// Load a model for serving from a checkpoint: packed segments when
+    /// the TJCKPT02 section is present (no dequantization anywhere on
+    /// this path), otherwise re-quantize the f32 parameters with the
+    /// variant's forward recipe.
+    pub fn from_checkpoint(
+        man: &Manifest,
+        params: &[f32],
+        ema: Option<&[f32]>,
+        packed: &[PackedSeg],
+    ) -> Result<PackedVit> {
+        let geom = ServeGeom::from_manifest(man)?;
+        let (wq, act) = variant_quant(man);
+        if packed.is_empty() {
+            return PackedVit::build(geom, params, ema, wq, act);
+        }
+        if params.len() != geom.total_params() {
+            bail!("params {} != layout total {}", params.len(), geom.total_params());
+        }
+        // The codes are only meaningful under the variant's own level
+        // table: a checkpoint served with the wrong --variant must fail
+        // loudly here, not report silently wrong accuracy.
+        let want_levels: &[f32] = match wq {
+            WeightQuant::Dense => bail!(
+                "variant {:?} has no packed weight form but the checkpoint \
+                 carries {} packed segments — checkpoint/variant mismatch",
+                man.variant.name,
+                packed.len()
+            ),
+            WeightQuant::Mx { fmt, .. } | WeightQuant::Qema { fmt, .. } => &fmt.levels[..],
+            WeightQuant::Int4 => &crate::quant::int4::INT4_LEVELS[..],
+        };
+        for ps in packed {
+            if ps.packed.levels() != want_levels {
+                bail!(
+                    "packed segment {:?} was quantized with a different level \
+                     table than variant {:?} expects — wrong --variant for this \
+                     checkpoint",
+                    ps.name,
+                    man.variant.name
+                );
+            }
+        }
+        let spec = geom.param_spec();
+        let mut stores = Vec::with_capacity(4);
+        for name in QW_NAMES {
+            let seg = spec.iter().find(|s| s.name == name).unwrap();
+            let ps = packed
+                .iter()
+                .find(|p| p.name == name)
+                .with_context(|| format!("checkpoint packed section missing {name:?}"))?;
+            if ps.offset != seg.offset
+                || ps.packed.len() != seg.size
+                || ps.packed.cols() != seg.cols()
+            {
+                bail!(
+                    "packed segment {name:?}: ({}, {}, cols {}) != manifest ({}, {}, cols {})",
+                    ps.offset,
+                    ps.packed.len(),
+                    ps.packed.cols(),
+                    seg.offset,
+                    seg.size,
+                    seg.cols()
+                );
+            }
+            stores.push(Store::Packed(ps.packed.clone()));
+        }
+        let stores: [Store; 4] = stores.try_into().expect("four quantized stores");
+        Ok(PackedVit {
+            rest_spec: rest_ranges(&geom),
+            rest: params[geom.qw_total()..].to_vec(),
+            geom,
+            stores,
+            act_quant: act,
+        })
+    }
+
+    /// The same model with every packed store dequantized to f32 — the
+    /// "dequantize-then-matmul" mirror used to verify the fused path.
+    pub fn to_dense(&self) -> PackedVit {
+        PackedVit {
+            geom: self.geom.clone(),
+            stores: [
+                self.stores[0].to_dense(),
+                self.stores[1].to_dense(),
+                self.stores[2].to_dense(),
+                self.stores[3].to_dense(),
+            ],
+            rest: self.rest.clone(),
+            rest_spec: self.rest_spec.clone(),
+            act_quant: self.act_quant,
+        }
+    }
+
+    /// True when all four quantized weight tensors are held as codes.
+    pub fn is_fully_packed(&self) -> bool {
+        self.stores.iter().all(Store::is_packed)
+    }
+
+    /// Resident bytes of the quantized weight tensors (codes + scales
+    /// for packed stores; f32 bytes for dense ones). The packed serving
+    /// path keeps this at ~0.53 bytes/element vs 4 for an f32 mirror.
+    pub fn quantized_weight_bytes(&self) -> usize {
+        self.stores.iter().map(Store::bytes).sum()
+    }
+
+    /// What an f32 mirror of the quantized weights would occupy.
+    pub fn f32_mirror_bytes(&self) -> usize {
+        self.geom.qw_total() * std::mem::size_of::<f32>()
+    }
+
+    /// Non-quantized parameter tensor by spec name (precomputed ranges;
+    /// no spec rebuild on the forward hot path).
+    fn p(&self, name: &str) -> &[f32] {
+        let (_, range) = self
+            .rest_spec
+            .iter()
+            .find(|(n, _)| *n == name)
+            .unwrap_or_else(|| panic!("unknown full-precision tensor {name:?}"));
+        &self.rest[range.clone()]
+    }
+
+    /// Q^(1): quantize a (n, cols) activation matrix in place.
+    fn act_q(&self, x: &mut Vec<f32>, cols: usize) {
+        match self.act_quant {
+            ActQuant::None => {}
+            ActQuant::Mx { fmt, scaling } => *x = mx_quantize_cols(x, cols, fmt, scaling),
+            ActQuant::Int4 => *x = int4_quantize(x, None),
+        }
+    }
+
+    /// Forward pass: `x` is a (batch, img, img, 3) HWC pixel block; the
+    /// result is (batch, classes) logits. Deterministic; the quantized
+    /// linears run fused over packed codes (or dense f32 for
+    /// [`to_dense`](Self::to_dense) mirrors) with identical numerics.
+    pub fn forward(&self, x: &[f32], batch: usize, workers: usize) -> Vec<f32> {
+        let g = &self.geom;
+        assert_eq!(x.len(), batch * g.img * g.img * 3, "x must be (batch, img, img, 3)");
+        let (dim, seq, heads, hd) = (g.dim, g.seq, g.heads, g.head_dim);
+        let np = seq - 1;
+        let hp = g.img / g.patch;
+
+        // Patchify (B, H, W, 3) -> (B*np, patch_dim), matching the
+        // reshape/transpose in vit.py::_patchify.
+        let mut patches = vec![0.0f32; batch * np * g.patch_dim];
+        for b in 0..batch {
+            for py in 0..hp {
+                for px in 0..hp {
+                    let t = py * hp + px;
+                    let dst = (b * np + t) * g.patch_dim;
+                    for iy in 0..g.patch {
+                        for ix in 0..g.patch {
+                            let src = ((b * g.img + py * g.patch + iy) * g.img
+                                + px * g.patch
+                                + ix)
+                                * 3;
+                            let f = (iy * g.patch + ix) * 3;
+                            patches[dst + f..dst + f + 3].copy_from_slice(&x[src..src + 3]);
+                        }
+                    }
+                }
+            }
+        }
+
+        // tok = patches @ patch_embed.w^T + b (full precision).
+        let tok = matmul_ref(
+            &patches,
+            batch * np,
+            g.patch_dim,
+            self.p("patch_embed.w"),
+            dim,
+            Some(self.p("patch_embed.b")),
+        );
+
+        // h = concat(cls, tok) + pos, per batch row.
+        let (cls, pos) = (self.p("cls"), self.p("pos"));
+        let mut h = vec![0.0f32; batch * seq * dim];
+        for b in 0..batch {
+            let row = &mut h[b * seq * dim..b * seq * dim + dim];
+            for (o, (&c, &p)) in row.iter_mut().zip(cls.iter().zip(&pos[..dim])) {
+                *o = c + p;
+            }
+            for t in 0..np {
+                let dst = (b * seq + t + 1) * dim;
+                let src = (b * np + t) * dim;
+                for e in 0..dim {
+                    h[dst + e] = tok[src + e] + pos[(t + 1) * dim + e];
+                }
+            }
+        }
+
+        let n = batch * seq;
+        for blk in 0..g.depth {
+            // --- attention ---
+            let mut hn = layer_norm(
+                &h,
+                n,
+                dim,
+                &self.p("blocks.ln1.g")[blk * dim..(blk + 1) * dim],
+                &self.p("blocks.ln1.b")[blk * dim..(blk + 1) * dim],
+            );
+            self.act_q(&mut hn, dim);
+            let qkv = self.stores[0].linear(
+                &hn,
+                n,
+                blk * 3 * dim,
+                3 * dim,
+                Some(&self.p("blocks.qkv_b")[blk * 3 * dim..(blk + 1) * 3 * dim]),
+                workers,
+            );
+            let mut att_out = vec![0.0f32; n * dim];
+            let inv_sqrt = 1.0 / (hd as f32).sqrt();
+            let mut scores = vec![0.0f32; seq * seq];
+            for b in 0..batch {
+                for hh in 0..heads {
+                    let at = |j: usize, t: usize, e: usize| {
+                        qkv[(b * seq + t) * 3 * dim + j * dim + hh * hd + e]
+                    };
+                    for s in 0..seq {
+                        for t in 0..seq {
+                            let mut acc = 0.0f32;
+                            for e in 0..hd {
+                                acc += at(0, s, e) * at(1, t, e);
+                            }
+                            scores[s * seq + t] = acc * inv_sqrt;
+                        }
+                        softmax_row(&mut scores[s * seq..(s + 1) * seq]);
+                    }
+                    for s in 0..seq {
+                        let dst = (b * seq + s) * dim + hh * hd;
+                        for e in 0..hd {
+                            let mut acc = 0.0f32;
+                            for t in 0..seq {
+                                acc += scores[s * seq + t] * at(2, t, e);
+                            }
+                            att_out[dst + e] = acc;
+                        }
+                    }
+                }
+            }
+            self.act_q(&mut att_out, dim);
+            let proj = self.stores[1].linear(
+                &att_out,
+                n,
+                blk * dim,
+                dim,
+                Some(&self.p("blocks.proj_b")[blk * dim..(blk + 1) * dim]),
+                workers,
+            );
+            for (hv, &pv) in h.iter_mut().zip(&proj) {
+                *hv += pv;
+            }
+            // --- mlp ---
+            let mut hn = layer_norm(
+                &h,
+                n,
+                dim,
+                &self.p("blocks.ln2.g")[blk * dim..(blk + 1) * dim],
+                &self.p("blocks.ln2.b")[blk * dim..(blk + 1) * dim],
+            );
+            self.act_q(&mut hn, dim);
+            let mut z = self.stores[2].linear(
+                &hn,
+                n,
+                blk * g.hidden,
+                g.hidden,
+                Some(&self.p("blocks.fc1_b")[blk * g.hidden..(blk + 1) * g.hidden]),
+                workers,
+            );
+            for v in z.iter_mut() {
+                *v = gelu_tanh(*v);
+            }
+            self.act_q(&mut z, g.hidden);
+            let mlp = self.stores[3].linear(
+                &z,
+                n,
+                blk * dim,
+                dim,
+                Some(&self.p("blocks.fc2_b")[blk * dim..(blk + 1) * dim]),
+                workers,
+            );
+            for (hv, &mv) in h.iter_mut().zip(&mlp) {
+                *hv += mv;
+            }
+        }
+
+        let hn = layer_norm(&h, n, dim, self.p("ln_f.g"), self.p("ln_f.b"));
+        // Classifier over the cls token only.
+        let mut cls_rows = vec![0.0f32; batch * dim];
+        for b in 0..batch {
+            cls_rows[b * dim..(b + 1) * dim]
+                .copy_from_slice(&hn[b * seq * dim..b * seq * dim + dim]);
+        }
+        matmul_ref(&cls_rows, batch, dim, self.p("head.w"), g.classes, Some(self.p("head.b")))
+    }
+}
+
+/// Pre-LN layer norm over the trailing `dim` axis (eps 1e-6, matching
+/// vit.py::_layer_norm with biased variance).
+fn layer_norm(x: &[f32], n: usize, dim: usize, gain: &[f32], bias: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), n * dim);
+    let mut out = vec![0.0f32; n * dim];
+    for i in 0..n {
+        let row = &x[i * dim..(i + 1) * dim];
+        let mu = row.iter().sum::<f32>() / dim as f32;
+        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / dim as f32;
+        let inv = 1.0 / (var + 1e-6).sqrt();
+        let o = &mut out[i * dim..(i + 1) * dim];
+        for (j, (ov, &v)) in o.iter_mut().zip(row).enumerate() {
+            *ov = (v - mu) * inv * gain[j] + bias[j];
+        }
+    }
+    out
+}
+
+/// Numerically-stable softmax in place (max-subtracted, like
+/// jax.nn.softmax).
+fn softmax_row(row: &mut [f32]) {
+    let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// JAX's default (approximate) GELU: 0.5x(1 + tanh(√(2/π)(x + 0.044715x³))).
+fn gelu_tanh(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56;
+    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_geom() -> ServeGeom {
+        ServeGeom::new(8, 4, 32, 2, 4, 3, 4)
+    }
+
+    fn random_params(geom: &ServeGeom, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let spec = geom.param_spec();
+        let mut p = vec![0.0f32; geom.total_params()];
+        for s in &spec {
+            for v in &mut p[s.range()] {
+                *v = match s.name {
+                    n if n.ends_with(".g") => 1.0 + rng.normal() * 0.02,
+                    n if n.ends_with(".b") || n == "head.b" => rng.normal() * 0.01,
+                    _ => rng.normal() * 0.08,
+                };
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn layout_matches_vit_micro_totals() {
+        // vit-micro: ~0.22M params, 196,608 of them quantized.
+        let g = ServeGeom::new(32, 4, 64, 4, 4, 10, 4);
+        assert_eq!(g.qw_total(), 196_608);
+        assert_eq!(g.seq, 65);
+        assert_eq!(g.patch_dim, 48);
+        let spec = g.param_spec();
+        assert_eq!(spec.len(), 20);
+        assert_eq!(spec[0].name, "blocks.qkv_w");
+        assert_eq!(spec[0].shape, vec![4, 192, 64]);
+        // Quantized prefix is contiguous from zero.
+        let mut off = 0;
+        for s in spec.iter().filter(|s| s.quantized) {
+            assert_eq!(s.offset, off);
+            off += s.size;
+        }
+        assert_eq!(off, g.qw_total());
+        assert_eq!(g.total_params(), spec.last().map(|s| s.offset + s.size).unwrap());
+    }
+
+    #[test]
+    fn fused_forward_matches_dense_mirror_bit_exact() {
+        let geom = tiny_geom();
+        let params = random_params(&geom, 3);
+        let fmt = crate::quant::e2m1();
+        let packed = PackedVit::build(
+            geom.clone(),
+            &params,
+            None,
+            WeightQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+            ActQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+        )
+        .unwrap();
+        assert!(packed.is_fully_packed());
+        let mirror = packed.to_dense();
+        assert!(!mirror.is_fully_packed());
+        let mut rng = Rng::new(11);
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * geom.img * geom.img * 3).map(|_| rng.normal()).collect();
+        let a = packed.forward(&x, batch, 1);
+        let b = mirror.forward(&x, batch, 4);
+        assert_eq!(a, b, "fused and dequant-mirror forwards must agree bit-for-bit");
+        assert_eq!(a.len(), batch * geom.classes);
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn packed_model_never_holds_f32_weights() {
+        let geom = tiny_geom();
+        let params = random_params(&geom, 4);
+        let fmt = crate::quant::e2m1();
+        let m = PackedVit::build(
+            geom.clone(),
+            &params,
+            None,
+            WeightQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+            ActQuant::None,
+        )
+        .unwrap();
+        // codes: 0.5 B/elem; scales: one byte per 32 elements (dim and
+        // hidden are multiples of 32 here, so no ragged groups).
+        let qw = geom.qw_total();
+        assert_eq!(m.quantized_weight_bytes(), qw / 2 + qw / 32);
+        assert!(m.quantized_weight_bytes() * 7 < m.f32_mirror_bytes());
+    }
+
+    #[test]
+    fn dense_weight_quant_keeps_fp32() {
+        let geom = tiny_geom();
+        let params = random_params(&geom, 5);
+        let m = PackedVit::build(geom, &params, None, WeightQuant::Dense, ActQuant::None).unwrap();
+        assert!(!m.is_fully_packed());
+        assert_eq!(m.quantized_weight_bytes(), m.f32_mirror_bytes());
+        // fp32 forward is just the reference ViT; finite logits.
+        let x = vec![0.1f32; 8 * 8 * 3];
+        assert!(m.forward(&x, 1, 1).iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn qema_build_requires_ema() {
+        let geom = tiny_geom();
+        let params = random_params(&geom, 6);
+        let fmt = crate::quant::e2m1();
+        let wq = WeightQuant::Qema { fmt, scaling: Scaling::TruncationFree };
+        assert!(PackedVit::build(geom.clone(), &params, None, wq, ActQuant::None).is_err());
+        let ema: Vec<f32> = params[..geom.qw_total()].iter().map(|v| v * 0.9).collect();
+        assert!(PackedVit::build(geom, &params, Some(&ema), wq, ActQuant::None).is_ok());
+    }
+}

@@ -1,0 +1,242 @@
+//! Request-level serving session: queue N-image requests, micro-batch
+//! them through the engine (crossing request boundaries), and report
+//! per-request latency plus aggregate throughput.
+//!
+//! The session is synchronous and deterministic: [`ServeSession::submit`]
+//! enqueues, [`ServeSession::flush`] runs everything queued and
+//! attributes to each request the wall-clock time from flush start to
+//! the completion of the last micro-batch containing one of its
+//! images. For MX variants the micro-batch segmentation cannot change
+//! any logit (activation groups are per token row); the per-tensor
+//! INT4 baseline is batch-composition dependent, as it already is in
+//! the HLO eval path.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::serve::engine::{argmax_rows, ServeEngine};
+
+/// One queued inference request.
+#[derive(Debug, Clone)]
+struct Request {
+    id: u64,
+    images: Vec<f32>,
+    n: usize,
+}
+
+/// Completed request: predicted class per image + logits + latency.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub preds: Vec<usize>,
+    pub logits: Vec<f32>,
+    pub latency_ms: f64,
+}
+
+/// Aggregate serving statistics across all flushes.
+#[derive(Debug, Clone, Default)]
+pub struct SessionStats {
+    pub requests: usize,
+    pub images: usize,
+    pub batches: usize,
+    pub wall_ms: f64,
+    latencies_ms: Vec<f64>,
+}
+
+impl SessionStats {
+    pub fn imgs_per_sec(&self) -> f64 {
+        if self.wall_ms <= 0.0 {
+            return 0.0;
+        }
+        self.images as f64 / (self.wall_ms / 1e3)
+    }
+
+    /// Latency percentile over completed requests (q in [0, 1]).
+    pub fn latency_pct_ms(&self, q: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let i = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        v[i]
+    }
+}
+
+/// Batched serving session over a [`ServeEngine`].
+pub struct ServeSession {
+    engine: ServeEngine,
+    queue: Vec<Request>,
+    next_id: u64,
+    stats: SessionStats,
+}
+
+impl ServeSession {
+    pub fn new(engine: ServeEngine) -> ServeSession {
+        ServeSession { engine, queue: Vec::new(), next_id: 0, stats: SessionStats::default() }
+    }
+
+    pub fn engine(&self) -> &ServeEngine {
+        &self.engine
+    }
+
+    /// Enqueue an `n`-image request; returns its id.
+    pub fn submit(&mut self, images: Vec<f32>, n: usize) -> Result<u64> {
+        if n == 0 || images.len() != n * self.engine.pixels_per_image() {
+            bail!(
+                "request must be n x {} pixels, got n={n} len={}",
+                self.engine.pixels_per_image(),
+                images.len()
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push(Request { id, images, n });
+        Ok(id)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Run every queued request through the engine in micro-batches
+    /// that cross request boundaries, in submission order. Returns one
+    /// [`Response`] per request, in submission order.
+    pub fn flush(&mut self) -> Vec<Response> {
+        let reqs = std::mem::take(&mut self.queue);
+        if reqs.is_empty() {
+            return Vec::new();
+        }
+        let px = self.engine.pixels_per_image();
+        let classes = self.engine.classes();
+        let total: usize = reqs.iter().map(|r| r.n).sum();
+        let mut images = Vec::with_capacity(total * px);
+        for r in &reqs {
+            images.extend_from_slice(&r.images);
+        }
+
+        // Forward in micro-batches, recording each batch's completion
+        // time relative to flush start.
+        let micro = self.engine.cfg.micro_batch;
+        let mut logits = Vec::with_capacity(total * classes);
+        let mut done_at_ms = Vec::with_capacity(total); // per image
+        let t0 = Instant::now();
+        let mut done = 0;
+        let mut batches = 0;
+        while done < total {
+            let m = micro.min(total - done);
+            let chunk = &images[done * px..(done + m) * px];
+            logits.extend(self.engine.model().forward(chunk, m, self.engine.cfg.workers));
+            let at = t0.elapsed().as_secs_f64() * 1e3;
+            done_at_ms.extend(std::iter::repeat(at).take(m));
+            done += m;
+            batches += 1;
+        }
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // Slice results back per request; latency = completion of the
+        // request's last image.
+        let mut out = Vec::with_capacity(reqs.len());
+        let mut off = 0;
+        for r in &reqs {
+            let lg = logits[off * classes..(off + r.n) * classes].to_vec();
+            let latency_ms = done_at_ms[off + r.n - 1];
+            out.push(Response {
+                id: r.id,
+                preds: argmax_rows(&lg, classes),
+                logits: lg,
+                latency_ms,
+            });
+            self.stats.latencies_ms.push(latency_ms);
+            off += r.n;
+        }
+        self.stats.requests += reqs.len();
+        self.stats.images += total;
+        self.stats.batches += batches;
+        self.stats.wall_ms += wall_ms;
+        out
+    }
+
+    pub fn stats(&self) -> &SessionStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{e2m1, Scaling};
+    use crate::serve::engine::{ServeConfig, ServeEngine};
+    use crate::serve::model::{ActQuant, PackedVit, ServeGeom, WeightQuant};
+    use crate::util::rng::Rng;
+
+    fn engine(micro_batch: usize) -> ServeEngine {
+        let geom = ServeGeom::new(8, 4, 32, 2, 4, 3, 4);
+        let mut rng = Rng::new(77);
+        let params: Vec<f32> = (0..geom.total_params()).map(|_| rng.normal() * 0.05).collect();
+        let fmt = e2m1();
+        let model = PackedVit::build(
+            geom,
+            &params,
+            None,
+            WeightQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+            ActQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+        )
+        .unwrap();
+        ServeEngine::new(model, ServeConfig { micro_batch, workers: 2 }).unwrap()
+    }
+
+    #[test]
+    fn flush_matches_direct_engine_inference() {
+        // Micro-batch 4 over requests of 3 + 2 + 4 images: batches
+        // cross request boundaries, results must not change.
+        let eng = engine(4);
+        let px = eng.pixels_per_image();
+        let mut rng = Rng::new(2);
+        let mut sess = ServeSession::new(engine(4));
+        let mut all = Vec::new();
+        let mut sizes = Vec::new();
+        for n in [3usize, 2, 4] {
+            let imgs: Vec<f32> = (0..n * px).map(|_| rng.normal()).collect();
+            all.extend_from_slice(&imgs);
+            sizes.push(n);
+            sess.submit(imgs, n).unwrap();
+        }
+        assert_eq!(sess.pending(), 3);
+        let rs = sess.flush();
+        assert_eq!(sess.pending(), 0);
+        assert_eq!(rs.len(), 3);
+        let want = eng.predict(&all, 9);
+        let mut got = Vec::new();
+        for (r, n) in rs.iter().zip(&sizes) {
+            assert_eq!(r.preds.len(), *n);
+            assert!(r.latency_ms >= 0.0);
+            got.extend_from_slice(&r.preds);
+        }
+        assert_eq!(got, want);
+        // Later requests cannot finish before earlier ones.
+        assert!(rs.windows(2).all(|w| w[0].latency_ms <= w[1].latency_ms));
+        let st = sess.stats();
+        assert_eq!((st.requests, st.images), (3, 9));
+        assert_eq!(st.batches, 3); // ceil(9 / 4)
+        assert!(st.imgs_per_sec() > 0.0);
+        assert!(st.latency_pct_ms(0.5) <= st.latency_pct_ms(1.0));
+    }
+
+    #[test]
+    fn submit_validates_shape() {
+        let mut sess = ServeSession::new(engine(4));
+        assert!(sess.submit(vec![0.0; 5], 1).is_err());
+        assert!(sess.submit(Vec::new(), 0).is_err());
+        let px = sess.engine().pixels_per_image();
+        assert!(sess.submit(vec![0.0; px], 1).is_ok());
+    }
+
+    #[test]
+    fn empty_flush_is_empty() {
+        let mut sess = ServeSession::new(engine(2));
+        assert!(sess.flush().is_empty());
+        assert_eq!(sess.stats().requests, 0);
+    }
+}

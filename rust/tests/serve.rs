@@ -1,0 +1,298 @@
+//! Integration tests for the packed serving subsystem: fused-kernel
+//! bit-exactness (property-tested over random/ragged shapes), the
+//! TJCKPT02 checkpoint -> manifest -> engine path, eval parity between
+//! the fused and dequant-mirror forwards, and the no-f32-mirror memory
+//! guarantee.
+
+use tetrajet::coordinator::{PackedSeg, TrainState};
+use tetrajet::data::{EvalSet, SynthVision};
+use tetrajet::quant::{e2m1, MxQuantizer, PackedMx, Quantizer, Scaling};
+use tetrajet::runtime::Manifest;
+use tetrajet::serve::{
+    fused_matmul, matmul_ref, PackedVit, ServeConfig, ServeEngine, ServeGeom,
+    ServeSession,
+};
+use tetrajet::testing::{check, gen_f32_vec};
+use tetrajet::util::json::Json;
+use tetrajet::util::rng::Rng;
+
+#[test]
+fn prop_fused_matmul_equals_dequant_then_matmul() {
+    // Random (n, d, rows) including ragged d (non-multiple-of-32
+    // contraction axes) and random row sub-ranges of a stacked weight.
+    check(
+        "fused == dequant+matmul",
+        60,
+        |r| {
+            let d = [32usize, 48, 57, 64, 96][r.below(5)];
+            let n = 1 + r.below(5);
+            let rows = 1 + r.below(12);
+            let x = gen_f32_vec(r, n * d, 1.0);
+            let w = gen_f32_vec(r, rows * d, 0.5);
+            let bias = gen_f32_vec(r, rows, 0.1);
+            let with_bias = r.below(2) == 0;
+            let row0 = r.below(rows);
+            (d, n, rows, x, w, bias, with_bias, row0)
+        },
+        |(d, n, rows, x, w, bias, with_bias, row0)| {
+            let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+            let mut p = PackedMx::default();
+            q.quantize_packed(w, *d, &mut p);
+            let wq = p.dequantize();
+            let sub = *rows - *row0;
+            let b = with_bias.then_some(&bias[*row0..]);
+            let want = matmul_ref(x, *n, *d, &wq[row0 * d..rows * d], sub, b);
+            (1..=3).all(|workers| {
+                fused_matmul(x, *n, &p, *row0, sub, b, workers) == want
+            })
+        },
+    );
+}
+
+fn tiny_geom() -> ServeGeom {
+    ServeGeom::new(8, 4, 32, 2, 4, 3, 4)
+}
+
+fn random_params(geom: &ServeGeom, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut p: Vec<f32> = (0..geom.total_params()).map(|_| rng.normal() * 0.08).collect();
+    // Layer-norm gains near 1 keep activations in a sane range.
+    for spec in geom.param_spec() {
+        if spec.name.ends_with(".g") {
+            for v in &mut p[spec.range()] {
+                *v = 1.0 + *v * 0.1;
+            }
+        }
+    }
+    p
+}
+
+/// Serialize a [`ServeGeom`]'s layout as a manifest JSON (what aot.py
+/// would emit for this model), so the manifest-driven serving path is
+/// testable without artifacts.
+fn manifest_for(geom: &ServeGeom, kind: &str, qema: bool) -> Manifest {
+    let segs: Vec<String> = geom
+        .param_spec()
+        .iter()
+        .map(|s| {
+            format!(
+                r#"{{"name":"{}","shape":[{}],"offset":{},"size":{},"quantized":{}}}"#,
+                s.name,
+                s.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(","),
+                s.offset,
+                s.size,
+                s.quantized
+            )
+        })
+        .collect();
+    let text = format!(
+        r#"{{
+          "model": {{"name":"vit-nano","img":{img},"patch":{patch},"dim":{dim},
+                    "depth":{depth},"heads":{heads},"classes":{classes},"seq":{seq}}},
+          "variant": {{"name":"tetrajet","kind":"{kind}","fwd_fmt":"e2m1",
+                      "bwd_fmt":"e2m1","scaling":"tf","bwd_rounding":"stoch",
+                      "flow":"double","qema":{qema},
+                      "enabled":[true,true,true,true,true,true],"impl":"ref"}},
+          "batch": 4,
+          "probe_block": 0,
+          "params": {{"total": {total}, "qw_total": {qw}, "segments": [{segs}]}},
+          "train_step": {{"inputs":[],"outputs":[]}},
+          "eval_step": {{"inputs":[],"outputs":[]}},
+          "probe": {{"inputs":[],"outputs":[]}}
+        }}"#,
+        img = geom.img,
+        patch = geom.patch,
+        dim = geom.dim,
+        depth = geom.depth,
+        heads = geom.heads,
+        classes = geom.classes,
+        seq = geom.seq,
+        total = geom.total_params(),
+        qw = geom.qw_total(),
+        segs = segs.join(","),
+    );
+    Manifest::from_json(&Json::parse(&text).unwrap()).unwrap()
+}
+
+#[test]
+fn geom_roundtrips_through_manifest() {
+    let geom = tiny_geom();
+    let man = manifest_for(&geom, "mx", false);
+    let back = ServeGeom::from_manifest(&man).unwrap();
+    assert_eq!(back.total_params(), geom.total_params());
+    assert_eq!(back.qw_total(), geom.qw_total());
+    assert_eq!(back.hidden, geom.hidden);
+    assert_eq!(back.seq, geom.seq);
+}
+
+/// Quantize a parameter vector's quantized prefix the way the trainer
+/// mirror does: one PackedMx per stacked weight segment.
+fn trainer_style_packed(geom: &ServeGeom, params: &[f32]) -> Vec<PackedSeg> {
+    let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+    geom.param_spec()
+        .iter()
+        .filter(|s| s.quantized)
+        .map(|s| {
+            let mut p = PackedMx::default();
+            q.quantize_packed(&params[s.range()], s.cols(), &mut p);
+            PackedSeg { name: s.name.to_string(), offset: s.offset, packed: p }
+        })
+        .collect()
+}
+
+#[test]
+fn tjckpt02_to_engine_end_to_end() {
+    let geom = tiny_geom();
+    let man = manifest_for(&geom, "mx", false);
+    let params = random_params(&geom, 1);
+    let packed = trainer_style_packed(&geom, &params);
+
+    let mut state = TrainState::new(params.clone(), geom.qw_total());
+    state.step = 123;
+    let dir = std::env::temp_dir().join("tj_serve_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("e2e.ckpt");
+    state.save_packed(&path, &packed).unwrap();
+
+    let (loaded, segs) = TrainState::load_with_packed(&path).unwrap();
+    assert_eq!(loaded.step, 123);
+    assert_eq!(segs.len(), 4);
+    let from_codes =
+        PackedVit::from_checkpoint(&man, &loaded.params, Some(&loaded.ema), &segs).unwrap();
+    assert!(from_codes.is_fully_packed());
+
+    // The codes loaded from disk must drive the exact same forward as
+    // re-quantizing the f32 parameters from scratch.
+    let from_params = PackedVit::from_checkpoint(&man, &params, None, &[]).unwrap();
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = (0..2 * geom.img * geom.img * 3).map(|_| rng.normal()).collect();
+    assert_eq!(from_codes.forward(&x, 2, 2), from_params.forward(&x, 2, 1));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn packed_eval_matches_mirror_eval_bit_exact() {
+    let geom = tiny_geom();
+    let man = manifest_for(&geom, "mx", false);
+    let params = random_params(&geom, 2);
+    let vit = PackedVit::from_checkpoint(&man, &params, None, &[]).unwrap();
+    let cfg = ServeConfig { micro_batch: 4, workers: 2 };
+    let fused = ServeEngine::new(vit.clone(), cfg).unwrap();
+    let mirror = ServeEngine::new(vit.to_dense(), cfg).unwrap();
+
+    let ds = SynthVision::new(geom.img, geom.classes, 7, 128, 64);
+    let evalset = EvalSet::new(ds, 4, 32);
+    let a = fused.eval(&evalset);
+    let b = mirror.eval(&evalset);
+    assert_eq!(a.samples, 32);
+    assert_eq!(
+        (a.acc_pct, a.mean_loss),
+        (b.acc_pct, b.mean_loss),
+        "fused/packed eval must be bit-identical to the f32-mirror eval"
+    );
+}
+
+#[test]
+fn engine_never_materializes_f32_weight_mirror() {
+    let geom = tiny_geom();
+    let man = manifest_for(&geom, "mx", false);
+    let params = random_params(&geom, 3);
+    let vit = PackedVit::from_checkpoint(&man, &params, None, &[]).unwrap();
+    let engine = ServeEngine::new(vit, ServeConfig { micro_batch: 2, workers: 1 }).unwrap();
+    // Resident quantized-weight state is exactly codes + scale bytes:
+    // 0.5 B/element + 1 B per 32-element group (dims here are multiples
+    // of 32, so no ragged groups).
+    let qw = geom.qw_total();
+    assert_eq!(engine.resident_weight_bytes(), qw / 2 + qw / 32);
+    assert!(
+        engine.resident_weight_bytes() * 7 < qw * std::mem::size_of::<f32>(),
+        "packed resident size must stay >7x below an f32 mirror"
+    );
+    // ...and a forward pass does not change that.
+    let x = vec![0.25f32; geom.img * geom.img * 3];
+    let logits = engine.infer_logits(&x, 1);
+    assert_eq!(logits.len(), geom.classes);
+    assert_eq!(engine.resident_weight_bytes(), qw / 2 + qw / 32);
+}
+
+#[test]
+fn session_micro_batches_across_requests() {
+    let geom = tiny_geom();
+    let man = manifest_for(&geom, "mx", false);
+    let params = random_params(&geom, 4);
+    let vit = PackedVit::from_checkpoint(&man, &params, None, &[]).unwrap();
+    let cfg = ServeConfig { micro_batch: 4, workers: 2 };
+    let engine = ServeEngine::new(vit.clone(), cfg).unwrap();
+    let oracle = ServeEngine::new(vit, cfg).unwrap();
+
+    let px = 8 * 8 * 3;
+    let mut rng = Rng::new(9);
+    let mut sess = ServeSession::new(engine);
+    let mut all = Vec::new();
+    for n in [1usize, 5, 2] {
+        let imgs: Vec<f32> = (0..n * px).map(|_| rng.normal()).collect();
+        all.extend_from_slice(&imgs);
+        sess.submit(imgs, n).unwrap();
+    }
+    let rs = sess.flush();
+    let flat: Vec<usize> = rs.iter().flat_map(|r| r.preds.clone()).collect();
+    assert_eq!(flat, oracle.predict(&all, 8));
+    assert_eq!(sess.stats().batches, 2); // ceil(8 / 4)
+    assert_eq!(sess.stats().images, 8);
+}
+
+#[test]
+fn qema_and_int4_variants_serve() {
+    let geom = tiny_geom();
+    let params = random_params(&geom, 6);
+    let ema: Vec<f32> = params[..geom.qw_total()].iter().map(|v| v * 0.95).collect();
+
+    let man = manifest_for(&geom, "mx", true); // tetrajet_qema-style
+    let vit = PackedVit::from_checkpoint(&man, &params, Some(&ema), &[]).unwrap();
+    assert!(vit.is_fully_packed());
+    let x = vec![0.1f32; geom.img * geom.img * 3];
+    assert_eq!(vit.forward(&x, 1, 1), vit.to_dense().forward(&x, 1, 2));
+
+    let man = manifest_for(&geom, "int4", false);
+    let vit = PackedVit::from_checkpoint(&man, &params, None, &[]).unwrap();
+    assert!(vit.is_fully_packed());
+    assert_eq!(vit.forward(&x, 1, 1), vit.to_dense().forward(&x, 1, 2));
+
+    let man = manifest_for(&geom, "fp32", false);
+    let vit = PackedVit::from_checkpoint(&man, &params, None, &[]).unwrap();
+    assert!(!vit.is_fully_packed(), "fp32 variant has no packed form");
+    assert!(vit.forward(&x, 1, 1).iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn wrong_variant_for_packed_checkpoint_is_rejected() {
+    // e2m1 MX codes served under an int4 (different level table) or
+    // fp32 (no packed form at all) manifest must fail loudly instead
+    // of reporting silently wrong accuracy.
+    let geom = tiny_geom();
+    let params = random_params(&geom, 9);
+    let packed = trainer_style_packed(&geom, &params);
+    let man = manifest_for(&geom, "int4", false);
+    assert!(PackedVit::from_checkpoint(&man, &params, None, &packed).is_err());
+    let man = manifest_for(&geom, "fp32", false);
+    assert!(PackedVit::from_checkpoint(&man, &params, None, &packed).is_err());
+}
+
+#[test]
+fn checkpoint_with_wrong_geometry_is_rejected() {
+    let geom = tiny_geom();
+    let man = manifest_for(&geom, "mx", false);
+    let params = random_params(&geom, 8);
+    let mut packed = trainer_style_packed(&geom, &params);
+    // Corrupt one segment's geometry: wrong cols.
+    let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+    let spec = geom.param_spec();
+    let s0 = &spec[0];
+    let mut p = PackedMx::default();
+    q.quantize_packed(&params[s0.range()], s0.cols() * 2, &mut p);
+    packed[0].packed = p;
+    assert!(PackedVit::from_checkpoint(&man, &params, None, &packed).is_err());
+    // Missing segment.
+    let missing = trainer_style_packed(&geom, &params)[1..].to_vec();
+    assert!(PackedVit::from_checkpoint(&man, &params, None, &missing).is_err());
+}
