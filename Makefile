@@ -3,12 +3,22 @@
 
 RUST_DIR := rust
 
-.PHONY: tier1 build test fmt fmt-check bench artifacts
+.PHONY: tier1 build test fmt fmt-check bench loadtest-smoke artifacts
 
 # `cargo bench --no-run` keeps the bench code compiling without paying
 # for a full measurement sweep.
 tier1:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q && cargo bench --no-run && cargo fmt --check
+	$(MAKE) loadtest-smoke
+
+# 2-engine continuous-batching smoke: ~200 virtual-pace Poisson
+# requests against a seeded synthetic model (no artifacts needed),
+# emitting the BENCH json + regression comparison in a few seconds.
+loadtest-smoke:
+	cd $(RUST_DIR) && cargo run --release --quiet -- serve --synthetic tiny \
+	  --engines 2 --micro-batch 8 --workers 2 --queue-depth 64 \
+	  --requests 200 --request-size 2 --rate 400 --seed 0 \
+	  --pace virtual --service-ms 0.5 --load-test
 
 build:
 	cd $(RUST_DIR) && cargo build --release

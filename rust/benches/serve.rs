@@ -13,8 +13,8 @@ use std::time::Instant;
 use harness::Bench;
 use tetrajet::quant::{e2m1, MxQuantizer, PackedMx, Quantizer, Scaling};
 use tetrajet::serve::{
-    fused_matmul, matmul_ref, ActQuant, PackedVit, ServeConfig, ServeEngine,
-    ServeGeom, WeightQuant,
+    fused_matmul, matmul_ref, ActQuant, LatencyRecorder, PackedVit, ServeConfig, ServeEngine,
+    ServeFleet, ServeGeom, WeightQuant,
 };
 use tetrajet::util::json::{num, obj, s};
 use tetrajet::util::rng::Rng;
@@ -72,38 +72,68 @@ fn main() {
     );
     let px = geom.img * geom.img * 3;
     for batch in [1usize, 16, 64] {
-        let engine = ServeEngine::new(
-            model.clone(),
-            ServeConfig { micro_batch: batch.min(16), workers },
-        )
-        .unwrap();
+        let cfg = ServeConfig::builder()
+            .micro_batch(batch.min(16))
+            .workers(workers)
+            .queue_depth(256)
+            .build()
+            .unwrap();
+        let engine = ServeEngine::new(model.clone(), cfg).unwrap();
         let x: Vec<f32> = (0..batch * px).map(|_| rng.normal()).collect();
-        // Warmup + timed samples (the harness reports wall times; the
-        // JSON line wants latency percentiles per batch size).
+        // Warmup + timed samples, funneled through the shared
+        // LatencyRecorder so the JSON schema matches serve/fleet/load.
         std::hint::black_box(engine.infer_logits(&x, batch));
         let iters = (64 / batch).clamp(3, 32);
-        let mut samples: Vec<f64> = Vec::with_capacity(iters);
+        let mut rec = LatencyRecorder::default();
+        rec.note_arrival(0.0);
+        let t0 = Instant::now();
         for _ in 0..iters {
             let t = Instant::now();
             std::hint::black_box(engine.infer_logits(&x, batch));
-            samples.push(t.elapsed().as_secs_f64());
+            let ms = t.elapsed().as_secs_f64() * 1e3;
+            let at = t0.elapsed().as_secs_f64() * 1e3;
+            rec.record_batch(batch, ms, at);
+            rec.record_latency(ms);
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let med = samples[samples.len() / 2];
-        let max = samples[samples.len() - 1];
+        let st = rec.summary();
         b.case(&format!("engine vit-micro batch {batch}"), batch as u64, || {
             std::hint::black_box(engine.infer_logits(&x, batch));
         });
-        let j = obj(vec![
+        let mut fields = vec![
             ("bench", s("serve")),
             ("case", s("engine_throughput")),
             ("model", s("vit-micro")),
             ("batch", num(batch as f64)),
-            ("imgs_per_s", num(batch as f64 / med)),
-            ("latency_ms_p50", num(med * 1e3)),
-            ("latency_ms_max", num(max * 1e3)),
             ("packed_weight_bytes", num(model.quantized_weight_bytes() as f64)),
-        ]);
-        println!("BENCH {}", j.to_string());
+        ];
+        fields.extend(st.fields());
+        println!("BENCH {}", obj(fields).to_string());
+    }
+
+    // --- 2-engine row-sharded fleet vs single engine, batch 16 ---
+    let batch = 16usize;
+    let x: Vec<f32> = (0..batch * px).map(|_| rng.normal()).collect();
+    for engines in [1usize, 2] {
+        let cfg = ServeConfig::builder()
+            .micro_batch(batch)
+            .workers((workers / engines).max(1))
+            .engines(engines)
+            .queue_depth(256)
+            .build()
+            .unwrap();
+        let mut fleet = ServeFleet::new(model.clone(), cfg).unwrap();
+        std::hint::black_box(fleet.infer_logits(x.clone(), batch).unwrap());
+        b.case(&format!("fleet vit-micro {engines} engines batch {batch}"), batch as u64, || {
+            std::hint::black_box(fleet.infer_logits(x.clone(), batch).unwrap());
+        });
+        let mut fields = vec![
+            ("bench", s("serve")),
+            ("case", s("fleet_throughput")),
+            ("model", s("vit-micro")),
+            ("engines", num(engines as f64)),
+            ("batch", num(batch as f64)),
+        ];
+        fields.extend(fleet.stats().fields());
+        println!("BENCH {}", obj(fields).to_string());
     }
 }

@@ -56,11 +56,31 @@ serve options:
   --ckpt PATH       checkpoint (TJCKPT02 serves codes directly;
                     TJCKPT01 re-quantizes the f32 params)
   --variant NAME    manifest to take geometry/recipe from
-  --requests N      synthetic request count (default 32)
+  --synthetic NAME  serve a seeded synthetic model instead of a
+                    checkpoint: tiny | micro (smoke/load-test path)
+  --engines N       row-sharded fleet engines (default 1)
+  --micro-batch N   scheduler micro-batch (default: artifact batch)
+  --workers N       kernel worker threads per engine (default: half
+                    the cores)
+  --queue-depth N   admission queue bound in images (default 256);
+                    arrivals beyond it are rejected with a reason
+  --requests N      request count (default 32)
   --request-size N  images per request (default 4)
-  --micro-batch N   engine micro-batch (default: artifact batch)
-  --workers N       kernel worker threads (default: half the cores)
-  --eval-samples N  also report accuracy on N val samples (default 256)
+  --load-test       open-loop Poisson load test (emits BENCH json)
+  --rate F          load-test arrival rate, requests/s (default 64)
+  --seed N          arrival-schedule + synthetic-model seed (default 0)
+  --deadline-ms F   per-request deadline relative to arrival
+  --pace MODE       real | virtual (default real); virtual simulates
+                    a clock at --service-ms per image, making the
+                    whole run deterministic for a given seed
+  --service-ms F    virtual-pace per-image service time (default 1.0)
+  --bench-out PATH  BENCH json file (default results/BENCH_<pr>.json)
+  --bench-pr N      PR number stamped into the BENCH file (default 6)
+  --gate-tol F      regression tolerance vs the previous BENCH_*.json
+                    (default 0.10 = 10%)
+  --strict-gate     exit nonzero when a regression is flagged
+  --eval-samples N  also report accuracy on N val samples
+                    (default 256; checkpoint mode only)
 
 exp options:
   --quick           reduced steps/eval for smoke runs
@@ -173,6 +193,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Shared serving-config parsing: `serve` and `eval --packed` read the
+/// same flag set through the same validating builder, so the two
+/// subcommands cannot drift apart.
+fn serve_cfg_from_args(args: &Args, default_micro: usize) -> Result<tetrajet::serve::ServeConfig> {
+    tetrajet::serve::ServeConfig::builder()
+        .micro_batch(args.get_usize("micro-batch", default_micro)?)
+        .workers(args.get_usize("workers", tetrajet::util::parallel::default_workers())?)
+        .engines(args.get_usize("engines", 1)?)
+        .queue_depth(args.get_usize("queue-depth", 256)?)
+        .build()
+}
+
 /// Manifest + checkpoint -> packed serving model; the path shared by
 /// `eval --packed` and `serve` (no PJRT client, no HLO compilation).
 fn load_packed_model(
@@ -212,10 +244,7 @@ fn cmd_eval_packed(args: &Args) -> Result<()> {
         cfg.val_size,
     );
     let evalset = tetrajet::data::EvalSet::new(ds, man.batch, eval_samples);
-    let scfg = tetrajet::serve::ServeConfig {
-        micro_batch: man.batch,
-        workers: args.get_usize("workers", tetrajet::util::parallel::default_workers())?,
-    };
+    let scfg = serve_cfg_from_args(args, man.batch)?;
     if args.has_flag("verify-mirror") {
         let mirror = tetrajet::serve::ServeEngine::new(vit.to_dense(), scfg)?;
         let em = mirror.eval(&evalset);
@@ -277,90 +306,249 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let (man, vit, step) = load_packed_model(args)?;
+    use tetrajet::serve::{
+        ActQuant, LoadReport, LoadSpec, Outcome, Pace, PackedVit, ServeFleet, ServeGeom,
+        WeightQuant,
+    };
+    use tetrajet::util::json::{num, obj, s, Json};
+    use tetrajet::util::rng::Rng;
+
     let requests = args.get_usize("requests", 32)?;
     let request_size = args.get_usize("request-size", 4)?;
     if requests == 0 || request_size == 0 {
         bail!("--requests and --request-size must be >= 1");
     }
-    let scfg = tetrajet::serve::ServeConfig {
-        micro_batch: args.get_usize("micro-batch", man.batch)?,
-        workers: args.get_usize("workers", tetrajet::util::parallel::default_workers())?,
+    let seed = args.get_u64("seed", 0)?;
+
+    // Model: checkpoint-backed, or a seeded synthetic geometry — the
+    // no-artifacts path `make loadtest-smoke` exercises.
+    let (tag, vit, step, data) = match args.get("synthetic") {
+        Some(name) => {
+            let geom = match name {
+                "tiny" => ServeGeom::new(16, 4, 32, 2, 4, 10, 4),
+                "micro" => ServeGeom::new(32, 4, 64, 4, 4, 10, 4),
+                other => bail!("unknown synthetic geometry {other:?} (tiny | micro)"),
+            };
+            let mut rng = Rng::new(seed).fold_in(0x4d4f44); // "MOD"
+            let params: Vec<f32> =
+                (0..geom.total_params()).map(|_| rng.normal() * 0.05).collect();
+            let fmt = tetrajet::quant::e2m1();
+            let scaling = tetrajet::quant::Scaling::TruncationFree;
+            let vit = PackedVit::build(
+                geom,
+                &params,
+                None,
+                WeightQuant::Mx { fmt, scaling },
+                ActQuant::Mx { fmt, scaling },
+            )?;
+            (format!("synthetic-{name}"), vit, 0usize, None)
+        }
+        None => {
+            let (man, vit, step) = load_packed_model(args)?;
+            let cfg = TrainConfig::default_run(&man.variant.name);
+            let ds = tetrajet::data::SynthVision::new(
+                man.model.img,
+                man.model.classes,
+                cfg.data_seed,
+                cfg.train_size,
+                cfg.val_size,
+            );
+            (man.variant.name.clone(), vit, step, Some((ds, cfg.val_size, man.batch)))
+        }
     };
+
+    let default_micro = data.as_ref().map_or(8, |(_, _, batch)| *batch);
+    let scfg = serve_cfg_from_args(args, default_micro)?;
+    let g = vit.geom.clone();
+    let px = g.img * g.img * 3;
     let packed_bytes = vit.quantized_weight_bytes();
     let mirror_bytes = vit.f32_mirror_bytes();
-    let engine = tetrajet::serve::ServeEngine::new(vit, scfg)?;
+
+    // Accuracy eval needs an unsharded engine; clone before the fleet
+    // consumes the model into shards.
+    let eval_samples = args.get_usize("eval-samples", if data.is_some() { 256 } else { 0 })?;
+    let eval_engine = if eval_samples > 0 && data.is_some() {
+        Some(tetrajet::serve::ServeEngine::new(vit.clone(), scfg)?)
+    } else {
+        None
+    };
+
+    let mut fleet = ServeFleet::new(vit, scfg)?;
     loginfo!(
-        "serving {} (step {}): {} blocks, dim {}, micro-batch {}, {} workers, \
-         {:.1} KiB packed weights ({:.1}x below the f32 mirror)",
-        man.variant.name,
-        step,
-        man.model.depth,
-        man.model.dim,
-        scfg.micro_batch,
+        "serving {tag} (step {step}): {} blocks, dim {}, {} engines x {} workers, \
+         micro-batch {}, queue depth {}, {:.1} KiB packed shards ({:.1}x below the f32 mirror)",
+        g.depth,
+        g.dim,
+        scfg.engines,
         scfg.workers,
+        scfg.micro_batch,
+        scfg.queue_depth,
         packed_bytes as f64 / 1024.0,
         mirror_bytes as f64 / packed_bytes.max(1) as f64
     );
 
-    // Synthetic request stream drawn from the validation split.
-    let cfg = TrainConfig::default_run(&man.variant.name);
-    let ds = tetrajet::data::SynthVision::new(
-        man.model.img,
-        man.model.classes,
-        cfg.data_seed,
-        cfg.train_size,
-        cfg.val_size,
-    );
-    let px = engine.pixels_per_image();
-    let mut session = tetrajet::serve::ServeSession::new(engine);
-    let mut labels: Vec<Vec<i32>> = Vec::with_capacity(requests);
-    let mut idx = 0usize;
-    for _ in 0..requests {
-        let mut imgs = vec![0.0f32; request_size * px];
-        let mut ls = Vec::with_capacity(request_size);
-        for i in 0..request_size {
-            ls.push(ds.sample_into(
-                tetrajet::data::Split::Val,
-                idx % cfg.val_size,
-                &mut imgs[i * px..(i + 1) * px],
-            ));
-            idx += 1;
+    // Request factory: validation-split images with labels (checkpoint
+    // mode) or seeded random pixels (synthetic mode). Either way the
+    // i-th request is a pure function of (seed, i).
+    let mut make_request: Box<dyn FnMut(usize) -> (Vec<f32>, Vec<i32>)> = match &data {
+        Some((ds, val_size, _)) => {
+            let val_size = *val_size;
+            Box::new(move |i| {
+                let mut imgs = vec![0.0f32; request_size * px];
+                let mut ls = Vec::with_capacity(request_size);
+                for k in 0..request_size {
+                    ls.push(ds.sample_into(
+                        tetrajet::data::Split::Val,
+                        (i * request_size + k) % val_size,
+                        &mut imgs[k * px..(k + 1) * px],
+                    ));
+                }
+                (imgs, ls)
+            })
         }
-        labels.push(ls);
-        session.submit(imgs, request_size)?;
+        None => {
+            let base = Rng::new(seed).fold_in(0x494d47); // "IMG"
+            Box::new(move |i| {
+                let mut rng = base.fold_in(i as u64);
+                let imgs = (0..request_size * px).map(|_| rng.uniform() * 2.0 - 1.0).collect();
+                (imgs, Vec::new())
+            })
+        }
+    };
+
+    let load_test = args.has_flag("load-test");
+    let pace_name = args.get_or("pace", "real").to_string();
+    let rate_rps = args.get_f32("rate", 64.0)? as f64;
+    let report = if load_test {
+        let pace = match pace_name.as_str() {
+            "real" => Pace::Real,
+            "virtual" => {
+                Pace::Virtual { ms_per_image: args.get_f32("service-ms", 1.0)? as f64 }
+            }
+            other => bail!("unknown pace {other:?} (real | virtual)"),
+        };
+        let spec = LoadSpec {
+            seed,
+            requests,
+            request_size,
+            rate_rps,
+            deadline_ms: args.get("deadline-ms").map(|v| v.parse::<f64>()).transpose()?,
+            pace,
+        };
+        tetrajet::serve::run_load_test(&mut fleet, &spec, &mut *make_request)?
+    } else {
+        // Closed-loop replay: submit everything (draining ahead of the
+        // bounded queue so nothing is rejected), then run dry.
+        if request_size > scfg.queue_depth {
+            bail!("--request-size {} exceeds --queue-depth {}", request_size, scfg.queue_depth);
+        }
+        let mut labels = std::collections::HashMap::new();
+        for i in 0..requests {
+            while fleet.pending_images() + request_size > scfg.queue_depth {
+                fleet.step();
+            }
+            let (imgs, ls) = make_request(i);
+            match fleet.submit(imgs, request_size, None) {
+                Ok(t) => {
+                    if !ls.is_empty() {
+                        labels.insert(t.id, ls);
+                    }
+                }
+                Err(e) => bail!("closed-loop submit failed: {e}"),
+            }
+        }
+        let (mut completed, mut correct, mut labeled) = (0usize, 0usize, 0usize);
+        for o in fleet.wait_all() {
+            if let Outcome::Done(r) = o {
+                completed += 1;
+                if let Some(y) = labels.get(&r.id) {
+                    labeled += y.len();
+                    correct +=
+                        r.preds.iter().zip(y).filter(|(&p, &l)| p == l as usize).count();
+                }
+            }
+        }
+        LoadReport {
+            summary: fleet.stats(),
+            accepted: requests,
+            rejected: 0,
+            expired: 0,
+            completed,
+            correct,
+            labeled,
+        }
+    };
+    drop(make_request);
+
+    let st = &report.summary;
+    println!(
+        "serve[{tag}]: {} engines  {} requests ({} accepted, {} rejected, {} expired) \
+         -> {:.1} imgs/s over {:.1} ms wall",
+        scfg.engines,
+        requests,
+        report.accepted,
+        report.rejected,
+        report.expired,
+        st.imgs_per_sec(),
+        st.wall_ms,
+    );
+    println!(
+        "serve[{tag}]: latency p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  max {:.2} ms  \
+         ({} images in {} micro-batches, {:.1} ms compute)",
+        st.p50_ms, st.p95_ms, st.p99_ms, st.max_ms, st.images, st.batches, st.busy_ms,
+    );
+    if report.labeled > 0 {
+        println!(
+            "serve[{tag}]: top-1 {:.2}% over {} labeled request images",
+            100.0 * report.correct as f64 / report.labeled as f64,
+            report.labeled
+        );
     }
-    let responses = session.flush();
-    let mut correct = 0usize;
-    for (r, ls) in responses.iter().zip(&labels) {
-        for (&pred, &label) in r.preds.iter().zip(ls.iter()) {
-            if pred == label as usize {
-                correct += 1;
+
+    if load_test {
+        let mut fields = vec![
+            ("case", s("serve-load")),
+            ("model", s(&tag)),
+            ("engines", num(scfg.engines as f64)),
+            ("micro_batch", num(scfg.micro_batch as f64)),
+            ("queue_depth", num(scfg.queue_depth as f64)),
+            ("request_size", num(request_size as f64)),
+            ("rate_rps", num(rate_rps)),
+            ("pace", s(&pace_name)),
+            ("seed", num(seed as f64)),
+            ("accepted", num(report.accepted as f64)),
+        ];
+        fields.extend(st.fields());
+        let entry = obj(fields);
+        println!("BENCH {}", entry.to_string());
+
+        let pr = args.get_u64("bench-pr", 6)?;
+        let default_out = format!("results/BENCH_{pr}.json");
+        let out = std::path::PathBuf::from(args.get_or("bench-out", &default_out));
+        let dir = out.parent().map(std::path::Path::to_path_buf).unwrap_or_default();
+        let prev = tetrajet::util::benchio::find_previous(&dir, pr);
+        tetrajet::util::benchio::write_bench(&out, pr, vec![entry.clone()])?;
+        loginfo!("BENCH json written to {}", out.display());
+        if let Some((ppath, pdoc)) = prev {
+            let cur = obj(vec![("pr", num(pr as f64)), ("entries", Json::Arr(vec![entry]))]);
+            let tol = args.get_f32("gate-tol", 0.10)? as f64;
+            let flags = tetrajet::util::benchio::compare(&pdoc, &cur, tol);
+            for f in &flags {
+                println!("BENCH-REGRESSION: {f} (vs {})", ppath.display());
+            }
+            if !flags.is_empty() && args.has_flag("strict-gate") {
+                bail!(
+                    "{} perf regression(s) beyond the {:.0}% gate",
+                    flags.len(),
+                    tol * 100.0
+                );
             }
         }
     }
-    let st = session.stats();
-    println!(
-        "serve: {} requests x {} imgs in {:.1} ms -> {:.1} imgs/s  \
-         latency p50 {:.2} ms  p95 {:.2} ms  max {:.2} ms",
-        st.requests,
-        request_size,
-        st.wall_ms,
-        st.imgs_per_sec(),
-        st.latency_pct_ms(0.5),
-        st.latency_pct_ms(0.95),
-        st.latency_pct_ms(1.0),
-    );
-    println!(
-        "serve: top-1 {:.2}% over the {} request images ({} micro-batches)",
-        100.0 * correct as f64 / st.images.max(1) as f64,
-        st.images,
-        st.batches
-    );
-    let eval_samples = args.get_usize("eval-samples", 256)?;
-    if eval_samples > 0 {
-        let evalset = tetrajet::data::EvalSet::new(ds, man.batch, eval_samples);
-        let ev = session.engine().eval(&evalset);
+
+    if let (Some(engine), Some((ds, _, batch))) = (eval_engine, data) {
+        let evalset = tetrajet::data::EvalSet::new(ds, batch, eval_samples);
+        let ev = engine.eval(&evalset);
         print_eval(&ev, step, "serve");
     }
     Ok(())

@@ -224,6 +224,43 @@ impl PackedMx {
         Ok(PackedMx { codes, scales, tensor_scale, levels, len, cols })
     }
 
+    /// A standalone packed tensor holding rows `[row0, row0 + nrows)`
+    /// of this one (row-major, trailing dim `cols`). Codes and scale
+    /// bytes are carried over bit-for-bit — every sliced element
+    /// dequantizes to exactly the value it has in the full tensor —
+    /// which is what makes the row-sharded serve fleet bit-exact to the
+    /// single-engine path. Scale bytes slice directly because 1x32
+    /// groups never cross rows; codes byte-slice when the start index
+    /// is even and are repacked nibble-by-nibble otherwise (odd
+    /// `row0 * cols`). Per-tensor (INT4) mode carries the tensor scale.
+    pub fn slice_rows(&self, row0: usize, nrows: usize) -> Result<PackedMx> {
+        if self.cols == 0 || self.len % self.cols != 0 {
+            bail!("slice_rows needs a rectangular tensor, got len {} cols {}", self.len, self.cols);
+        }
+        let total_rows = self.len / self.cols;
+        if row0 + nrows > total_rows {
+            bail!("rows [{row0}, {}) exceed the {total_rows} stored rows", row0 + nrows);
+        }
+        let a = row0 * self.cols;
+        let len = nrows * self.cols;
+        let codes = if a % 2 == 0 {
+            self.codes[a / 2..(a + len + 1) / 2].to_vec()
+        } else {
+            let mut out = vec![0u8; (len + 1) / 2];
+            for i in 0..len {
+                out[i / 2] |= self.code(a + i) << ((i % 2) * 4);
+            }
+            out
+        };
+        let scales = if self.scales.is_empty() {
+            Vec::new()
+        } else {
+            let gpr = self.groups_per_row();
+            self.scales[row0 * gpr..(row0 + nrows) * gpr].to_vec()
+        };
+        PackedMx::from_parts(len, self.cols, codes, scales, self.tensor_scale, self.levels)
+    }
+
     /// The 4-bit level code of flat element `i`.
     #[inline]
     pub fn code(&self, i: usize) -> u8 {
@@ -605,6 +642,40 @@ mod tests {
             assert_eq!(level_table_id(level_table_from_id(id).unwrap()), Some(id));
         }
         assert!(level_table_from_id(9).is_none());
+    }
+
+    #[test]
+    fn slice_rows_preserves_values_even_and_odd_alignment() {
+        // cols 57 is odd, so any odd row0 starts mid-byte and exercises
+        // the nibble repack path; cols 32 stays byte-aligned.
+        for cols in [32usize, 57] {
+            let rows = 5;
+            let x = sample(rows * cols);
+            let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+            let mut p = PackedMx::default();
+            q.quantize_packed(&x, cols, &mut p);
+            let full = p.dequantize();
+            for (r0, nr) in [(0usize, 2usize), (1, 3), (3, 2), (2, 0), (0, 5)] {
+                let s = p.slice_rows(r0, nr).unwrap();
+                assert_eq!(s.len(), nr * cols, "cols={cols} r0={r0} nr={nr}");
+                assert_eq!(s.cols(), cols);
+                assert_eq!(s.levels(), p.levels());
+                assert_eq!(s.dequantize(), full[r0 * cols..(r0 + nr) * cols].to_vec());
+            }
+            assert!(p.slice_rows(4, 2).is_err(), "out-of-range rows rejected");
+        }
+    }
+
+    #[test]
+    fn slice_rows_per_tensor_keeps_scale() {
+        let x = sample(6 * 37);
+        let mut p = PackedMx::default();
+        Int4Quantizer.quantize_packed(&x, 37, &mut p);
+        assert_eq!(p.num_groups(), 0, "per-tensor mode");
+        let s = p.slice_rows(1, 4).unwrap();
+        assert_eq!(s.tensor_scale(), p.tensor_scale());
+        assert_eq!(s.num_groups(), 0);
+        assert_eq!(s.dequantize(), p.dequantize()[37..5 * 37].to_vec());
     }
 
     #[test]

@@ -10,18 +10,91 @@ use crate::data::EvalSet;
 use crate::serve::model::PackedVit;
 use crate::util::parallel::default_workers;
 
-/// Engine knobs.
+/// Serving knobs, shared by the single-engine session, the fleet, and
+/// both CLI subcommands (`serve` and `eval --packed` route through the
+/// same [`builder`](ServeConfig::builder), so the flag sets cannot
+/// diverge). Construct via the builder — it validates at build time
+/// instead of panicking mid-serve.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
     /// Maximum images per forward call; larger requests are split.
     pub micro_batch: usize,
     /// Threads for the row-parallel fused kernel.
     pub workers: usize,
+    /// Row-sharded engines in the fleet (1 = single-engine).
+    pub engines: usize,
+    /// Admission-queue bound, in images (backpressure beyond it).
+    pub queue_depth: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
-        ServeConfig { micro_batch: 16, workers: default_workers() }
+        ServeConfig {
+            micro_batch: 16,
+            workers: default_workers(),
+            engines: 1,
+            queue_depth: 256,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder { cfg: ServeConfig::default() }
+    }
+
+    /// Reject zero/contradictory settings up front.
+    pub fn validate(&self) -> Result<()> {
+        if self.micro_batch == 0 {
+            bail!("micro_batch must be >= 1");
+        }
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.engines == 0 {
+            bail!("engines must be >= 1");
+        }
+        if self.queue_depth < self.micro_batch {
+            bail!(
+                "queue_depth {} < micro_batch {}: a full micro-batch could never be admitted",
+                self.queue_depth,
+                self.micro_batch
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Chainable, validating constructor for [`ServeConfig`].
+#[derive(Debug, Clone)]
+pub struct ServeConfigBuilder {
+    cfg: ServeConfig,
+}
+
+impl ServeConfigBuilder {
+    pub fn micro_batch(mut self, n: usize) -> Self {
+        self.cfg.micro_batch = n;
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+
+    pub fn engines(mut self, n: usize) -> Self {
+        self.cfg.engines = n;
+        self
+    }
+
+    pub fn queue_depth(mut self, n: usize) -> Self {
+        self.cfg.queue_depth = n;
+        self
+    }
+
+    pub fn build(self) -> Result<ServeConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
     }
 }
 
@@ -33,9 +106,7 @@ pub struct ServeEngine {
 
 impl ServeEngine {
     pub fn new(model: PackedVit, cfg: ServeConfig) -> Result<ServeEngine> {
-        if cfg.micro_batch == 0 {
-            bail!("micro_batch must be >= 1");
-        }
+        cfg.validate()?;
         Ok(ServeEngine { model, cfg })
     }
 
@@ -159,7 +230,8 @@ mod tests {
             ActQuant::Mx { fmt, scaling: Scaling::TruncationFree },
         )
         .unwrap();
-        ServeEngine::new(model, ServeConfig { micro_batch, workers: 2 }).unwrap()
+        let cfg = ServeConfig::builder().micro_batch(micro_batch).workers(2).build().unwrap();
+        ServeEngine::new(model, cfg).unwrap()
     }
 
     #[test]
@@ -192,9 +264,29 @@ mod tests {
     }
 
     #[test]
-    fn zero_micro_batch_rejected() {
+    fn builder_rejects_zero_and_contradictory_settings() {
+        assert!(ServeConfig::builder().micro_batch(0).build().is_err());
+        assert!(ServeConfig::builder().workers(0).build().is_err());
+        assert!(ServeConfig::builder().engines(0).build().is_err());
+        // A queue shallower than one micro-batch can never fill one.
+        assert!(ServeConfig::builder().micro_batch(8).queue_depth(4).build().is_err());
+        let cfg = ServeConfig::builder()
+            .micro_batch(8)
+            .workers(3)
+            .engines(2)
+            .queue_depth(32)
+            .build()
+            .unwrap();
+        assert_eq!(
+            (cfg.micro_batch, cfg.workers, cfg.engines, cfg.queue_depth),
+            (8, 3, 2, 32)
+        );
         let e = tiny_engine(4);
         let model = e.model().clone();
-        assert!(ServeEngine::new(model, ServeConfig { micro_batch: 0, workers: 1 }).is_err());
+        assert!(ServeEngine::new(
+            model,
+            ServeConfig { micro_batch: 0, ..ServeConfig::default() }
+        )
+        .is_err());
     }
 }

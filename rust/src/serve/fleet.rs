@@ -1,0 +1,429 @@
+//! The continuous-batching serve fleet: N row-sharded engines behind
+//! mpsc work queues, one scheduler forming micro-batches across
+//! request boundaries, and scatter/gather at the fused kernel's
+//! row-parallel seam.
+//!
+//! Sharding: [`PackedVit::into_shards`] splits each depth-stacked
+//! quantized weight tensor into contiguous row ranges at the
+//! code/scale-byte level, one [`VitShard`] per engine. Each engine is
+//! a worker thread looping on an mpsc receiver; for every quantized
+//! linear the coordinator broadcasts the activation block ([`Arc`]d,
+//! no copies) to the engines whose row range intersects the requested
+//! slice, then gathers their output-column blocks and adds the bias
+//! once. Because each shard's kernel decodes exactly the bytes the
+//! single-engine kernel would, and the gather writes each column slice
+//! where the single kernel would have, fleet logits are bit-exact to
+//! the single-engine path (property-tested, ragged splits included).
+//!
+//! Scheduling is clock-free ([`Scheduler`]): the fleet threads time
+//! through `*_at` methods, so the open-loop load generator
+//! ([`crate::serve::load`]) can drive it on a virtual clock and get a
+//! deterministic admission/rejection/latency trace for a given seed.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::engine::ServeConfig;
+use crate::serve::model::{LinearExec, PackedVit, ServeGeom, VitShard};
+use crate::serve::scheduler::{Completions, Outcome, Reject, Scheduler, Ticket};
+use crate::serve::stats::LatencySummary;
+
+/// Work item for an engine thread: one row-slice of one quantized
+/// linear over a shared activation block.
+enum Job {
+    Linear {
+        store: usize,
+        x: Arc<Vec<f32>>,
+        n: usize,
+        /// Global row range, fully inside the engine's shard.
+        grow0: usize,
+        rows: usize,
+        reply: Sender<(usize, Vec<f32>)>,
+    },
+    Stop,
+}
+
+/// One engine: a worker thread owning a [`VitShard`], fed over mpsc.
+struct EngineHandle {
+    tx: Sender<Job>,
+    /// Global (start, end) row range per store, for intersection.
+    ranges: [(usize, usize); 4],
+    shard_bytes: usize,
+    join: Option<JoinHandle<()>>,
+}
+
+/// What one [`ServeFleet::step_at`] did.
+#[derive(Debug, Clone, Copy)]
+pub struct StepInfo {
+    /// Images in the executed batch (0 for an expiry-only step).
+    pub m: usize,
+    /// Batch completion time on the caller's clock.
+    pub done_ms: f64,
+    /// Measured forward compute time.
+    pub compute_ms: f64,
+}
+
+/// N row-sharded engines + scheduler + completion routing.
+pub struct ServeFleet {
+    trunk: PackedVit,
+    engines: Vec<EngineHandle>,
+    cfg: ServeConfig,
+    sched: Scheduler,
+    done: Completions,
+    clock: Instant,
+}
+
+impl ServeFleet {
+    /// Shard `vit` across `cfg.engines` worker threads.
+    pub fn new(vit: PackedVit, cfg: ServeConfig) -> Result<ServeFleet> {
+        cfg.validate()?;
+        let g = &vit.geom;
+        let px = g.img * g.img * 3;
+        let classes = g.classes;
+        let (trunk, shards) = vit.into_shards(cfg.engines)?;
+        let mut engines = Vec::with_capacity(shards.len());
+        for (e, shard) in shards.into_iter().enumerate() {
+            let ranges = [shard.range(0), shard.range(1), shard.range(2), shard.range(3)];
+            let shard_bytes = shard.bytes();
+            let workers = cfg.workers;
+            let (tx, rx) = channel::<Job>();
+            let join = std::thread::Builder::new()
+                .name(format!("tj-engine-{e}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        match job {
+                            Job::Linear { store, x, n, grow0, rows, reply } => {
+                                let out = shard.linear(store, &x, n, grow0, rows, workers);
+                                // A dropped gather (coordinator gone)
+                                // just ends the loop's usefulness.
+                                let _ = reply.send((e, out));
+                            }
+                            Job::Stop => break,
+                        }
+                    }
+                })
+                .with_context(|| format!("spawning engine thread {e}"))?;
+            engines.push(EngineHandle { tx, ranges, shard_bytes, join: Some(join) });
+        }
+        Ok(ServeFleet {
+            trunk,
+            engines,
+            cfg,
+            sched: Scheduler::new(px, cfg.queue_depth),
+            done: Completions::new(classes),
+            clock: Instant::now(),
+        })
+    }
+
+    pub fn engines(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn cfg(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn geom(&self) -> &ServeGeom {
+        &self.trunk.geom
+    }
+
+    pub fn pixels_per_image(&self) -> usize {
+        let g = self.geom();
+        g.img * g.img * 3
+    }
+
+    pub fn classes(&self) -> usize {
+        self.geom().classes
+    }
+
+    /// Resident quantized-weight bytes summed over all shards.
+    pub fn shard_bytes(&self) -> usize {
+        self.engines.iter().map(|e| e.shard_bytes).sum()
+    }
+
+    /// Milliseconds since the fleet started (the fleet's real clock).
+    pub fn now_ms(&self) -> f64 {
+        self.clock.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Admit a request at wall-clock now, deadline relative to now.
+    pub fn submit(
+        &mut self,
+        images: Vec<f32>,
+        n: usize,
+        deadline_ms: Option<f64>,
+    ) -> Result<Ticket, Reject> {
+        let now = self.now_ms();
+        self.submit_at(images, n, deadline_ms.map(|d| now + d), now)
+    }
+
+    /// Admit a request with explicit timestamps (virtual-clock path):
+    /// `deadline_ms` is absolute on the same clock as `arrival_ms`.
+    pub fn submit_at(
+        &mut self,
+        images: Vec<f32>,
+        n: usize,
+        deadline_ms: Option<f64>,
+        arrival_ms: f64,
+    ) -> Result<Ticket, Reject> {
+        self.done.rec.note_arrival(arrival_ms);
+        let r = self.sched.try_admit(images, n, deadline_ms, arrival_ms);
+        if matches!(r, Err(Reject::QueueFull { .. })) {
+            self.done.rec.record_reject();
+        }
+        r
+    }
+
+    pub fn pending(&self) -> usize {
+        self.sched.pending_requests()
+    }
+
+    pub fn pending_images(&self) -> usize {
+        self.sched.pending_images()
+    }
+
+    /// Arrival time of the oldest queued request.
+    pub fn earliest_arrival(&self) -> Option<f64> {
+        self.sched.earliest_arrival()
+    }
+
+    /// Form and run one micro-batch on the real clock. Returns false
+    /// when there was nothing to do.
+    pub fn step(&mut self) -> bool {
+        let now = self.now_ms();
+        self.step_at(now, None).is_some()
+    }
+
+    /// Form a batch at time `form_ms` on the caller's clock and run it
+    /// across the engines. With `virtual_ms_per_image` set, completion
+    /// is stamped at `form_ms + m * ms_per_image` (the load generator's
+    /// deterministic virtual clock) while the forward still executes
+    /// for real; otherwise completion is stamped off the fleet clock.
+    /// `None` means nothing was runnable and nothing expired.
+    pub fn step_at(
+        &mut self,
+        form_ms: f64,
+        virtual_ms_per_image: Option<f64>,
+    ) -> Option<StepInfo> {
+        let (expired, plan) = self.sched.next_batch(self.cfg.micro_batch, form_ms);
+        for e in &expired {
+            self.done.on_expired(e);
+        }
+        let Some(plan) = plan else {
+            return (!expired.is_empty())
+                .then_some(StepInfo { m: 0, done_ms: form_ms, compute_ms: 0.0 });
+        };
+        let t0 = Instant::now();
+        let logits = {
+            let exec = FleetExec { engines: &self.engines };
+            self.trunk.forward_with(&plan.images, plan.m, &exec)
+        };
+        let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let done_ms = match virtual_ms_per_image {
+            Some(mspi) => form_ms + plan.m as f64 * mspi,
+            None => self.now_ms(),
+        };
+        self.done.on_batch(&plan, &logits, done_ms, compute_ms);
+        Some(StepInfo { m: plan.m, done_ms, compute_ms })
+    }
+
+    /// Redeem a ticket if resolved (at most once).
+    pub fn poll(&mut self, t: Ticket) -> Option<Outcome> {
+        self.done.take(t)
+    }
+
+    /// Drive the fleet until `t` resolves.
+    pub fn wait(&mut self, t: Ticket) -> Result<Outcome> {
+        loop {
+            if let Some(o) = self.done.take(t) {
+                return Ok(o);
+            }
+            if !self.step() {
+                bail!("ticket {} is not pending in this fleet", t.id);
+            }
+        }
+    }
+
+    /// Drive the queue dry and drain every resolved outcome.
+    pub fn wait_all(&mut self) -> Vec<Outcome> {
+        while self.step() {}
+        self.done.take_all()
+    }
+
+    pub fn stats(&self) -> LatencySummary {
+        self.done.rec.summary()
+    }
+
+    /// One-shot convenience: submit + wait, returning the raw logits
+    /// (bit-exactness tests compare these against the single-engine
+    /// forward).
+    pub fn infer_logits(&mut self, images: Vec<f32>, n: usize) -> Result<Vec<f32>> {
+        let now = self.now_ms();
+        let t = self.submit_at(images, n, None, now).map_err(anyhow::Error::from)?;
+        match self.wait(t)? {
+            Outcome::Done(r) => Ok(r.logits),
+            Outcome::Expired { .. } => bail!("deadline-less request cannot expire"),
+        }
+    }
+}
+
+impl Drop for ServeFleet {
+    fn drop(&mut self) {
+        for e in &self.engines {
+            let _ = e.tx.send(Job::Stop);
+        }
+        for e in &mut self.engines {
+            if let Some(j) = e.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// The fleet-side [`LinearExec`]: scatter the activation block to the
+/// engines whose row range intersects the requested slice, gather
+/// their column blocks, add the bias once.
+struct FleetExec<'a> {
+    engines: &'a [EngineHandle],
+}
+
+impl FleetExec<'_> {
+    /// Intersection of engine `h`'s row range for `store` with the
+    /// requested global `[row0, row0 + rows)` slice.
+    fn intersect(
+        h: &EngineHandle,
+        store: usize,
+        row0: usize,
+        rows: usize,
+    ) -> Option<(usize, usize)> {
+        let (s, e) = h.ranges[store];
+        let (a, b) = (row0.max(s), (row0 + rows).min(e));
+        (a < b).then_some((a, b))
+    }
+}
+
+impl LinearExec for FleetExec<'_> {
+    fn qlinear(
+        &self,
+        store: usize,
+        x: &[f32],
+        n: usize,
+        row0: usize,
+        rows: usize,
+        bias: Option<&[f32]>,
+    ) -> Vec<f32> {
+        let x = Arc::new(x.to_vec());
+        let (rtx, rrx) = channel::<(usize, Vec<f32>)>();
+        let mut expected = 0;
+        for h in self.engines {
+            if let Some((a, b)) = Self::intersect(h, store, row0, rows) {
+                h.tx
+                    .send(Job::Linear {
+                        store,
+                        x: Arc::clone(&x),
+                        n,
+                        grow0: a,
+                        rows: b - a,
+                        reply: rtx.clone(),
+                    })
+                    .expect("engine thread hung up mid-serve");
+                expected += 1;
+            }
+        }
+        drop(rtx);
+        let mut out = vec![0.0f32; n * rows];
+        for _ in 0..expected {
+            let (e, part) = rrx.recv().expect("engine thread died mid-batch");
+            let (a, b) = Self::intersect(&self.engines[e], store, row0, rows)
+                .expect("reply from a non-intersecting engine");
+            let (w, c0) = (b - a, a - row0);
+            for i in 0..n {
+                out[i * rows + c0..i * rows + c0 + w].copy_from_slice(&part[i * w..(i + 1) * w]);
+            }
+        }
+        if let Some(bias) = bias {
+            for i in 0..n {
+                for (o, &bv) in out[i * rows..(i + 1) * rows].iter_mut().zip(bias) {
+                    *o += bv;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{e2m1, Scaling};
+    use crate::serve::model::{ActQuant, ServeGeom, WeightQuant};
+    use crate::util::rng::Rng;
+
+    fn tiny_vit(seed: u64) -> PackedVit {
+        let geom = ServeGeom::new(8, 4, 32, 2, 4, 3, 4);
+        let mut rng = Rng::new(seed);
+        let params: Vec<f32> = (0..geom.total_params()).map(|_| rng.normal() * 0.05).collect();
+        let fmt = e2m1();
+        PackedVit::build(
+            geom,
+            &params,
+            None,
+            WeightQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+            ActQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+        )
+        .unwrap()
+    }
+
+    fn fleet_cfg(engines: usize) -> ServeConfig {
+        ServeConfig::builder()
+            .micro_batch(4)
+            .workers(1)
+            .engines(engines)
+            .queue_depth(64)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn two_engine_fleet_matches_single_engine_bit_exact() {
+        let vit = tiny_vit(5);
+        let mut rng = Rng::new(9);
+        let n = 3;
+        let px = vit.geom.img * vit.geom.img * 3;
+        let x: Vec<f32> = (0..n * px).map(|_| rng.normal()).collect();
+        let want = vit.forward(&x, n, 1);
+        let mut fleet = ServeFleet::new(vit, fleet_cfg(2)).unwrap();
+        assert_eq!(fleet.engines(), 2);
+        let got = fleet.infer_logits(x, n).unwrap();
+        assert_eq!(got, want, "fleet logits must be bit-exact to single-engine");
+    }
+
+    #[test]
+    fn fleet_backpressure_and_stats() {
+        let vit = tiny_vit(6);
+        let px = vit.geom.img * vit.geom.img * 3;
+        let mut fleet = ServeFleet::new(vit, fleet_cfg(2)).unwrap();
+        fleet.submit(vec![0.1; 60 * px], 60, None).unwrap();
+        assert!(matches!(
+            fleet.submit(vec![0.1; 8 * px], 8, None),
+            Err(Reject::QueueFull { queued_images: 60, limit: 64 })
+        ));
+        let outs = fleet.wait_all();
+        assert_eq!(outs.len(), 1);
+        let st = fleet.stats();
+        assert_eq!((st.count, st.images, st.rejected), (1, 60, 1));
+        assert_eq!(st.batches, 15); // 60 images / micro-batch 4
+    }
+
+    #[test]
+    fn fleet_drop_joins_engine_threads() {
+        let vit = tiny_vit(7);
+        let fleet = ServeFleet::new(vit, fleet_cfg(3)).unwrap();
+        assert!(fleet.shard_bytes() > 0);
+        drop(fleet); // must not hang or panic
+    }
+}

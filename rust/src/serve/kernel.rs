@@ -22,6 +22,14 @@
 //! (i.e. the rows of `W_Q`) are distributed over a scoped thread pool
 //! ([`crate::util::parallel`]), so decode work is done exactly once per
 //! weight row regardless of batch size.
+//!
+//! The same row axis is the fleet's sharding seam: because each output
+//! element depends on exactly one weight row, a contiguous row range
+//! computed on another engine from a byte-sliced shard
+//! ([`PackedMx::slice_rows`]) is bit-identical to the same rows of a
+//! single-engine call, and gathering per-engine column blocks then
+//! adding the bias once reproduces this kernel's output exactly
+//! (`serve/fleet.rs`).
 
 use crate::quant::{PackedMx, GROUP};
 use crate::util::parallel::parallel_for_each_mut;

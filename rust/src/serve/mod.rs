@@ -10,26 +10,54 @@
 //!   output tile, row-parallel. Bit-exact to dequantize-then-matmul.
 //! * [`model`] — [`model::PackedVit`]: manifest-derived geometry + the
 //!   quantized ViT forward (Eq. 3: `Y = Q1(X) · Q2(W)^T`) over packed
-//!   stores, never materializing an f32 weight mirror.
+//!   stores, never materializing an f32 weight mirror. The forward's
+//!   quantized linears route through the [`model::LinearExec`] seam,
+//!   which is also the fleet's sharding boundary.
 //! * [`engine`] — [`engine::ServeEngine`]: micro-batched inference +
-//!   trainer-parity eval.
-//! * [`session`] — [`session::ServeSession`]: request queue with
-//!   cross-request micro-batching, per-request latency and aggregate
-//!   throughput stats.
+//!   trainer-parity eval, configured via the validating
+//!   [`engine::ServeConfig::builder`].
+//! * [`scheduler`] — clock-free continuous-batching core: bounded
+//!   admission queue (reject-with-reason backpressure), FIFO
+//!   micro-batch formation across request boundaries, deadline expiry,
+//!   and completion routing by [`scheduler::Ticket`].
+//! * [`session`] — [`session::ServeSession`]: single-engine ticket API
+//!   (`submit_request` → `poll`/`wait`/`wait_all`), with the PR 5
+//!   `submit`/`flush` pair kept as a deprecated shim.
+//! * [`fleet`] — [`fleet::ServeFleet`]: N row-sharded engines behind
+//!   mpsc work queues with scatter/gather at the kernel's row-parallel
+//!   seam; logits bit-exact to single-engine.
+//! * [`load`] — seeded open-loop Poisson load generator with real and
+//!   virtual (deterministic) pacing.
+//! * [`stats`] — [`stats::LatencySummary`]: the one typed
+//!   p50/p95/p99/throughput snapshot session, fleet, load test, and
+//!   bench all serialize into BENCH json.
 //!
 //! Models load from TJCKPT02 packed checkpoints
 //! ([`crate::coordinator::TrainState::load_with_packed`]) written by
 //! `tetrajet train --ckpt-packed`; a TJCKPT01 (or packed-less) file
 //! falls back to re-quantizing the f32 parameters with the variant's
-//! forward recipe. CLI entry points: `tetrajet serve` and
-//! `tetrajet eval --packed`.
+//! forward recipe. CLI entry points: `tetrajet serve` (with
+//! `--engines N --load-test`) and `tetrajet eval --packed`.
 
 pub mod engine;
+pub mod fleet;
 pub mod kernel;
+pub mod load;
 pub mod model;
+pub mod scheduler;
 pub mod session;
+pub mod stats;
 
-pub use engine::{ServeConfig, ServeEngine};
+pub use engine::{ServeConfig, ServeConfigBuilder, ServeEngine};
+pub use fleet::{ServeFleet, StepInfo};
 pub use kernel::{dense_matmul, fused_matmul, matmul_ref};
-pub use model::{variant_quant, ActQuant, PackedVit, ServeGeom, WeightQuant};
-pub use session::{Response, ServeSession, SessionStats};
+pub use load::{run_load_test, LoadReport, LoadSpec, Pace};
+pub use model::{
+    shard_ranges, variant_quant, ActQuant, LinearExec, PackedVit, ServeGeom, VitShard,
+    WeightQuant,
+};
+pub use scheduler::{Outcome, Reject, Response, Scheduler, Ticket};
+pub use session::ServeSession;
+pub use stats::{LatencyRecorder, LatencySummary};
+#[allow(deprecated)]
+pub use stats::SessionStats;

@@ -291,10 +291,145 @@ impl Store {
             d => d.clone(),
         }
     }
+
+    /// Rows `[row0, row0 + nrows)` as a standalone store, values
+    /// bit-identical (see [`PackedMx::slice_rows`]).
+    fn slice_rows(&self, row0: usize, nrows: usize) -> Result<Store> {
+        Ok(match self {
+            Store::Packed(p) => Store::Packed(p.slice_rows(row0, nrows)?),
+            Store::Dense { w, cols } => {
+                if *cols == 0 || (row0 + nrows) * cols > w.len() {
+                    bail!("rows [{row0}, {}) exceed the dense store", row0 + nrows);
+                }
+                Store::Dense { w: w[row0 * cols..(row0 + nrows) * cols].to_vec(), cols: *cols }
+            }
+        })
+    }
+
+    /// Stored weight rows.
+    fn rows(&self) -> usize {
+        match self {
+            Store::Packed(p) => p.len() / p.cols().max(1),
+            Store::Dense { w, cols } => w.len() / cols.max(1),
+        }
+    }
+
+    /// Placeholder for a trunk whose quantized stores moved into
+    /// shards: zero resident bytes, and any accidental `linear` call
+    /// trips the kernel's shape assert instead of computing garbage.
+    fn vacated() -> Store {
+        Store::Dense { w: Vec::new(), cols: 0 }
+    }
 }
 
 /// Names of the four quantized stacked weight tensors, in layout order.
 const QW_NAMES: [&str; 4] = ["blocks.qkv_w", "blocks.proj_w", "blocks.fc1_w", "blocks.fc2_w"];
+
+/// Executor of the quantized stacked linears inside
+/// [`PackedVit::forward_with`] — the row-parallel seam of the fused
+/// kernel, and the sharding boundary of the serve fleet.
+///
+/// The forward calls back through this trait at each of its four
+/// quantized matmuls, so the exact same forward code serves both the
+/// in-process path ([`PackedVit::forward`], which dispatches to the
+/// model's own stores) and the row-sharded fleet
+/// (`serve::fleet::ServeFleet`, which scatters the activation block to
+/// its engines and gathers their output-column slices here).
+///
+/// `store` indexes the qkv/proj/fc1/fc2 stacked tensors in layout
+/// order; `row0`/`rows` select the calling block's row range of the
+/// depth-stacked tensor. Implementations must be bit-exact to
+/// [`fused_matmul`] over the full store: same ascending contraction
+/// order per output element, bias added once after accumulation.
+pub trait LinearExec {
+    fn qlinear(
+        &self,
+        store: usize,
+        x: &[f32],
+        n: usize,
+        row0: usize,
+        rows: usize,
+        bias: Option<&[f32]>,
+    ) -> Vec<f32>;
+}
+
+/// The in-process executor: each linear runs on the model's own store.
+struct LocalExec<'a> {
+    vit: &'a PackedVit,
+    workers: usize,
+}
+
+impl LinearExec for LocalExec<'_> {
+    fn qlinear(
+        &self,
+        store: usize,
+        x: &[f32],
+        n: usize,
+        row0: usize,
+        rows: usize,
+        bias: Option<&[f32]>,
+    ) -> Vec<f32> {
+        self.vit.stores[store].linear(x, n, row0, rows, bias, self.workers)
+    }
+}
+
+/// Split `total` rows into `n` near-even contiguous `(start, end)`
+/// ranges; the first `total % n` ranges get one extra row. Ragged by
+/// design — the fleet's bit-exactness property is tested on
+/// non-divisible splits too.
+pub fn shard_ranges(total: usize, n: usize) -> Vec<(usize, usize)> {
+    assert!(n > 0, "shard count must be >= 1");
+    let base = total / n;
+    let extra = total % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// One engine's contiguous row-slice of the four depth-stacked
+/// quantized weight tensors, produced by [`PackedVit::into_shards`].
+/// The slice is taken at the code/scale-byte level
+/// ([`PackedMx::slice_rows`]), so each shard's kernel decodes exactly
+/// the bytes the single-engine kernel would for those rows.
+#[derive(Debug, Clone)]
+pub struct VitShard {
+    stores: [Store; 4],
+    row0: [usize; 4],
+}
+
+impl VitShard {
+    /// Global `(start, end)` row range this shard owns of `store`.
+    pub fn range(&self, store: usize) -> (usize, usize) {
+        (self.row0[store], self.row0[store] + self.stores[store].rows())
+    }
+
+    /// Rows `[grow0, grow0 + rows)` — global coordinates, fully inside
+    /// this shard's range — of store `store` applied to `x (n, d)`.
+    /// Computed WITHOUT bias: the fleet coordinator adds the bias once
+    /// after gathering, which keeps the final per-element operation
+    /// identical to the single-engine kernel's `acc + bias[c]`.
+    pub fn linear(
+        &self,
+        store: usize,
+        x: &[f32],
+        n: usize,
+        grow0: usize,
+        rows: usize,
+        workers: usize,
+    ) -> Vec<f32> {
+        self.stores[store].linear(x, n, grow0 - self.row0[store], rows, None, workers)
+    }
+
+    /// Resident bytes of this shard's stores.
+    pub fn bytes(&self) -> usize {
+        self.stores.iter().map(Store::bytes).sum()
+    }
+}
 
 /// A forward-only ViT whose quantized weights stay packed.
 #[derive(Debug, Clone)]
@@ -473,6 +608,50 @@ impl PackedVit {
         self.stores.iter().all(Store::is_packed)
     }
 
+    /// Row-shard the quantized stores across `engines`: consumes the
+    /// model and returns the trunk (geometry + full-precision tail,
+    /// quantized stores vacated so an accidental local `forward` fails
+    /// fast instead of computing garbage) plus one [`VitShard`] per
+    /// engine holding near-even contiguous row ranges of each store
+    /// ([`shard_ranges`]). The trunk drives the shared forward via
+    /// [`forward_with`](Self::forward_with) with a scatter/gather
+    /// executor.
+    pub fn into_shards(self, engines: usize) -> Result<(PackedVit, Vec<VitShard>)> {
+        if engines == 0 {
+            bail!("fleet needs at least one engine");
+        }
+        let spec = self.geom.param_spec();
+        let mut per_engine: Vec<Vec<Store>> =
+            (0..engines).map(|_| Vec::with_capacity(4)).collect();
+        let mut row0s: Vec<[usize; 4]> = vec![[0; 4]; engines];
+        for (k, name) in QW_NAMES.iter().enumerate() {
+            let seg = spec.iter().find(|s| s.name == *name).unwrap();
+            let rows_total = seg.size / seg.cols();
+            if rows_total < engines {
+                bail!(
+                    "store {name:?} has {rows_total} rows — cannot shard across {engines} engines"
+                );
+            }
+            for (e, (r0, r1)) in shard_ranges(rows_total, engines).into_iter().enumerate() {
+                per_engine[e].push(self.stores[k].slice_rows(r0, r1 - r0)?);
+                row0s[e][k] = r0;
+            }
+        }
+        let shards: Vec<VitShard> = per_engine
+            .into_iter()
+            .zip(row0s)
+            .map(|(stores, row0)| VitShard {
+                stores: stores.try_into().expect("four stores per shard"),
+                row0,
+            })
+            .collect();
+        let trunk = PackedVit {
+            stores: [Store::vacated(), Store::vacated(), Store::vacated(), Store::vacated()],
+            ..self
+        };
+        Ok((trunk, shards))
+    }
+
     /// Resident bytes of the quantized weight tensors (codes + scales
     /// for packed stores; f32 bytes for dense ones). The packed serving
     /// path keeps this at ~0.53 bytes/element vs 4 for an f32 mirror.
@@ -510,6 +689,15 @@ impl PackedVit {
     /// linears run fused over packed codes (or dense f32 for
     /// [`to_dense`](Self::to_dense) mirrors) with identical numerics.
     pub fn forward(&self, x: &[f32], batch: usize, workers: usize) -> Vec<f32> {
+        self.forward_with(x, batch, &LocalExec { vit: self, workers })
+    }
+
+    /// The forward pass with the quantized linears delegated to `exec`
+    /// (the [`LinearExec`] seam). [`forward`](Self::forward) routes
+    /// here with the in-process executor; the serve fleet routes here
+    /// with its scatter/gather executor — one forward, two execution
+    /// substrates, bit-exact by the trait's contract.
+    pub fn forward_with(&self, x: &[f32], batch: usize, exec: &dyn LinearExec) -> Vec<f32> {
         let g = &self.geom;
         assert_eq!(x.len(), batch * g.img * g.img * 3, "x must be (batch, img, img, 3)");
         let (dim, seq, heads, hd) = (g.dim, g.seq, g.heads, g.head_dim);
@@ -576,13 +764,13 @@ impl PackedVit {
                 &self.p("blocks.ln1.b")[blk * dim..(blk + 1) * dim],
             );
             self.act_q(&mut hn, dim);
-            let qkv = self.stores[0].linear(
+            let qkv = exec.qlinear(
+                0,
                 &hn,
                 n,
                 blk * 3 * dim,
                 3 * dim,
                 Some(&self.p("blocks.qkv_b")[blk * 3 * dim..(blk + 1) * 3 * dim]),
-                workers,
             );
             let mut att_out = vec![0.0f32; n * dim];
             let inv_sqrt = 1.0 / (hd as f32).sqrt();
@@ -615,13 +803,13 @@ impl PackedVit {
                 }
             }
             self.act_q(&mut att_out, dim);
-            let proj = self.stores[1].linear(
+            let proj = exec.qlinear(
+                1,
                 &att_out,
                 n,
                 blk * dim,
                 dim,
                 Some(&self.p("blocks.proj_b")[blk * dim..(blk + 1) * dim]),
-                workers,
             );
             for (hv, &pv) in h.iter_mut().zip(&proj) {
                 *hv += pv;
@@ -635,25 +823,25 @@ impl PackedVit {
                 &self.p("blocks.ln2.b")[blk * dim..(blk + 1) * dim],
             );
             self.act_q(&mut hn, dim);
-            let mut z = self.stores[2].linear(
+            let mut z = exec.qlinear(
+                2,
                 &hn,
                 n,
                 blk * g.hidden,
                 g.hidden,
                 Some(&self.p("blocks.fc1_b")[blk * g.hidden..(blk + 1) * g.hidden]),
-                workers,
             );
             for v in z.iter_mut() {
                 *v = gelu_tanh(*v);
             }
             self.act_q(&mut z, g.hidden);
-            let mlp = self.stores[3].linear(
+            let mlp = exec.qlinear(
+                3,
                 &z,
                 n,
                 blk * dim,
                 dim,
                 Some(&self.p("blocks.fc2_b")[blk * dim..(blk + 1) * dim]),
-                workers,
             );
             for (hv, &mv) in h.iter_mut().zip(&mlp) {
                 *hv += mv;
@@ -812,6 +1000,112 @@ mod tests {
         // fp32 forward is just the reference ViT; finite logits.
         let x = vec![0.1f32; 8 * 8 * 3];
         assert!(m.forward(&x, 1, 1).iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn shard_ranges_cover_contiguously() {
+        assert_eq!(shard_ranges(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
+        assert_eq!(shard_ranges(4, 4), vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let r = shard_ranges(192, 5);
+        assert_eq!(r.first().unwrap().0, 0);
+        assert_eq!(r.last().unwrap().1, 192);
+        for w in r.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "ranges must tile without gaps");
+        }
+    }
+
+    /// In-test gather executor: the same scatter/gather the fleet does,
+    /// minus the threads — isolates the sharding math from mpsc.
+    struct GatherExec<'a> {
+        shards: &'a [VitShard],
+    }
+
+    impl LinearExec for GatherExec<'_> {
+        fn qlinear(
+            &self,
+            store: usize,
+            x: &[f32],
+            n: usize,
+            row0: usize,
+            rows: usize,
+            bias: Option<&[f32]>,
+        ) -> Vec<f32> {
+            let mut out = vec![0.0f32; n * rows];
+            for sh in self.shards {
+                let (s, e) = sh.range(store);
+                let (a, b) = (row0.max(s), (row0 + rows).min(e));
+                if a >= b {
+                    continue;
+                }
+                let part = sh.linear(store, x, n, a, b - a, 1);
+                let (w, c0) = (b - a, a - row0);
+                for i in 0..n {
+                    out[i * rows + c0..i * rows + c0 + w]
+                        .copy_from_slice(&part[i * w..(i + 1) * w]);
+                }
+            }
+            if let Some(bias) = bias {
+                for i in 0..n {
+                    for (o, &bv) in out[i * rows..(i + 1) * rows].iter_mut().zip(bias) {
+                        *o += bv;
+                    }
+                }
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn sharded_forward_is_bit_exact_including_ragged_splits() {
+        let geom = tiny_geom();
+        let params = random_params(&geom, 7);
+        let fmt = crate::quant::e2m1();
+        let vit = PackedVit::build(
+            geom.clone(),
+            &params,
+            None,
+            WeightQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+            ActQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+        )
+        .unwrap();
+        let mut rng = Rng::new(21);
+        let batch = 2;
+        let x: Vec<f32> = (0..batch * geom.img * geom.img * 3).map(|_| rng.normal()).collect();
+        let want = vit.forward(&x, batch, 1);
+        let qw_bytes = vit.quantized_weight_bytes();
+        // 3 and 5 do not divide the per-store row counts evenly here.
+        for engines in [1usize, 2, 3, 5] {
+            let (trunk, shards) = vit.clone().into_shards(engines).unwrap();
+            assert_eq!(shards.len(), engines);
+            assert_eq!(
+                shards.iter().map(VitShard::bytes).sum::<usize>(),
+                qw_bytes,
+                "shards must hold exactly the original code/scale bytes"
+            );
+            let got = trunk.forward_with(&x, batch, &GatherExec { shards: &shards });
+            assert_eq!(got, want, "{engines}-way sharded logits must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn into_shards_rejects_impossible_splits() {
+        let geom = tiny_geom();
+        let params = random_params(&geom, 8);
+        let fmt = crate::quant::e2m1();
+        let build = || {
+            PackedVit::build(
+                geom.clone(),
+                &params,
+                None,
+                WeightQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+                ActQuant::None,
+            )
+            .unwrap()
+        };
+        assert!(build().into_shards(0).is_err());
+        // proj/fc2 have depth*dim = 64 rows in the tiny geometry.
+        assert!(build().into_shards(65).is_err());
+        assert!(build().into_shards(64).is_ok());
     }
 
     #[test]

@@ -1,0 +1,409 @@
+//! Continuous-batching scheduler: bounded admission queue, micro-batch
+//! formation that crosses request boundaries, and completion routing.
+//!
+//! The scheduler is deliberately clock-free — every method takes the
+//! caller's notion of "now" in milliseconds. The session and the
+//! fleet's real-time path pass wall-clock time; the load generator's
+//! virtual pace passes simulated time, which is what makes the seeded
+//! load tests deterministic (admission, rejection, expiry and batch
+//! formation are pure functions of the arrival schedule and config).
+//!
+//! Backpressure is reject-with-reason, not silent drop: admission over
+//! a full queue returns [`Reject::QueueFull`] with the observed depth,
+//! and the queue is bounded in *images* (the unit the engines batch),
+//! not requests, so one huge request cannot sneak past the limit.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use crate::serve::engine::argmax_rows;
+use crate::serve::stats::LatencyRecorder;
+
+/// Handle returned by `submit`; redeem it with `poll`/`wait`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Ticket {
+    pub id: u64,
+}
+
+/// Why a request was not admitted.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reject {
+    /// Queue-depth backpressure: admitting `n` more images would push
+    /// the queued total past `limit`.
+    QueueFull { queued_images: usize, limit: usize },
+    /// Malformed request (shape mismatch, zero images).
+    BadRequest(String),
+}
+
+impl std::fmt::Display for Reject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Reject::QueueFull { queued_images, limit } => write!(
+                f,
+                "queue full: {queued_images} images queued against a depth limit of {limit}"
+            ),
+            Reject::BadRequest(msg) => write!(f, "bad request: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Reject {}
+
+/// Completed request: predicted class per image + logits + latency.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub preds: Vec<usize>,
+    pub logits: Vec<f32>,
+    pub latency_ms: f64,
+}
+
+/// Terminal state of an admitted request.
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    Done(Response),
+    /// The per-request deadline passed before any of its images ran.
+    Expired { id: u64, deadline_ms: f64 },
+}
+
+impl Outcome {
+    pub fn id(&self) -> u64 {
+        match self {
+            Outcome::Done(r) => r.id,
+            Outcome::Expired { id, .. } => *id,
+        }
+    }
+
+    pub fn response(self) -> Option<Response> {
+        match self {
+            Outcome::Done(r) => Some(r),
+            Outcome::Expired { .. } => None,
+        }
+    }
+}
+
+/// One request's contribution to a formed micro-batch.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub id: u64,
+    pub arrival_ms: f64,
+    /// Image offset of this chunk inside the batch.
+    pub offset: usize,
+    /// Images taken from the request into this batch.
+    pub n: usize,
+    /// True when this chunk completes the request.
+    pub final_chunk: bool,
+}
+
+/// A formed micro-batch: a flat pixel block plus the request spans it
+/// was assembled from (batches cross request boundaries).
+#[derive(Debug, Clone)]
+pub struct BatchPlan {
+    pub images: Vec<f32>,
+    pub m: usize,
+    pub spans: Vec<Span>,
+}
+
+/// A request dropped at batch-formation time by its deadline.
+#[derive(Debug, Clone)]
+pub struct Expired {
+    pub id: u64,
+    pub deadline_ms: f64,
+}
+
+#[derive(Debug)]
+struct Pending {
+    id: u64,
+    images: Vec<f32>,
+    n: usize,
+    /// Images already taken into earlier batches.
+    taken: usize,
+    arrival_ms: f64,
+    /// Absolute deadline; never expires once the first chunk ran.
+    deadline_ms: Option<f64>,
+}
+
+/// FIFO admission queue + micro-batch former.
+#[derive(Debug)]
+pub struct Scheduler {
+    px: usize,
+    limit_images: usize,
+    queue: VecDeque<Pending>,
+    queued_images: usize,
+    next_id: u64,
+}
+
+impl Scheduler {
+    /// `px` is pixels per image; `queue_depth` bounds queued images.
+    pub fn new(px: usize, queue_depth: usize) -> Scheduler {
+        Scheduler {
+            px,
+            limit_images: queue_depth,
+            queue: VecDeque::new(),
+            queued_images: 0,
+            next_id: 0,
+        }
+    }
+
+    pub fn pending_requests(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Images currently queued (the backpressure unit).
+    pub fn pending_images(&self) -> usize {
+        self.queued_images
+    }
+
+    /// Arrival time of the oldest queued request, if any.
+    pub fn earliest_arrival(&self) -> Option<f64> {
+        self.queue.front().map(|p| p.arrival_ms)
+    }
+
+    /// Admit an `n`-image request arriving at `arrival_ms` with an
+    /// optional *absolute* deadline, or reject it with a reason.
+    pub fn try_admit(
+        &mut self,
+        images: Vec<f32>,
+        n: usize,
+        deadline_ms: Option<f64>,
+        arrival_ms: f64,
+    ) -> Result<Ticket, Reject> {
+        if n == 0 || images.len() != n * self.px {
+            return Err(Reject::BadRequest(format!(
+                "request must be n x {} pixels, got n={n} len={}",
+                self.px,
+                images.len()
+            )));
+        }
+        if self.queued_images + n > self.limit_images {
+            return Err(Reject::QueueFull {
+                queued_images: self.queued_images,
+                limit: self.limit_images,
+            });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queued_images += n;
+        self.queue.push_back(Pending {
+            id,
+            images,
+            n,
+            taken: 0,
+            arrival_ms,
+            deadline_ms,
+        });
+        Ok(Ticket { id })
+    }
+
+    /// Form the next micro-batch of up to `micro` images at time
+    /// `now_ms`, in FIFO order across request boundaries. Requests
+    /// whose deadline has passed and which have not started are expired
+    /// here (started requests always run to completion). Returns the
+    /// expired set plus the plan, `None` when nothing is runnable.
+    pub fn next_batch(&mut self, micro: usize, now_ms: f64) -> (Vec<Expired>, Option<BatchPlan>) {
+        assert!(micro > 0, "micro-batch size must be >= 1");
+        let mut expired = Vec::new();
+        let mut images = Vec::new();
+        let mut spans = Vec::new();
+        let mut m = 0;
+        while m < micro {
+            let Some(front) = self.queue.front_mut() else { break };
+            if front.taken == 0 {
+                if let Some(d) = front.deadline_ms {
+                    if now_ms > d {
+                        let p = self.queue.pop_front().unwrap();
+                        self.queued_images -= p.n;
+                        expired.push(Expired { id: p.id, deadline_ms: d });
+                        continue;
+                    }
+                }
+            }
+            let take = (front.n - front.taken).min(micro - m);
+            images.extend_from_slice(
+                &front.images[front.taken * self.px..(front.taken + take) * self.px],
+            );
+            spans.push(Span {
+                id: front.id,
+                arrival_ms: front.arrival_ms,
+                offset: m,
+                n: take,
+                final_chunk: front.taken + take == front.n,
+            });
+            front.taken += take;
+            self.queued_images -= take;
+            m += take;
+            if front.taken == front.n {
+                self.queue.pop_front();
+            }
+        }
+        let plan = (m > 0).then_some(BatchPlan { images, m, spans });
+        (expired, plan)
+    }
+}
+
+/// Completion side: reassembles per-request logits from batch spans,
+/// computes latencies, and holds finished [`Outcome`]s for redemption
+/// by ticket.
+#[derive(Debug, Default)]
+pub struct Completions {
+    classes: usize,
+    /// Partially-served requests' accumulated logits.
+    partial: HashMap<u64, Vec<f32>>,
+    /// Finished outcomes awaiting `take` (BTreeMap: id-ordered drain).
+    done: BTreeMap<u64, Outcome>,
+    pub rec: LatencyRecorder,
+}
+
+impl Completions {
+    pub fn new(classes: usize) -> Completions {
+        Completions { classes, ..Default::default() }
+    }
+
+    pub fn on_expired(&mut self, e: &Expired) {
+        self.rec.record_expired();
+        self.done
+            .insert(e.id, Outcome::Expired { id: e.id, deadline_ms: e.deadline_ms });
+    }
+
+    /// Route one executed batch's logits back to its requests.
+    /// `done_ms` is the batch completion time on the caller's clock;
+    /// `compute_ms` the forward time it took.
+    pub fn on_batch(&mut self, plan: &BatchPlan, logits: &[f32], done_ms: f64, compute_ms: f64) {
+        assert_eq!(logits.len(), plan.m * self.classes, "logit block mismatches plan");
+        self.rec.record_batch(plan.m, compute_ms, done_ms);
+        for span in &plan.spans {
+            let chunk = &logits[span.offset * self.classes..(span.offset + span.n) * self.classes];
+            let acc = self.partial.entry(span.id).or_default();
+            acc.extend_from_slice(chunk);
+            if span.final_chunk {
+                let lg = self.partial.remove(&span.id).unwrap();
+                let latency_ms = done_ms - span.arrival_ms;
+                self.rec.record_latency(latency_ms);
+                self.done.insert(
+                    span.id,
+                    Outcome::Done(Response {
+                        id: span.id,
+                        preds: argmax_rows(&lg, self.classes),
+                        logits: lg,
+                        latency_ms,
+                    }),
+                );
+            }
+        }
+    }
+
+    /// Redeem a ticket (at most once).
+    pub fn take(&mut self, t: Ticket) -> Option<Outcome> {
+        self.done.remove(&t.id)
+    }
+
+    /// Drain every finished outcome, in ticket-id order.
+    pub fn take_all(&mut self) -> Vec<Outcome> {
+        std::mem::take(&mut self.done).into_values().collect()
+    }
+
+    /// Requests with some but not all chunks executed.
+    pub fn in_flight(&self) -> usize {
+        self.partial.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PX: usize = 4;
+
+    fn imgs(n: usize, fill: f32) -> Vec<f32> {
+        vec![fill; n * PX]
+    }
+
+    #[test]
+    fn admit_validates_and_bounds_in_images() {
+        let mut s = Scheduler::new(PX, 8);
+        assert!(matches!(
+            s.try_admit(vec![0.0; 3], 1, None, 0.0),
+            Err(Reject::BadRequest(_))
+        ));
+        assert!(matches!(s.try_admit(Vec::new(), 0, None, 0.0), Err(Reject::BadRequest(_))));
+        let t = s.try_admit(imgs(5, 1.0), 5, None, 0.0).unwrap();
+        assert_eq!(t.id, 0);
+        assert_eq!(s.pending_images(), 5);
+        // 5 queued + 4 > 8 -> backpressure with the observed depth.
+        assert_eq!(
+            s.try_admit(imgs(4, 2.0), 4, None, 1.0),
+            Err(Reject::QueueFull { queued_images: 5, limit: 8 })
+        );
+        // 5 + 3 == 8 still fits.
+        assert!(s.try_admit(imgs(3, 3.0), 3, None, 1.0).is_ok());
+    }
+
+    #[test]
+    fn batches_cross_request_boundaries_fifo() {
+        let mut s = Scheduler::new(PX, 64);
+        s.try_admit(imgs(3, 1.0), 3, None, 0.0).unwrap();
+        s.try_admit(imgs(2, 2.0), 2, None, 1.0).unwrap();
+        let (exp, plan) = s.next_batch(4, 5.0);
+        assert!(exp.is_empty());
+        let plan = plan.unwrap();
+        assert_eq!(plan.m, 4);
+        assert_eq!(plan.spans.len(), 2);
+        assert!(plan.spans[0].final_chunk && !plan.spans[1].final_chunk);
+        assert_eq!((plan.spans[1].offset, plan.spans[1].n), (3, 1));
+        assert_eq!(s.pending_images(), 1);
+        // Remainder of request 1 comes alone.
+        let (_, plan2) = s.next_batch(4, 6.0);
+        let plan2 = plan2.unwrap();
+        assert_eq!(plan2.m, 1);
+        assert!(plan2.spans[0].final_chunk);
+        assert_eq!(s.pending_images(), 0);
+        assert!(s.next_batch(4, 7.0).1.is_none());
+    }
+
+    #[test]
+    fn deadlines_expire_only_unstarted_requests() {
+        let mut s = Scheduler::new(PX, 64);
+        s.try_admit(imgs(3, 1.0), 3, Some(10.0), 0.0).unwrap();
+        s.try_admit(imgs(2, 2.0), 2, Some(4.0), 1.0).unwrap();
+        // Request 0 starts before its deadline; only its first 2 images fit.
+        let (exp, plan) = s.next_batch(2, 5.0);
+        assert!(exp.is_empty());
+        assert_eq!(plan.unwrap().spans[0].id, 0);
+        // Far past both deadlines: request 0 already started, so it
+        // finishes; request 1 never started, so it expires.
+        let (exp, plan) = s.next_batch(2, 100.0);
+        let plan = plan.unwrap();
+        assert_eq!(plan.spans[0].id, 0);
+        assert!(plan.spans[0].final_chunk);
+        assert_eq!(exp.len(), 1);
+        assert_eq!(exp[0].id, 1);
+        assert_eq!(s.pending_images(), 0);
+    }
+
+    #[test]
+    fn completions_reassemble_split_requests() {
+        let classes = 2;
+        let mut s = Scheduler::new(PX, 64);
+        let mut c = Completions::new(classes);
+        let t = s.try_admit(imgs(3, 1.0), 3, None, 10.0).unwrap();
+        let (_, plan) = s.next_batch(2, 11.0);
+        let plan = plan.unwrap();
+        // Fake logits: image i gets [i, -i].
+        c.on_batch(&plan, &[0.0, 0.0, 1.0, -1.0], 20.0, 5.0);
+        assert_eq!(c.in_flight(), 1);
+        assert!(c.take(t).is_none());
+        let (_, plan2) = s.next_batch(2, 21.0);
+        c.on_batch(&plan2.unwrap(), &[2.0, -2.0], 30.0, 4.0);
+        assert_eq!(c.in_flight(), 0);
+        let Some(Outcome::Done(r)) = c.take(t) else { panic!("request should be done") };
+        assert_eq!(r.id, 0);
+        assert_eq!(r.preds, vec![0, 0, 0]);
+        assert_eq!(r.logits, vec![0.0, 0.0, 1.0, -1.0, 2.0, -2.0]);
+        // Latency: arrival 10, last chunk done 30.
+        assert!((r.latency_ms - 20.0).abs() < 1e-12);
+        // Ticket redemption is at-most-once.
+        assert!(c.take(t).is_none());
+        let sum = c.rec.summary();
+        assert_eq!((sum.batches, sum.images, sum.count), (2, 3, 1));
+        assert!((sum.busy_ms - 9.0).abs() < 1e-12);
+    }
+}

@@ -1,165 +1,144 @@
-//! Request-level serving session: queue N-image requests, micro-batch
-//! them through the engine (crossing request boundaries), and report
-//! per-request latency plus aggregate throughput.
+//! Request-level serving session over a single [`ServeEngine`].
 //!
-//! The session is synchronous and deterministic: [`ServeSession::submit`]
-//! enqueues, [`ServeSession::flush`] runs everything queued and
-//! attributes to each request the wall-clock time from flush start to
-//! the completion of the last micro-batch containing one of its
-//! images. For MX variants the micro-batch segmentation cannot change
-//! any logit (activation groups are per token row); the per-tensor
-//! INT4 baseline is batch-composition dependent, as it already is in
-//! the HLO eval path.
+//! The PR 6 API is ticket-based: [`ServeSession::submit_request`]
+//! admits a request through the bounded [`Scheduler`] queue and
+//! returns a [`Ticket`]; batches form continuously via
+//! [`ServeSession::step`] (each step runs one micro-batch, crossing
+//! request boundaries in FIFO order); outcomes are redeemed with
+//! [`poll`](ServeSession::poll) / [`wait`](ServeSession::wait) /
+//! [`wait_all`](ServeSession::wait_all). Requests may carry a relative
+//! deadline — a request whose deadline passes before its first chunk
+//! runs resolves to [`Outcome::Expired`] instead of blocking the queue.
+//!
+//! The deprecated `submit`/`flush` pair from PR 5 survives as a thin
+//! shim over the ticket API so existing callers (`eval --packed`, the
+//! oscillation-analysis example) compile unchanged.
+//!
+//! For MX variants the micro-batch segmentation cannot change any
+//! logit (activation groups are per token row); the per-tensor INT4
+//! baseline is batch-composition dependent, as it already is in the
+//! HLO eval path.
 
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::serve::engine::{argmax_rows, ServeEngine};
+use crate::serve::engine::ServeEngine;
+use crate::serve::scheduler::{Completions, Outcome, Reject, Response, Scheduler, Ticket};
+use crate::serve::stats::LatencySummary;
 
-/// One queued inference request.
-#[derive(Debug, Clone)]
-struct Request {
-    id: u64,
-    images: Vec<f32>,
-    n: usize,
-}
-
-/// Completed request: predicted class per image + logits + latency.
-#[derive(Debug, Clone)]
-pub struct Response {
-    pub id: u64,
-    pub preds: Vec<usize>,
-    pub logits: Vec<f32>,
-    pub latency_ms: f64,
-}
-
-/// Aggregate serving statistics across all flushes.
-#[derive(Debug, Clone, Default)]
-pub struct SessionStats {
-    pub requests: usize,
-    pub images: usize,
-    pub batches: usize,
-    pub wall_ms: f64,
-    latencies_ms: Vec<f64>,
-}
-
-impl SessionStats {
-    pub fn imgs_per_sec(&self) -> f64 {
-        if self.wall_ms <= 0.0 {
-            return 0.0;
-        }
-        self.images as f64 / (self.wall_ms / 1e3)
-    }
-
-    /// Latency percentile over completed requests (q in [0, 1]).
-    pub fn latency_pct_ms(&self, q: f64) -> f64 {
-        if self.latencies_ms.is_empty() {
-            return 0.0;
-        }
-        let mut v = self.latencies_ms.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let i = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
-        v[i]
-    }
-}
-
-/// Batched serving session over a [`ServeEngine`].
+/// Ticket-based serving session.
 pub struct ServeSession {
     engine: ServeEngine,
-    queue: Vec<Request>,
-    next_id: u64,
-    stats: SessionStats,
+    sched: Scheduler,
+    done: Completions,
+    clock: Instant,
 }
 
 impl ServeSession {
     pub fn new(engine: ServeEngine) -> ServeSession {
-        ServeSession { engine, queue: Vec::new(), next_id: 0, stats: SessionStats::default() }
+        let sched = Scheduler::new(engine.pixels_per_image(), engine.cfg.queue_depth);
+        let done = Completions::new(engine.classes());
+        ServeSession { engine, sched, done, clock: Instant::now() }
     }
 
     pub fn engine(&self) -> &ServeEngine {
         &self.engine
     }
 
-    /// Enqueue an `n`-image request; returns its id.
-    pub fn submit(&mut self, images: Vec<f32>, n: usize) -> Result<u64> {
-        if n == 0 || images.len() != n * self.engine.pixels_per_image() {
-            bail!(
-                "request must be n x {} pixels, got n={n} len={}",
-                self.engine.pixels_per_image(),
-                images.len()
-            );
-        }
-        let id = self.next_id;
-        self.next_id += 1;
-        self.queue.push(Request { id, images, n });
-        Ok(id)
+    /// Milliseconds since the session started (the session clock).
+    pub fn now_ms(&self) -> f64 {
+        self.clock.elapsed().as_secs_f64() * 1e3
     }
 
+    /// Admit an `n`-image request; [`Reject`] carries the reason
+    /// (backpressure or malformed shape) when the queue refuses it.
+    pub fn submit_request(&mut self, images: Vec<f32>, n: usize) -> Result<Ticket, Reject> {
+        self.submit_with_deadline(images, n, None)
+    }
+
+    /// Like [`submit_request`](Self::submit_request) with a deadline
+    /// relative to now: if it passes before the request's first chunk
+    /// runs, the request expires instead of running.
+    pub fn submit_with_deadline(
+        &mut self,
+        images: Vec<f32>,
+        n: usize,
+        deadline_ms: Option<f64>,
+    ) -> Result<Ticket, Reject> {
+        let now = self.now_ms();
+        self.done.rec.note_arrival(now);
+        let r = self.sched.try_admit(images, n, deadline_ms.map(|d| now + d), now);
+        if matches!(r, Err(Reject::QueueFull { .. })) {
+            self.done.rec.record_reject();
+        }
+        r
+    }
+
+    /// Queued (not yet fully batched) requests.
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.sched.pending_requests()
     }
 
-    /// Run every queued request through the engine in micro-batches
-    /// that cross request boundaries, in submission order. Returns one
-    /// [`Response`] per request, in submission order.
-    pub fn flush(&mut self) -> Vec<Response> {
-        let reqs = std::mem::take(&mut self.queue);
-        if reqs.is_empty() {
-            return Vec::new();
+    /// Form and run one micro-batch (or expire overdue requests).
+    /// Returns false when there was nothing to do.
+    pub fn step(&mut self) -> bool {
+        let now = self.now_ms();
+        let (expired, plan) = self.sched.next_batch(self.engine.cfg.micro_batch, now);
+        for e in &expired {
+            self.done.on_expired(e);
         }
-        let px = self.engine.pixels_per_image();
-        let classes = self.engine.classes();
-        let total: usize = reqs.iter().map(|r| r.n).sum();
-        let mut images = Vec::with_capacity(total * px);
-        for r in &reqs {
-            images.extend_from_slice(&r.images);
-        }
-
-        // Forward in micro-batches, recording each batch's completion
-        // time relative to flush start.
-        let micro = self.engine.cfg.micro_batch;
-        let mut logits = Vec::with_capacity(total * classes);
-        let mut done_at_ms = Vec::with_capacity(total); // per image
+        let Some(plan) = plan else {
+            return !expired.is_empty();
+        };
         let t0 = Instant::now();
-        let mut done = 0;
-        let mut batches = 0;
-        while done < total {
-            let m = micro.min(total - done);
-            let chunk = &images[done * px..(done + m) * px];
-            logits.extend(self.engine.model().forward(chunk, m, self.engine.cfg.workers));
-            let at = t0.elapsed().as_secs_f64() * 1e3;
-            done_at_ms.extend(std::iter::repeat(at).take(m));
-            done += m;
-            batches += 1;
-        }
-        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-        // Slice results back per request; latency = completion of the
-        // request's last image.
-        let mut out = Vec::with_capacity(reqs.len());
-        let mut off = 0;
-        for r in &reqs {
-            let lg = logits[off * classes..(off + r.n) * classes].to_vec();
-            let latency_ms = done_at_ms[off + r.n - 1];
-            out.push(Response {
-                id: r.id,
-                preds: argmax_rows(&lg, classes),
-                logits: lg,
-                latency_ms,
-            });
-            self.stats.latencies_ms.push(latency_ms);
-            off += r.n;
-        }
-        self.stats.requests += reqs.len();
-        self.stats.images += total;
-        self.stats.batches += batches;
-        self.stats.wall_ms += wall_ms;
-        out
+        let logits = self.engine.model().forward(&plan.images, plan.m, self.engine.cfg.workers);
+        let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.done.on_batch(&plan, &logits, self.now_ms(), compute_ms);
+        true
     }
 
-    pub fn stats(&self) -> &SessionStats {
-        &self.stats
+    /// Redeem a ticket if its request has resolved (at most once).
+    pub fn poll(&mut self, t: Ticket) -> Option<Outcome> {
+        self.done.take(t)
+    }
+
+    /// Drive the session until `t` resolves.
+    pub fn wait(&mut self, t: Ticket) -> Result<Outcome> {
+        loop {
+            if let Some(o) = self.done.take(t) {
+                return Ok(o);
+            }
+            if !self.step() {
+                bail!("ticket {} is not pending in this session", t.id);
+            }
+        }
+    }
+
+    /// Drive the queue dry and drain every resolved outcome, in
+    /// ticket order.
+    pub fn wait_all(&mut self) -> Vec<Outcome> {
+        while self.step() {}
+        self.done.take_all()
+    }
+
+    /// Aggregate latency/throughput snapshot.
+    pub fn stats(&self) -> LatencySummary {
+        self.done.rec.summary()
+    }
+
+    /// PR 5 shim: enqueue and return the raw id.
+    #[deprecated(note = "use submit_request, which returns a Ticket and typed rejections")]
+    pub fn submit(&mut self, images: Vec<f32>, n: usize) -> Result<u64> {
+        Ok(self.submit_request(images, n)?.id)
+    }
+
+    /// PR 5 shim: run everything queued, return completed responses in
+    /// submission order (expired requests are silently dropped, as the
+    /// old API had no way to express them).
+    #[deprecated(note = "use step/poll/wait_all, which expose per-request outcomes")]
+    pub fn flush(&mut self) -> Vec<Response> {
+        self.wait_all().into_iter().filter_map(Outcome::response).collect()
     }
 }
 
@@ -171,7 +150,7 @@ mod tests {
     use crate::serve::model::{ActQuant, PackedVit, ServeGeom, WeightQuant};
     use crate::util::rng::Rng;
 
-    fn engine(micro_batch: usize) -> ServeEngine {
+    fn engine_with(micro_batch: usize, queue_depth: usize) -> ServeEngine {
         let geom = ServeGeom::new(8, 4, 32, 2, 4, 3, 4);
         let mut rng = Rng::new(77);
         let params: Vec<f32> = (0..geom.total_params()).map(|_| rng.normal() * 0.05).collect();
@@ -184,11 +163,21 @@ mod tests {
             ActQuant::Mx { fmt, scaling: Scaling::TruncationFree },
         )
         .unwrap();
-        ServeEngine::new(model, ServeConfig { micro_batch, workers: 2 }).unwrap()
+        let cfg = ServeConfig::builder()
+            .micro_batch(micro_batch)
+            .workers(2)
+            .queue_depth(queue_depth)
+            .build()
+            .unwrap();
+        ServeEngine::new(model, cfg).unwrap()
+    }
+
+    fn engine(micro_batch: usize) -> ServeEngine {
+        engine_with(micro_batch, 64)
     }
 
     #[test]
-    fn flush_matches_direct_engine_inference() {
+    fn wait_all_matches_direct_engine_inference() {
         // Micro-batch 4 over requests of 3 + 2 + 4 images: batches
         // cross request boundaries, results must not change.
         let eng = engine(4);
@@ -201,42 +190,86 @@ mod tests {
             let imgs: Vec<f32> = (0..n * px).map(|_| rng.normal()).collect();
             all.extend_from_slice(&imgs);
             sizes.push(n);
-            sess.submit(imgs, n).unwrap();
+            sess.submit_request(imgs, n).unwrap();
         }
         assert_eq!(sess.pending(), 3);
-        let rs = sess.flush();
+        let outs = sess.wait_all();
         assert_eq!(sess.pending(), 0);
-        assert_eq!(rs.len(), 3);
+        assert_eq!(outs.len(), 3);
         let want = eng.predict(&all, 9);
         let mut got = Vec::new();
-        for (r, n) in rs.iter().zip(&sizes) {
+        for (o, n) in outs.into_iter().zip(&sizes) {
+            let r = o.response().expect("no deadline, so every request completes");
             assert_eq!(r.preds.len(), *n);
             assert!(r.latency_ms >= 0.0);
             got.extend_from_slice(&r.preds);
         }
         assert_eq!(got, want);
-        // Later requests cannot finish before earlier ones.
-        assert!(rs.windows(2).all(|w| w[0].latency_ms <= w[1].latency_ms));
         let st = sess.stats();
-        assert_eq!((st.requests, st.images), (3, 9));
-        assert_eq!(st.batches, 3); // ceil(9 / 4)
+        assert_eq!((st.count, st.images, st.batches), (3, 9, 3)); // ceil(9/4) batches
         assert!(st.imgs_per_sec() > 0.0);
-        assert!(st.latency_pct_ms(0.5) <= st.latency_pct_ms(1.0));
+        assert!(st.p50_ms <= st.max_ms);
     }
 
     #[test]
-    fn submit_validates_shape() {
-        let mut sess = ServeSession::new(engine(4));
-        assert!(sess.submit(vec![0.0; 5], 1).is_err());
-        assert!(sess.submit(Vec::new(), 0).is_err());
-        let px = sess.engine().pixels_per_image();
-        assert!(sess.submit(vec![0.0; px], 1).is_ok());
-    }
-
-    #[test]
-    fn empty_flush_is_empty() {
+    fn poll_is_none_until_step_resolves() {
         let mut sess = ServeSession::new(engine(2));
+        let px = sess.engine().pixels_per_image();
+        let t = sess.submit_request(vec![0.1; 3 * px], 3).unwrap();
+        assert!(sess.poll(t).is_none());
+        assert!(sess.step()); // 2 of 3 images
+        assert!(sess.poll(t).is_none(), "request still has an image queued");
+        assert!(sess.step()); // final image
+        let o = sess.poll(t).expect("resolved after the final chunk");
+        assert_eq!(o.id(), t.id);
+        assert_eq!(o.response().unwrap().preds.len(), 3);
+        // Redemption is at-most-once; a drained ticket errors in wait.
+        assert!(sess.poll(t).is_none());
+        assert!(sess.wait(t).is_err());
+    }
+
+    #[test]
+    fn submit_validates_shape_and_applies_backpressure() {
+        let mut sess = ServeSession::new(engine_with(4, 64));
+        assert!(matches!(
+            sess.submit_request(vec![0.0; 5], 1),
+            Err(Reject::BadRequest(_))
+        ));
+        let px = sess.engine().pixels_per_image();
+        sess.submit_request(vec![0.0; 64 * px], 64).unwrap();
+        let r = sess.submit_request(vec![0.0; px], 1);
+        assert_eq!(r, Err(Reject::QueueFull { queued_images: 64, limit: 64 }));
+        assert_eq!(sess.stats().rejected, 1);
+    }
+
+    #[test]
+    fn deadline_expires_unstarted_requests() {
+        let mut sess = ServeSession::new(engine(4));
+        let px = sess.engine().pixels_per_image();
+        // A deadline already in the past: expires at first step.
+        let t = sess
+            .submit_with_deadline(vec![0.2; px], 1, Some(-1.0))
+            .unwrap();
+        let o = sess.wait(t).unwrap();
+        assert!(matches!(o, Outcome::Expired { .. }));
+        assert_eq!(sess.stats().expired, 1);
+        // A generous deadline completes normally.
+        let t2 = sess
+            .submit_with_deadline(vec![0.2; px], 1, Some(60_000.0))
+            .unwrap();
+        assert!(sess.wait(t2).unwrap().response().is_some());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shim_still_flushes() {
+        let mut sess = ServeSession::new(engine(2));
+        let px = sess.engine().pixels_per_image();
+        let id = sess.submit(vec![0.3; 2 * px], 2).unwrap();
+        let rs = sess.flush();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].id, id);
+        assert_eq!(rs[0].preds.len(), 2);
         assert!(sess.flush().is_empty());
-        assert_eq!(sess.stats().requests, 0);
     }
 }

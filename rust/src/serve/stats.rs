@@ -1,0 +1,204 @@
+//! Typed latency accounting shared by the session, the fleet, and the
+//! serve bench — one percentile implementation, one JSON field set.
+//!
+//! [`LatencyRecorder`] is the mutable accumulator the serving loops
+//! feed (per-request latencies, per-batch compute time, rejections,
+//! deadline expiries); [`LatencySummary`] is the immutable snapshot it
+//! produces, with the p50/p95/p99 distribution the ROADMAP's serving
+//! milestone asks for. The summary serializes itself into the BENCH
+//! json (`fields`/`to_json`), so session, fleet, bench harness, and the
+//! load generator all emit byte-identical schemas instead of each
+//! recomputing percentiles.
+
+use crate::util::json::{num, obj, Json};
+use crate::util::stats::{mean, percentile};
+
+/// Snapshot of a serving run's request/latency distribution.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LatencySummary {
+    /// Completed requests (one latency sample each).
+    pub count: usize,
+    /// Images inferred across all micro-batches.
+    pub images: usize,
+    /// Micro-batches executed.
+    pub batches: usize,
+    /// Requests rejected by queue-depth backpressure.
+    pub rejected: usize,
+    /// Requests expired by their deadline before any chunk ran.
+    pub expired: usize,
+    /// Wall-clock span from first arrival to last completion.
+    pub wall_ms: f64,
+    /// Summed forward compute time (excludes queueing).
+    pub busy_ms: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencySummary {
+    /// Serving throughput over the wall-clock span (0 for empty runs).
+    pub fn imgs_per_sec(&self) -> f64 {
+        if self.wall_ms > 0.0 {
+            self.images as f64 / (self.wall_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+
+    /// The BENCH json fields, in the schema order every emitter shares.
+    pub fn fields(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("requests", num(self.count as f64)),
+            ("images", num(self.images as f64)),
+            ("batches", num(self.batches as f64)),
+            ("rejected", num(self.rejected as f64)),
+            ("expired", num(self.expired as f64)),
+            ("wall_ms", num(self.wall_ms)),
+            ("busy_ms", num(self.busy_ms)),
+            ("imgs_per_s", num(self.imgs_per_sec())),
+            ("mean_ms", num(self.mean_ms)),
+            ("p50_ms", num(self.p50_ms)),
+            ("p95_ms", num(self.p95_ms)),
+            ("p99_ms", num(self.p99_ms)),
+            ("max_ms", num(self.max_ms)),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(self.fields())
+    }
+}
+
+/// PR 5's stats type, kept as an alias so old callers compile.
+#[deprecated(note = "use LatencySummary (the typed percentile snapshot)")]
+pub type SessionStats = LatencySummary;
+
+/// Mutable accumulator behind [`LatencySummary`].
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    latencies_ms: Vec<f64>,
+    images: usize,
+    batches: usize,
+    rejected: usize,
+    expired: usize,
+    busy_ms: f64,
+    first_ms: Option<f64>,
+    last_ms: Option<f64>,
+}
+
+impl LatencyRecorder {
+    /// Widen the observed wall-clock span to include `ms`.
+    fn touch(&mut self, ms: f64) {
+        self.first_ms = Some(self.first_ms.map_or(ms, |f| f.min(ms)));
+        self.last_ms = Some(self.last_ms.map_or(ms, |l| l.max(ms)));
+    }
+
+    /// A request arrived at `ms` (admitted or not) — wall time starts
+    /// at the first arrival, not the first completion.
+    pub fn note_arrival(&mut self, ms: f64) {
+        self.touch(ms);
+    }
+
+    /// A micro-batch of `images` finished at `done_ms` after
+    /// `compute_ms` of forward time.
+    pub fn record_batch(&mut self, images: usize, compute_ms: f64, done_ms: f64) {
+        self.images += images;
+        self.batches += 1;
+        self.busy_ms += compute_ms;
+        self.touch(done_ms);
+    }
+
+    /// A request completed with end-to-end latency `ms`.
+    pub fn record_latency(&mut self, ms: f64) {
+        self.latencies_ms.push(ms);
+    }
+
+    pub fn record_reject(&mut self) {
+        self.rejected += 1;
+    }
+
+    pub fn record_expired(&mut self) {
+        self.expired += 1;
+    }
+
+    /// Requests completed so far.
+    pub fn completed(&self) -> usize {
+        self.latencies_ms.len()
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        let xs = &self.latencies_ms;
+        LatencySummary {
+            count: xs.len(),
+            images: self.images,
+            batches: self.batches,
+            rejected: self.rejected,
+            expired: self.expired,
+            wall_ms: match (self.first_ms, self.last_ms) {
+                (Some(f), Some(l)) => l - f,
+                _ => 0.0,
+            },
+            busy_ms: self.busy_ms,
+            mean_ms: mean(xs),
+            p50_ms: percentile(xs, 50.0),
+            p95_ms: percentile(xs, 95.0),
+            p99_ms: percentile(xs, 99.0),
+            max_ms: xs.iter().fold(0.0f64, |a, &b| a.max(b)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_summarizes_percentiles_and_span() {
+        let mut rec = LatencyRecorder::default();
+        rec.note_arrival(10.0);
+        rec.record_batch(4, 3.0, 15.0);
+        rec.record_batch(2, 2.0, 25.0);
+        for ms in [1.0, 2.0, 3.0, 4.0] {
+            rec.record_latency(ms);
+        }
+        rec.record_reject();
+        rec.record_expired();
+        let s = rec.summary();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.images, 6);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.expired, 1);
+        assert!((s.wall_ms - 15.0).abs() < 1e-12);
+        assert!((s.busy_ms - 5.0).abs() < 1e-12);
+        assert!((s.p50_ms - 2.5).abs() < 1e-12);
+        assert_eq!(s.max_ms, 4.0);
+        // 6 images over 15 ms of wall time.
+        assert!((s.imgs_per_sec() - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_all_zero() {
+        let s = LatencyRecorder::default().summary();
+        assert_eq!(s, LatencySummary::default());
+        assert_eq!(s.imgs_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn json_schema_has_the_bench_fields() {
+        let mut rec = LatencyRecorder::default();
+        rec.note_arrival(0.0);
+        rec.record_batch(8, 1.0, 2.0);
+        rec.record_latency(2.0);
+        let j = rec.summary().to_json();
+        for key in
+            ["requests", "images", "batches", "rejected", "expired", "imgs_per_s", "p50_ms",
+             "p95_ms", "p99_ms", "max_ms", "wall_ms"]
+        {
+            assert!(j.get(key).is_some(), "BENCH json missing {key}");
+        }
+        assert_eq!(j.get("imgs_per_s").unwrap().as_f64().unwrap(), 4000.0);
+    }
+}

@@ -1,0 +1,200 @@
+//! BENCH json persistence + cross-PR regression comparison (the
+//! ROADMAP's "perf trajectory" item).
+//!
+//! `serve --load-test` (and the bench harness) write their
+//! [`crate::serve::LatencySummary`]-schema entries to
+//! `results/BENCH_<pr>.json`; at the next PR, [`find_previous`] locates
+//! the newest earlier file and [`compare`] flags entries whose
+//! throughput dropped or tail latency rose by more than the tolerance.
+//! Entries are matched by their *configuration* keys (everything that
+//! is not a measured metric), so adding new cases never produces false
+//! regressions — only matching cases are compared.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{num, obj, Json};
+
+/// Keys that carry measurements (everything else identifies the case).
+const MEASURED: [&str; 14] = [
+    "imgs_per_s",
+    "p50_ms",
+    "p95_ms",
+    "p99_ms",
+    "max_ms",
+    "mean_ms",
+    "wall_ms",
+    "busy_ms",
+    "requests",
+    "images",
+    "batches",
+    "rejected",
+    "expired",
+    "accepted",
+];
+
+/// Write `entries` to `path` as `{"pr": pr, "entries": [...]}`.
+pub fn write_bench(path: &Path, pr: u64, entries: Vec<Json>) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    let doc = obj(vec![("pr", num(pr as f64)), ("entries", Json::Arr(entries))]);
+    std::fs::write(path, doc.to_string())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Newest `BENCH_<n>.json` in `dir` with `n < pr`, parsed.
+pub fn find_previous(dir: &Path, pr: u64) -> Option<(PathBuf, Json)> {
+    let mut best: Option<(u64, PathBuf)> = None;
+    for entry in std::fs::read_dir(dir).ok()?.flatten() {
+        let name = entry.file_name();
+        let Some(n) = name
+            .to_str()
+            .and_then(|s| s.strip_prefix("BENCH_"))
+            .and_then(|s| s.strip_suffix(".json"))
+            .and_then(|s| s.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        if n < pr && best.as_ref().map_or(true, |(b, _)| n > *b) {
+            best = Some((n, entry.path()));
+        }
+    }
+    let (_, path) = best?;
+    let doc = Json::parse(&std::fs::read_to_string(&path).ok()?).ok()?;
+    Some((path, doc))
+}
+
+/// Two entries describe the same benchmark case when every
+/// configuration key they share agrees (and they share at least one).
+fn same_case(a: &Json, b: &Json) -> bool {
+    let Json::Obj(am) = a else { return false };
+    let mut shared = 0;
+    for (k, av) in am {
+        if MEASURED.contains(&k.as_str()) {
+            continue;
+        }
+        match b.get(k) {
+            Some(bv) if bv == av => shared += 1,
+            Some(_) => return false,
+            None => {}
+        }
+    }
+    shared > 0
+}
+
+/// Compare matched entries of two BENCH docs; a regression is an
+/// `imgs_per_s` drop below `prev * (1 - tol)` or a `p95_ms` rise above
+/// `prev * (1 + tol)`. Returns human-readable flag lines (empty = ok).
+pub fn compare(prev: &Json, cur: &Json, tol: f64) -> Vec<String> {
+    let empty: Vec<Json> = Vec::new();
+    let prev_entries = prev.get("entries").and_then(|e| e.as_arr().ok()).unwrap_or(&empty);
+    let cur_entries = cur.get("entries").and_then(|e| e.as_arr().ok()).unwrap_or(&empty);
+    let mut flags = Vec::new();
+    for ce in cur_entries {
+        let Some(pe) = prev_entries.iter().find(|pe| same_case(ce, pe)) else {
+            continue;
+        };
+        let case = ce
+            .get("case")
+            .and_then(|c| c.as_str().ok())
+            .unwrap_or("entry")
+            .to_string();
+        let metric = |e: &Json, k: &str| e.get(k).and_then(|v| v.as_f64().ok());
+        if let (Some(p), Some(c)) = (metric(pe, "imgs_per_s"), metric(ce, "imgs_per_s")) {
+            if p > 0.0 && c < p * (1.0 - tol) {
+                flags.push(format!(
+                    "{case}: imgs_per_s {c:.1} fell >{:.0}% below previous {p:.1}",
+                    tol * 100.0
+                ));
+            }
+        }
+        if let (Some(p), Some(c)) = (metric(pe, "p95_ms"), metric(ce, "p95_ms")) {
+            if p > 0.0 && c > p * (1.0 + tol) {
+                flags.push(format!(
+                    "{case}: p95_ms {c:.2} rose >{:.0}% above previous {p:.2}",
+                    tol * 100.0
+                ));
+            }
+        }
+    }
+    flags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::s;
+
+    fn entry(case: &str, ips: f64, p95: f64) -> Json {
+        obj(vec![
+            ("case", s(case)),
+            ("engines", num(2.0)),
+            ("imgs_per_s", num(ips)),
+            ("p95_ms", num(p95)),
+        ])
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tj-benchio-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn write_find_and_compare_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        write_bench(&dir.join("BENCH_4.json"), 4, vec![entry("smoke", 1000.0, 10.0)]).unwrap();
+        write_bench(&dir.join("BENCH_5.json"), 5, vec![entry("smoke", 900.0, 12.0)]).unwrap();
+        // PR 6 sees PR 5 (the newest earlier), not PR 4.
+        let (path, prev) = find_previous(&dir, 6).unwrap();
+        assert!(path.ends_with("BENCH_5.json"));
+        assert_eq!(prev.get("pr").unwrap().as_i64().unwrap(), 5);
+        // Within 10%: clean.
+        let cur =
+            obj(vec![("pr", num(6.0)), ("entries", Json::Arr(vec![entry("smoke", 880.0, 12.5)]))]);
+        assert!(compare(&prev, &cur, 0.10).is_empty());
+        // Throughput collapse + tail blowup: both flagged.
+        let bad =
+            obj(vec![("pr", num(6.0)), ("entries", Json::Arr(vec![entry("smoke", 500.0, 30.0)]))]);
+        let flags = compare(&prev, &bad, 0.10);
+        assert_eq!(flags.len(), 2, "{flags:?}");
+        assert!(flags[0].contains("imgs_per_s"));
+        assert!(flags[1].contains("p95_ms"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unmatched_cases_are_not_compared() {
+        let prev =
+            obj(vec![("pr", num(5.0)), ("entries", Json::Arr(vec![entry("a", 100.0, 1.0)]))]);
+        let cur = obj(vec![("pr", num(6.0)), ("entries", Json::Arr(vec![entry("b", 1.0, 99.0)]))]);
+        assert!(compare(&prev, &cur, 0.10).is_empty());
+        // Same case name but different config key -> no match either.
+        let mut e = entry("a", 1.0, 99.0);
+        if let Json::Obj(m) = &mut e {
+            m[1].1 = num(4.0); // engines: 2 -> 4
+        }
+        let cur2 = obj(vec![("pr", num(6.0)), ("entries", Json::Arr(vec![e]))]);
+        assert!(compare(&prev, &cur2, 0.10).is_empty());
+    }
+
+    #[test]
+    fn find_previous_ignores_foreign_files() {
+        let dir = tmpdir("foreign");
+        std::fs::write(dir.join("BENCH_notanumber.json"), "{}").unwrap();
+        std::fs::write(dir.join("other.txt"), "x").unwrap();
+        assert!(find_previous(&dir, 6).is_none());
+        write_bench(&dir.join("BENCH_6.json"), 6, vec![]).unwrap();
+        // Only files strictly earlier than the requested PR count.
+        assert!(find_previous(&dir, 6).is_none());
+        assert!(find_previous(&dir, 7).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

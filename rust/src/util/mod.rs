@@ -6,6 +6,7 @@
 //! pool instead of serde_json / rand / clap / rayon (DESIGN.md
 //! §Substitutions).
 
+pub mod benchio;
 pub mod cli;
 pub mod json;
 pub mod log;

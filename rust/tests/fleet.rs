@@ -1,0 +1,223 @@
+//! Integration tests for the continuous-batching serve fleet: N-way
+//! row-sharded bit-exactness (ragged splits and both packed variants
+//! included), cross-request micro-batching through the ticket API,
+//! queue-depth backpressure, deadline expiry on the virtual clock, and
+//! seeded open-loop load-test determinism.
+
+use tetrajet::quant::{e2m1, Scaling};
+use tetrajet::serve::{
+    run_load_test, ActQuant, LoadReport, LoadSpec, Outcome, Pace, PackedVit, Reject, ServeConfig,
+    ServeFleet, ServeGeom, WeightQuant,
+};
+use tetrajet::util::rng::Rng;
+
+fn tiny_geom() -> ServeGeom {
+    ServeGeom::new(8, 4, 32, 2, 4, 3, 4)
+}
+
+fn tiny_vit(seed: u64, int4: bool) -> PackedVit {
+    let geom = tiny_geom();
+    let mut rng = Rng::new(seed);
+    let params: Vec<f32> = (0..geom.total_params()).map(|_| rng.normal() * 0.05).collect();
+    let (wq, aq) = if int4 {
+        (WeightQuant::Int4, ActQuant::Int4)
+    } else {
+        let fmt = e2m1();
+        (
+            WeightQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+            ActQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+        )
+    };
+    PackedVit::build(geom, &params, None, wq, aq).unwrap()
+}
+
+fn cfg(engines: usize, micro: usize, depth: usize) -> ServeConfig {
+    ServeConfig::builder()
+        .micro_batch(micro)
+        .workers(2)
+        .engines(engines)
+        .queue_depth(depth)
+        .build()
+        .unwrap()
+}
+
+fn px() -> usize {
+    let g = tiny_geom();
+    g.img * g.img * 3
+}
+
+#[test]
+fn prop_fleet_logits_bit_exact_across_engine_counts_and_variants() {
+    // The tiny geometry's stores have 192/64/128/64 rows, so 3 and 4
+    // engines exercise ragged row splits (and odd-offset nibble
+    // repacks) on every store.
+    for int4 in [false, true] {
+        let vit = tiny_vit(11 + int4 as u64, int4);
+        let mut rng = Rng::new(33);
+        let n = 5;
+        let x: Vec<f32> = (0..n * px()).map(|_| rng.normal()).collect();
+        let want = vit.forward(&x, n, 1);
+        for engines in 1..=4 {
+            let mut fleet = ServeFleet::new(vit.clone(), cfg(engines, 8, 32)).unwrap();
+            assert_eq!(fleet.engines(), engines);
+            let got = fleet.infer_logits(x.clone(), n).unwrap();
+            assert_eq!(got, want, "fleet must be bit-exact (engines={engines}, int4={int4})");
+        }
+    }
+}
+
+#[test]
+fn fleet_micro_batches_across_requests_and_drains_in_id_order() {
+    let vit = tiny_vit(3, false);
+    let mut rng = Rng::new(21);
+    let mut all = Vec::new();
+    let mut reqs = Vec::new();
+    for n in [1usize, 5, 2] {
+        let imgs: Vec<f32> = (0..n * px()).map(|_| rng.normal()).collect();
+        all.extend_from_slice(&imgs);
+        reqs.push((imgs, n));
+    }
+    let want = vit.forward(&all, 8, 1);
+    let mut fleet = ServeFleet::new(vit, cfg(2, 4, 64)).unwrap();
+    let mut tickets = Vec::new();
+    for (imgs, n) in reqs {
+        tickets.push(fleet.submit(imgs, n, None).unwrap());
+    }
+    // Malformed submissions are rejected with a reason, not queued.
+    assert!(matches!(fleet.submit(vec![0.0; 5], 2, None), Err(Reject::BadRequest(_))));
+    // Nothing is resolved before the fleet steps.
+    assert!(fleet.poll(tickets[0]).is_none());
+    let outs = fleet.wait_all();
+    assert_eq!(outs.len(), 3);
+    assert!(outs.windows(2).all(|w| w[0].id() < w[1].id()), "drain order is ticket-id order");
+    let got: Vec<f32> = outs
+        .into_iter()
+        .map(|o| o.response().expect("deadline-less requests complete"))
+        .flat_map(|r| r.logits)
+        .collect();
+    assert_eq!(got, want, "reassembled per-request logits must match one big batch");
+    let st = fleet.stats();
+    assert_eq!((st.count, st.images, st.batches), (3, 8, 2)); // ceil(8 / 4)
+    // Redemption is at most once: wait_all already consumed them.
+    assert!(fleet.poll(tickets[1]).is_none());
+}
+
+#[test]
+fn deadlines_expire_unstarted_requests_on_the_virtual_clock() {
+    let vit = tiny_vit(4, false);
+    let mut fleet = ServeFleet::new(vit, cfg(2, 4, 64)).unwrap();
+    let t0 = fleet.submit_at(vec![0.1; 2 * px()], 2, Some(5.0), 0.0).unwrap();
+    let t1 = fleet.submit_at(vec![0.2; 2 * px()], 2, Some(1000.0), 0.5).unwrap();
+    // The first batch forms at t=10: t0's deadline (5.0) has passed
+    // before any of its images ran, so it expires; t1 runs.
+    let info = fleet.step_at(10.0, Some(1.0)).unwrap();
+    assert_eq!(info.m, 2);
+    assert_eq!(info.done_ms, 12.0); // 10 + 2 images * 1 ms/image
+    match fleet.poll(t0) {
+        Some(Outcome::Expired { id, deadline_ms }) => {
+            assert_eq!((id, deadline_ms), (t0.id, 5.0));
+        }
+        o => panic!("t0 should have expired, got {o:?}"),
+    }
+    match fleet.poll(t1) {
+        Some(Outcome::Done(r)) => {
+            assert_eq!(r.id, t1.id);
+            assert_eq!(r.preds.len(), 2);
+            assert!((r.latency_ms - 11.5).abs() < 1e-12); // 12.0 - arrival 0.5
+        }
+        o => panic!("t1 should be done, got {o:?}"),
+    }
+    let st = fleet.stats();
+    assert_eq!((st.count, st.expired, st.images), (1, 1, 2));
+}
+
+/// One virtual-pace load-test run at a rate that guarantees queue-full
+/// rejections (arrivals every ~0.5 ms vs 4 ms of service per batch).
+fn overload_run(seed: u64, deadline_ms: Option<f64>) -> LoadReport {
+    let vit = tiny_vit(2, false);
+    let mut fleet = ServeFleet::new(vit, cfg(2, 4, 8)).unwrap();
+    let spec = LoadSpec {
+        seed,
+        requests: 120,
+        request_size: 4,
+        rate_rps: 2000.0,
+        deadline_ms,
+        pace: Pace::Virtual { ms_per_image: 1.0 },
+    };
+    let n_px = px();
+    run_load_test(&mut fleet, &spec, |i| {
+        let mut r = Rng::new(seed).fold_in(0x494d47).fold_in(i as u64);
+        ((0..4 * n_px).map(|_| r.uniform() * 2.0 - 1.0).collect(), Vec::new())
+    })
+    .unwrap()
+}
+
+#[test]
+fn load_test_applies_backpressure_and_is_seed_deterministic() {
+    let a = overload_run(7, None);
+    assert_eq!(a.accepted + a.rejected, 120);
+    assert!(a.rejected > 0, "open-loop overload must trip queue-depth backpressure");
+    assert_eq!(a.completed + a.expired, a.accepted);
+    assert_eq!(a.expired, 0, "no deadlines -> nothing expires");
+    assert_eq!(a.summary.rejected, a.rejected);
+    assert_eq!(a.summary.count, a.completed);
+    assert_eq!(a.summary.images, a.accepted * 4);
+    // Every request costs at least its own 4 ms of service; tails are
+    // ordered.
+    assert!(a.summary.p50_ms >= 4.0);
+    assert!(a.summary.p50_ms <= a.summary.p95_ms);
+    assert!(a.summary.p95_ms <= a.summary.p99_ms);
+    assert!(a.summary.p99_ms <= a.summary.max_ms);
+
+    // Same seed -> identical schedule, admissions, and virtual-clock
+    // latency digest. (busy/compute times are wall-measured and NOT
+    // compared; determinism is over the simulated quantities.)
+    let b = overload_run(7, None);
+    assert_eq!(
+        (a.accepted, a.rejected, a.expired, a.completed),
+        (b.accepted, b.rejected, b.expired, b.completed)
+    );
+    let digest = |r: &LoadReport| {
+        (
+            r.summary.count,
+            r.summary.images,
+            r.summary.batches,
+            r.summary.rejected,
+            r.summary.expired,
+            r.summary.wall_ms.to_bits(),
+            r.summary.mean_ms.to_bits(),
+            r.summary.p50_ms.to_bits(),
+            r.summary.p95_ms.to_bits(),
+            r.summary.p99_ms.to_bits(),
+            r.summary.max_ms.to_bits(),
+        )
+    };
+    assert_eq!(digest(&a), digest(&b), "virtual-pace load test must be bit-deterministic");
+
+    // A different seed draws a different Poisson schedule.
+    let spec = |seed| LoadSpec {
+        seed,
+        requests: 120,
+        request_size: 4,
+        rate_rps: 2000.0,
+        deadline_ms: None,
+        pace: Pace::Virtual { ms_per_image: 1.0 },
+    };
+    assert_ne!(spec(7).schedule(), spec(8).schedule());
+}
+
+#[test]
+fn load_test_deadlines_expire_queued_requests_under_overload() {
+    // Queued requests wait multiple 4 ms service slots before starting;
+    // a 2 ms deadline therefore expires some of them (deterministically,
+    // on the virtual clock).
+    let a = overload_run(5, Some(2.0));
+    assert!(a.expired > 0, "tight deadlines under overload must expire requests");
+    assert_eq!(a.completed + a.expired, a.accepted);
+    assert_eq!(a.summary.expired, a.expired);
+    let b = overload_run(5, Some(2.0));
+    assert_eq!(
+        (a.accepted, a.rejected, a.expired, a.completed),
+        (b.accepted, b.rejected, b.expired, b.completed)
+    );
+}

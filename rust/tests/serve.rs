@@ -176,7 +176,7 @@ fn packed_eval_matches_mirror_eval_bit_exact() {
     let man = manifest_for(&geom, "mx", false);
     let params = random_params(&geom, 2);
     let vit = PackedVit::from_checkpoint(&man, &params, None, &[]).unwrap();
-    let cfg = ServeConfig { micro_batch: 4, workers: 2 };
+    let cfg = ServeConfig::builder().micro_batch(4).workers(2).build().unwrap();
     let fused = ServeEngine::new(vit.clone(), cfg).unwrap();
     let mirror = ServeEngine::new(vit.to_dense(), cfg).unwrap();
 
@@ -198,7 +198,9 @@ fn engine_never_materializes_f32_weight_mirror() {
     let man = manifest_for(&geom, "mx", false);
     let params = random_params(&geom, 3);
     let vit = PackedVit::from_checkpoint(&man, &params, None, &[]).unwrap();
-    let engine = ServeEngine::new(vit, ServeConfig { micro_batch: 2, workers: 1 }).unwrap();
+    let engine =
+        ServeEngine::new(vit, ServeConfig::builder().micro_batch(2).workers(1).build().unwrap())
+            .unwrap();
     // Resident quantized-weight state is exactly codes + scale bytes:
     // 0.5 B/element + 1 B per 32-element group (dims here are multiples
     // of 32, so no ragged groups).
@@ -216,12 +218,13 @@ fn engine_never_materializes_f32_weight_mirror() {
 }
 
 #[test]
+#[allow(deprecated)] // exercises the PR 5 submit/flush shim end to end
 fn session_micro_batches_across_requests() {
     let geom = tiny_geom();
     let man = manifest_for(&geom, "mx", false);
     let params = random_params(&geom, 4);
     let vit = PackedVit::from_checkpoint(&man, &params, None, &[]).unwrap();
-    let cfg = ServeConfig { micro_batch: 4, workers: 2 };
+    let cfg = ServeConfig::builder().micro_batch(4).workers(2).build().unwrap();
     let engine = ServeEngine::new(vit.clone(), cfg).unwrap();
     let oracle = ServeEngine::new(vit, cfg).unwrap();
 
