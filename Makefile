@@ -3,13 +3,14 @@
 
 RUST_DIR := rust
 
-.PHONY: tier1 build test fmt fmt-check bench loadtest-smoke artifacts
+.PHONY: tier1 build test fmt fmt-check bench loadtest-smoke obs-smoke artifacts
 
 # `cargo bench --no-run` keeps the bench code compiling without paying
 # for a full measurement sweep.
 tier1:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q && cargo bench --no-run && cargo fmt --check
 	$(MAKE) loadtest-smoke
+	$(MAKE) obs-smoke
 
 # 2-engine continuous-batching smoke: ~200 virtual-pace Poisson
 # requests against a seeded synthetic model (no artifacts needed),
@@ -19,6 +20,20 @@ loadtest-smoke:
 	  --engines 2 --micro-batch 8 --workers 2 --queue-depth 64 \
 	  --requests 200 --request-size 2 --rate 400 --seed 0 \
 	  --pace virtual --service-ms 0.5 --load-test
+
+# Same deterministic load test but with the observability surface on:
+# request trace JSONL + metrics snapshot, then schema-validate both
+# (parseable trace lines, stable metric names, recomputed digest).
+obs-smoke:
+	cd $(RUST_DIR) && cargo run --release --quiet -- serve --synthetic tiny \
+	  --engines 2 --micro-batch 8 --workers 2 --queue-depth 64 \
+	  --requests 200 --request-size 2 --rate 400 --seed 0 \
+	  --pace virtual --service-ms 0.5 --load-test \
+	  --trace-out results/obs_smoke_trace.jsonl \
+	  --metrics-out results/obs_smoke_metrics.json
+	cd $(RUST_DIR) && cargo run --release --quiet -- obs-validate \
+	  --trace results/obs_smoke_trace.jsonl \
+	  --snapshot results/obs_smoke_metrics.json
 
 build:
 	cd $(RUST_DIR) && cargo build --release

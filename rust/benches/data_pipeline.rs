@@ -24,4 +24,6 @@ fn main() {
     b.case("eval_batch_16", (16 * 32 * 32 * 3) as u64, || {
         std::hint::black_box(ev.batch(0));
     });
+
+    b.persist();
 }

@@ -2,12 +2,21 @@
 //!
 //! Reports min/median/mean over timed iterations after warmup, with
 //! auto-scaled iteration counts targeting a fixed per-case budget.
+//! Every case is also accumulated as a BENCH json entry; [`Bench::persist`]
+//! merges them into `results/BENCH_<pr>.json` through
+//! [`tetrajet::util::benchio::merge_bench`], the same file and schema
+//! the serve load test writes, so `compare` gates cover the whole
+//! bench suite (env: `TJ_BENCH_PR`, `TJ_BENCH_DIR`).
 
+use std::cell::RefCell;
 use std::time::Instant;
+
+use tetrajet::util::json::{num, obj, s, Json};
 
 pub struct Bench {
     name: String,
     budget_ms: f64,
+    entries: RefCell<Vec<Json>>,
 }
 
 impl Bench {
@@ -17,7 +26,7 @@ impl Bench {
             .and_then(|s| s.parse().ok())
             .unwrap_or(300.0);
         println!("\n=== bench suite: {name} (budget {budget_ms:.0} ms/case) ===");
-        Bench { name: name.to_string(), budget_ms }
+        Bench { name: name.to_string(), budget_ms, entries: RefCell::new(Vec::new()) }
     }
 
     /// Time `f`, which processes `items` logical items per call.
@@ -47,5 +56,34 @@ impl Bench {
             samples.len(),
             if items > 1 { format!(", {:.2} Melem/s", thr / 1e6) } else { String::new() },
         );
+        self.entries.borrow_mut().push(obj(vec![
+            ("bench", s(&self.name)),
+            ("case", s(&format!("{}/{label}", self.name))),
+            ("items", num(items as f64)),
+            ("min_ms", num(min * 1e3)),
+            ("med_ms", num(med * 1e3)),
+            ("mean_ms", num(mean * 1e3)),
+            ("melem_per_s", num(thr / 1e6)),
+        ]));
+    }
+
+    /// Queue a hand-built BENCH entry (e.g. serve's engine-throughput
+    /// objects, which carry the LatencySummary schema) for [`persist`].
+    #[allow(dead_code)]
+    pub fn note(&self, entry: Json) {
+        self.entries.borrow_mut().push(entry);
+    }
+
+    /// Merge the accumulated entries into `TJ_BENCH_DIR/BENCH_<TJ_BENCH_PR>.json`.
+    pub fn persist(&self) {
+        let pr = std::env::var("TJ_BENCH_PR").ok().and_then(|s| s.parse().ok()).unwrap_or(7u64);
+        let dir = std::env::var("TJ_BENCH_DIR").unwrap_or_else(|_| "results".to_string());
+        let path = std::path::Path::new(&dir).join(format!("BENCH_{pr}.json"));
+        let entries = self.entries.borrow().clone();
+        let n = entries.len();
+        match tetrajet::util::benchio::merge_bench(&path, pr, entries) {
+            Ok(()) => println!("BENCH persisted: {n} entries -> {}", path.display()),
+            Err(e) => eprintln!("BENCH persist failed ({}): {e:#}", path.display()),
+        }
     }
 }

@@ -53,4 +53,6 @@ fn main() {
         latents(&w, cols, e2m1(), Scaling::TruncationFree, &mut buf);
         std::hint::black_box(&buf);
     });
+
+    b.persist();
 }

@@ -94,4 +94,6 @@ fn main() {
     b.case("flip_count_packed 2M", nb as u64, || {
         std::hint::black_box(pb2.flip_count(&pb));
     });
+
+    b.persist();
 }

@@ -107,7 +107,9 @@ fn main() {
             ("packed_weight_bytes", num(model.quantized_weight_bytes() as f64)),
         ];
         fields.extend(st.fields());
-        println!("BENCH {}", obj(fields).to_string());
+        let entry = obj(fields);
+        println!("BENCH {}", entry.to_string());
+        b.note(entry);
     }
 
     // --- 2-engine row-sharded fleet vs single engine, batch 16 ---
@@ -134,6 +136,10 @@ fn main() {
             ("batch", num(batch as f64)),
         ];
         fields.extend(fleet.stats().fields());
-        println!("BENCH {}", obj(fields).to_string());
+        let entry = obj(fields);
+        println!("BENCH {}", entry.to_string());
+        b.note(entry);
     }
+
+    b.persist();
 }

@@ -43,5 +43,7 @@ fn main() -> anyhow::Result<()> {
             tr.mirror_wq();
         });
     }
+
+    b.persist();
     Ok(())
 }

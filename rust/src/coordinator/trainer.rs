@@ -18,6 +18,7 @@ use crate::data::{Batcher, EvalSet, SynthVision};
 use crate::metrics::{
     latents, quant_confidence, OscTracker, PackedOscTracker, RateTracker,
 };
+use crate::obs::{Counter, FCounter, Gauge, MetricsRegistry};
 use crate::quant::{
     fp4_format, Fp4Format, Int4Quantizer, MxQuantizer, PackedMx,
     QemaQuantizer, Quantizer, Scaling,
@@ -86,6 +87,44 @@ impl OscState {
     }
 }
 
+/// Trainer instrumentation: per-step phase timing plus the oscillation
+/// flip-rate / rate-of-change metrics re-exported as registry gauges so
+/// one snapshot surface covers serving and training alike.
+struct TrainerObs {
+    reg: MetricsRegistry,
+    steps: Counter,
+    hlo_ms: FCounter,
+    mirror_ms: FCounter,
+    controllers_ms: FCounter,
+    metrics_ms: FCounter,
+    eval_ms: FCounter,
+    osc_flips: Gauge,
+    osc_ratio: Gauge,
+    rate_w: Gauge,
+    rate_wq: Gauge,
+    rate_y: Gauge,
+}
+
+impl TrainerObs {
+    fn new() -> TrainerObs {
+        let reg = MetricsRegistry::new();
+        TrainerObs {
+            steps: reg.counter("train.steps"),
+            hlo_ms: reg.fcounter("train.phase.hlo_ms"),
+            mirror_ms: reg.fcounter("train.phase.mirror_ms"),
+            controllers_ms: reg.fcounter("train.phase.controllers_ms"),
+            metrics_ms: reg.fcounter("train.phase.metrics_ms"),
+            eval_ms: reg.fcounter("train.phase.eval_ms"),
+            osc_flips: reg.gauge("train.osc.flips"),
+            osc_ratio: reg.gauge("train.osc.ratio"),
+            rate_w: reg.gauge("train.rate.w"),
+            rate_wq: reg.gauge("train.rate.wq"),
+            rate_y: reg.gauge("train.rate.y"),
+            reg,
+        }
+    }
+}
+
 pub struct Trainer<'a> {
     pub arts: &'a ModelArtifacts,
     pub cfg: TrainConfig,
@@ -112,6 +151,7 @@ pub struct Trainer<'a> {
     osc: Option<OscState>,
     scratch_conf: Vec<f32>,
     scratch_lat: Vec<f32>,
+    obs: TrainerObs,
 }
 
 impl<'a> Trainer<'a> {
@@ -203,7 +243,16 @@ impl<'a> Trainer<'a> {
             osc: None,
             scratch_conf: Vec::new(),
             scratch_lat: Vec::new(),
+            obs: TrainerObs::new(),
         })
+    }
+
+    /// The trainer's metrics registry: `train.steps`,
+    /// `train.phase.{hlo,mirror,controllers,metrics,eval}_ms`, and the
+    /// `train.osc.*` / `train.rate.*` gauges mirroring the Recorder's
+    /// oscillation and rate-of-change series.
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.obs.reg
     }
 
     fn metrics_enabled(&self) -> bool {
@@ -332,6 +381,7 @@ impl<'a> Trainer<'a> {
         }
         let lr = self.cfg.lr_at(step);
         let (x, y) = self.batcher.next_batch();
+        let t_hlo = std::time::Instant::now();
         let outs = self.arts.train_step.call(&[
             Arg::F32(&self.state.params),
             Arg::F32(&self.state.m),
@@ -350,6 +400,7 @@ impl<'a> Trainer<'a> {
             Arg::F32(&x),
             Arg::I32(&y),
         ])?;
+        self.obs.hlo_ms.add(t_hlo.elapsed().as_secs_f64() * 1e3);
         let mut it = outs.into_iter();
         self.state.params = it.next().unwrap().data;
         self.state.m = it.next().unwrap().data;
@@ -359,6 +410,7 @@ impl<'a> Trainer<'a> {
         let loss = it.next().unwrap().item()?;
         let acc = it.next().unwrap().item()?;
         self.state.step += 1;
+        self.obs.steps.inc();
 
         self.after_step(step, loss, acc)?;
         Ok((loss, acc))
@@ -375,15 +427,20 @@ impl<'a> Trainer<'a> {
             let need_view = self.qramp.is_some()
                 || self.freeze.is_some()
                 || self.cfg.metrics.rate_window > 0;
+            let t_mirror = std::time::Instant::now();
             self.mirror_wq_inner(need_view);
+            self.obs.mirror_ms.add(t_mirror.elapsed().as_secs_f64() * 1e3);
         }
+        let t_ctrl = std::time::Instant::now();
         if let Some(q) = &mut self.qramp {
             q.observe(step, self.state.qw(), &self.wq_buf);
         }
         if let Some(f) = &mut self.freeze {
             f.observe(step, self.state.qw(), &self.wq_buf);
         }
+        self.obs.controllers_ms.add(t_ctrl.elapsed().as_secs_f64() * 1e3);
 
+        let t_metrics = std::time::Instant::now();
         let m = self.cfg.metrics.clone();
         if m.rate_window > 0 {
             self.rate_w.observe(self.state.qw());
@@ -394,6 +451,9 @@ impl<'a> Trainer<'a> {
             }
             if (step + 1) % m.rate_window == 0 {
                 let ry = if self.rate_y.steps() > 0 { self.rate_y.rate() } else { f64::NAN };
+                self.obs.rate_w.set(self.rate_w.rate());
+                self.obs.rate_wq.set(self.rate_wq.rate());
+                self.obs.rate_y.set(ry);
                 self.rec
                     .rate_series
                     .push((step + 1, self.rate_w.rate(), self.rate_wq.rate(), ry));
@@ -421,6 +481,10 @@ impl<'a> Trainer<'a> {
                     }
                     if t.steps() >= m.osc_window {
                         let count = t.oscillating_count(m.rw_threshold);
+                        self.obs.osc_flips.set(count as f64);
+                        self.obs
+                            .osc_ratio
+                            .set(count as f64 / self.wq_buf.len().max(1) as f64);
                         self.rec.osc_series.push((step + 1, count, m.osc_window));
                         t.reset_window();
                     }
@@ -430,8 +494,11 @@ impl<'a> Trainer<'a> {
         if m.conf_every > 0 && (step + 1) % m.conf_every == 0 {
             self.conf_snapshot(step + 1);
         }
+        self.obs.metrics_ms.add(t_metrics.elapsed().as_secs_f64() * 1e3);
         if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
+            let t_eval = std::time::Instant::now();
             let ev = self.eval()?;
+            self.obs.eval_ms.add(t_eval.elapsed().as_secs_f64() * 1e3);
             self.rec.evals.push((step + 1, ev.acc_pct, ev.mean_loss));
         }
         Ok(())

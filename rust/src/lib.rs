@@ -39,6 +39,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod metrics;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

@@ -18,6 +18,7 @@ subcommands:
   train          train one configuration
   eval           evaluate a checkpoint
   serve          packed-native inference over a checkpoint (no XLA)
+  obs-validate   validate a --trace-out JSONL / --metrics-out snapshot
   exp <id>       run an experiment harness (table1..table7, fig2..fig6, all)
   list-variants  print all known method variants
   help           this text
@@ -42,6 +43,8 @@ train options:
   --ckpt-packed     write a TJCKPT02 checkpoint carrying the packed
                     4-bit quant mirror (input of `serve`/`eval --packed`)
   --metrics LEVEL   off | standard | full (default off)
+  --metrics-out PATH  write the trainer's metrics-registry snapshot
+                    (phase timings, oscillation gauges) as json
 
 eval options:
   --variant NAME    method variant artifact to evaluate with
@@ -75,12 +78,26 @@ serve options:
                     whole run deterministic for a given seed
   --service-ms F    virtual-pace per-image service time (default 1.0)
   --bench-out PATH  BENCH json file (default results/BENCH_<pr>.json)
-  --bench-pr N      PR number stamped into the BENCH file (default 6)
+  --bench-pr N      PR number stamped into the BENCH file (default 7)
   --gate-tol F      regression tolerance vs the previous BENCH_*.json
                     (default 0.10 = 10%)
   --strict-gate     exit nonzero when a regression is flagged
   --eval-samples N  also report accuracy on N val samples
                     (default 256; checkpoint mode only)
+  --trace-out PATH  write a Chrome trace-event JSONL of every request's
+                    admit -> queued -> batched -> shard-forward ->
+                    gather -> redeemed lifecycle; byte-identical across
+                    runs under --load-test --pace virtual
+  --metrics-out PATH  write the final metrics-registry snapshot json
+  --metrics-every N print a METRICS {...} snapshot line every N batches
+  --metrics-addr A  serve the live registry as text over TCP on A
+                    (e.g. 127.0.0.1:9464; port 0 picks a free one)
+
+obs-validate options:
+  --trace PATH      check a --trace-out JSONL: parseable lines, trace
+                    schema, nonnegative ts/dur; reprints the digest
+  --snapshot PATH   check a --metrics-out snapshot carries the stable
+                    scheduler/fleet/kernel/latency metric names
 
 exp options:
   --quick           reduced steps/eval for smoke runs
@@ -129,6 +146,7 @@ fn run() -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "obs-validate" => cmd_obs_validate(&args),
         "exp" => cmd_exp(&args),
         other => bail!("unknown subcommand {other:?}\n{USAGE}"),
     }
@@ -189,6 +207,16 @@ fn cmd_train(args: &Args) -> Result<()> {
             tr.state.save(&p)?;
             loginfo!("checkpoint saved to {}", p.display());
         }
+    }
+    if let Some(p) = args.get("metrics-out") {
+        let path = std::path::Path::new(p);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, tr.registry().snapshot_json().to_string() + "\n")?;
+        loginfo!("trainer metrics snapshot written to {p}");
     }
     Ok(())
 }
@@ -373,7 +401,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None
     };
 
+    let load_test = args.has_flag("load-test");
+    let pace_name = args.get_or("pace", "real").to_string();
+    let rate_rps = args.get_f32("rate", 64.0)? as f64;
+
     let mut fleet = ServeFleet::new(vit, scfg)?;
+    // Observability wiring: a virtual-pace load test is fully
+    // deterministic, so its trace must replay byte-identically — the
+    // sink substitutes simulated durations for measured ones.
+    let deterministic = load_test && pace_name == "virtual";
+    if let Some(p) = args.get("trace-out") {
+        fleet.set_trace(tetrajet::obs::TraceSink::to_file(
+            std::path::Path::new(p),
+            deterministic,
+        )?);
+        loginfo!("tracing to {p} (deterministic={deterministic})");
+    }
+    if let Some(every) = args.get("metrics-every") {
+        fleet.set_snapshot_every(every.parse::<u64>()?);
+    }
+    if let Some(addr) = args.get("metrics-addr") {
+        let bound = tetrajet::obs::spawn_metrics_endpoint(addr, fleet.registry().clone())?;
+        loginfo!("metrics endpoint listening on {bound}");
+    }
     loginfo!(
         "serving {tag} (step {step}): {} blocks, dim {}, {} engines x {} workers, \
          micro-batch {}, queue depth {}, {:.1} KiB packed shards ({:.1}x below the f32 mirror)",
@@ -416,9 +466,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     };
 
-    let load_test = args.has_flag("load-test");
-    let pace_name = args.get_or("pace", "real").to_string();
-    let rate_rps = args.get_f32("rate", 64.0)? as f64;
     let report = if load_test {
         let pace = match pace_name.as_str() {
             "real" => Pace::Real,
@@ -522,12 +569,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let entry = obj(fields);
         println!("BENCH {}", entry.to_string());
 
-        let pr = args.get_u64("bench-pr", 6)?;
+        let pr = args.get_u64("bench-pr", 7)?;
         let default_out = format!("results/BENCH_{pr}.json");
         let out = std::path::PathBuf::from(args.get_or("bench-out", &default_out));
         let dir = out.parent().map(std::path::Path::to_path_buf).unwrap_or_default();
         let prev = tetrajet::util::benchio::find_previous(&dir, pr);
-        tetrajet::util::benchio::write_bench(&out, pr, vec![entry.clone()])?;
+        tetrajet::util::benchio::merge_bench(&out, pr, vec![entry.clone()])?;
         loginfo!("BENCH json written to {}", out.display());
         if let Some((ppath, pdoc)) = prev {
             let cur = obj(vec![("pr", num(pr as f64)), ("entries", Json::Arr(vec![entry]))]);
@@ -546,10 +593,119 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
 
+    if let Some(mut sink) = fleet.take_trace() {
+        let events = sink.events();
+        let digest = sink.digest();
+        sink.finish()?;
+        println!("TRACE events={events} digest={digest}");
+    }
+    if let Some(p) = args.get("metrics-out") {
+        let path = std::path::Path::new(p);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, fleet.registry().snapshot_json().to_string() + "\n")?;
+        loginfo!("metrics snapshot written to {p}");
+    }
+
     if let (Some(engine), Some((ds, _, batch))) = (eval_engine, data) {
         let evalset = tetrajet::data::EvalSet::new(ds, batch, eval_samples);
         let ev = engine.eval(&evalset);
         print_eval(&ev, step, "serve");
+    }
+    Ok(())
+}
+
+/// Validate observability artifacts written by `serve`: a Chrome
+/// trace-event JSONL (`--trace`) and/or a metrics snapshot json
+/// (`--snapshot`). Exits nonzero on any schema violation, which is
+/// what `make obs-smoke` gates on.
+fn cmd_obs_validate(args: &Args) -> Result<()> {
+    use tetrajet::util::json::Json;
+
+    let mut checked = false;
+    if let Some(p) = args.get("trace") {
+        checked = true;
+        let text = std::fs::read_to_string(p)?;
+        let mut digest = tetrajet::obs::TraceDigest::new();
+        let mut events = 0usize;
+        for (lineno, line) in text.lines().enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let ev = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("{p}:{}: bad json: {e}", lineno + 1))?;
+            let ph = ev
+                .get("ph")
+                .ok_or_else(|| anyhow::anyhow!("{p}:{}: missing ph", lineno + 1))?
+                .as_str()?
+                .to_string();
+            if ph != "X" && ph != "i" {
+                bail!("{p}:{}: unknown phase {ph:?}", lineno + 1);
+            }
+            for key in ["name", "ts", "pid", "tid"] {
+                if ev.get(key).is_none() {
+                    bail!("{p}:{}: missing {key}", lineno + 1);
+                }
+            }
+            if ev.get("ts").unwrap().as_f64()? < 0.0 {
+                bail!("{p}:{}: negative ts", lineno + 1);
+            }
+            if ph == "X" {
+                let dur = ev
+                    .get("dur")
+                    .ok_or_else(|| anyhow::anyhow!("{p}:{}: X event missing dur", lineno + 1))?
+                    .as_f64()?;
+                if dur < 0.0 {
+                    bail!("{p}:{}: negative dur", lineno + 1);
+                }
+            }
+            digest.update(line.as_bytes());
+            digest.update(b"\n");
+            events += 1;
+        }
+        if events == 0 {
+            bail!("{p}: trace contains no events");
+        }
+        println!("obs-validate[trace]: {events} events, digest {}", digest.hex());
+    }
+    if let Some(p) = args.get("snapshot") {
+        checked = true;
+        let doc = Json::parse(&std::fs::read_to_string(p)?)?;
+        for section in ["counters", "gauges", "hists", "series"] {
+            if doc.get(section).is_none() {
+                bail!("{p}: snapshot missing section {section:?}");
+            }
+        }
+        let require = |section: &str, name: &str| -> Result<()> {
+            let sec = doc.get(section).unwrap();
+            if sec.get(name).is_none() {
+                bail!("{p}: snapshot missing {section}.{name}");
+            }
+            Ok(())
+        };
+        for name in [
+            "sched.admits",
+            "sched.rejects",
+            "sched.expiries",
+            "serve.images",
+            "serve.batches",
+            "serve.busy_ms",
+            "fleet.steps",
+            "fleet.gather_wait_ms",
+            "kernel.qkv.calls",
+        ] {
+            require("counters", name)?;
+        }
+        require("gauges", "sched.queue_depth")?;
+        require("hists", "fleet.batch_images")?;
+        require("series", "serve.latency_ms")?;
+        println!("obs-validate[snapshot]: schema ok ({p})");
+    }
+    if !checked {
+        bail!("obs-validate needs --trace PATH and/or --snapshot PATH");
     }
     Ok(())
 }

@@ -1,0 +1,74 @@
+//! Plain-TCP metrics exposition (`serve --metrics-addr HOST:PORT`).
+//!
+//! std::net only: a detached acceptor thread answers every connection
+//! with an HTTP/1.0 `200 text/plain` whose body is
+//! [`MetricsRegistry::text_exposition`] at the moment of the request.
+//! The thread holds a clone of the registry (shared `Arc`), so it sees
+//! live values without any coordination with the serving loop; it runs
+//! until the process exits, which matches the CLI's lifetime.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener};
+
+use anyhow::{Context, Result};
+
+use super::metrics::MetricsRegistry;
+
+/// Bind `addr` (e.g. `127.0.0.1:9200`, port 0 for ephemeral) and serve
+/// `reg`'s text exposition to every connection on a background thread.
+/// Returns the bound address (useful with port 0).
+pub fn spawn_metrics_endpoint(addr: &str, reg: MetricsRegistry) -> Result<SocketAddr> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding metrics endpoint {addr}"))?;
+    let bound = listener.local_addr().context("resolving metrics endpoint addr")?;
+    std::thread::Builder::new()
+        .name("tj-metrics".to_string())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut stream) = conn else { continue };
+                // Drain whatever request line arrives (best effort —
+                // we answer any request the same way).
+                let mut buf = [0u8; 1024];
+                let _ = stream.read(&mut buf);
+                let body = reg.text_exposition();
+                let resp = format!(
+                    "HTTP/1.0 200 OK\r\nContent-Type: text/plain; charset=utf-8\r\n\
+                     Content-Length: {}\r\n\r\n{}",
+                    body.len(),
+                    body
+                );
+                let _ = stream.write_all(resp.as_bytes());
+            }
+        })
+        .context("spawning tj-metrics thread")?;
+    Ok(bound)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+
+    #[test]
+    fn endpoint_serves_live_registry_text() {
+        let reg = MetricsRegistry::new();
+        reg.counter("serve.images").add(42);
+        let addr = spawn_metrics_endpoint("127.0.0.1:0", reg.clone()).unwrap();
+
+        let fetch = || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+            let mut text = String::new();
+            stream.read_to_string(&mut text).unwrap();
+            text
+        };
+        let first = fetch();
+        assert!(first.starts_with("HTTP/1.0 200 OK"), "{first}");
+        assert!(first.contains("serve.images 42"), "{first}");
+
+        // The endpoint observes the live registry, not a snapshot.
+        reg.counter("serve.images").add(8);
+        assert!(fetch().contains("serve.images 50"));
+    }
+}

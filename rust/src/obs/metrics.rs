@@ -1,0 +1,510 @@
+//! Global-free metrics registry: named counters, gauges, fixed-bucket
+//! histograms and raw-sample series, handed out as cheap atomic
+//! handles.
+//!
+//! There are deliberately no statics: a [`MetricsRegistry`] is owned by
+//! whoever runs the loop being measured (a `ServeFleet`, a
+//! `ServeSession`, a `Trainer`) and handles are threaded to the code
+//! that increments them. Registration is idempotent by name, so a
+//! summary view ([`crate::serve::LatencySummary::from_registry`]) can
+//! re-resolve the same handles instead of keeping a parallel
+//! accumulator. All handles are `Clone + Send + Sync` (an `Arc` around
+//! atomics) and safe to bump from engine worker threads.
+//!
+//! Snapshots come in two stable shapes: [`MetricsRegistry::snapshot_json`]
+//! (one JSON object with `counters` / `gauges` / `hists` / `series`
+//! sections, names sorted) and [`MetricsRegistry::text_exposition`]
+//! (one `name value` line per scalar, Prometheus-flavoured histogram
+//! lines), served over TCP by [`crate::obs::spawn_metrics_endpoint`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::{num, Json};
+use crate::util::stats::{mean, percentile};
+
+/// Monotonic integer counter (events, calls, items).
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Monotonic float accumulator (milliseconds of busy/wait time).
+/// Adds via a compare-exchange loop on the f64 bit pattern, so it is
+/// exact (identical to sequential `+=`) whenever writers don't race.
+#[derive(Debug, Clone)]
+pub struct FCounter(Arc<AtomicU64>);
+
+impl Default for FCounter {
+    fn default() -> FCounter {
+        FCounter(Arc::new(AtomicU64::new(0.0f64.to_bits())))
+    }
+}
+
+impl FCounter {
+    pub fn add(&self, v: f64) {
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+            Some((f64::from_bits(bits) + v).to_bits())
+        });
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Last-value gauge with min/max update modes. Starts *unset* (NaN,
+/// serialized as `null`), so "no sample yet" is distinguishable from 0.
+#[derive(Debug, Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    fn unset() -> Gauge {
+        Gauge(Arc::new(AtomicU64::new(f64::NAN.to_bits())))
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Keep the minimum of the current value and `v` (NaN = unset).
+    pub fn min_of(&self, v: f64) {
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+            let cur = f64::from_bits(bits);
+            Some(if cur.is_nan() || v < cur { v } else { cur }.to_bits())
+        });
+    }
+
+    /// Keep the maximum of the current value and `v` (NaN = unset).
+    pub fn max_of(&self, v: f64) {
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+            let cur = f64::from_bits(bits);
+            Some(if cur.is_nan() || v > cur { v } else { cur }.to_bits())
+        });
+    }
+
+    /// Raw value; NaN while unset.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// `None` while unset.
+    pub fn get_opt(&self) -> Option<f64> {
+        let v = self.get();
+        (!v.is_nan()).then_some(v)
+    }
+}
+
+/// Fixed-bucket histogram: `bounds` are inclusive upper bucket edges,
+/// plus one implicit overflow bucket (`+Inf`).
+#[derive(Debug, Clone)]
+pub struct Histo {
+    bounds: Arc<Vec<f64>>,
+    counts: Arc<Vec<AtomicU64>>,
+    sum: FCounter,
+}
+
+impl Histo {
+    fn new(bounds: &[f64]) -> Histo {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must strictly increase"
+        );
+        Histo {
+            bounds: Arc::new(bounds.to_vec()),
+            counts: Arc::new((0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect()),
+            sum: FCounter::default(),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum.add(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum.get()
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket counts, overflow bucket last.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("le".to_string(), Json::Arr(self.bounds.iter().map(|&b| num(b)).collect())),
+            (
+                "counts".to_string(),
+                Json::Arr(self.bucket_counts().iter().map(|&c| num(c as f64)).collect()),
+            ),
+            ("count".to_string(), num(self.count() as f64)),
+            ("sum".to_string(), num(self.sum())),
+        ])
+    }
+}
+
+/// Raw-sample store for exact percentiles (latency distributions).
+/// Unbounded by design — serving runs are finite; long-running loops
+/// should prefer [`Histo`].
+#[derive(Debug, Clone, Default)]
+pub struct Series(Arc<Mutex<Vec<f64>>>);
+
+impl Series {
+    pub fn record(&self, v: f64) {
+        self.0.lock().unwrap().push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn values(&self) -> Vec<f64> {
+        self.0.lock().unwrap().clone()
+    }
+
+    fn to_json(&self) -> Json {
+        let xs = self.values();
+        let max = xs.iter().fold(0.0f64, |a, &b| a.max(b));
+        Json::Obj(vec![
+            ("count".to_string(), num(xs.len() as f64)),
+            ("mean".to_string(), num(mean(&xs))),
+            ("p50".to_string(), num(percentile(&xs, 50.0))),
+            ("p95".to_string(), num(percentile(&xs, 95.0))),
+            ("p99".to_string(), num(percentile(&xs, 99.0))),
+            ("max".to_string(), num(max)),
+        ])
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Counter),
+    FCounter(FCounter),
+    Gauge(Gauge),
+    Histo(Histo),
+    Series(Series),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::FCounter(_) => "fcounter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histo(_) => "histogram",
+            Metric::Series(_) => "series",
+        }
+    }
+}
+
+/// Named metric store. Cloning shares the underlying metrics (it is an
+/// `Arc`), which is how the TCP exposition thread observes a live
+/// registry owned by a serving loop.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    inner: Arc<Mutex<Vec<(String, Metric)>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    fn get_or_insert(&self, name: &str, make: impl FnOnce() -> Metric) -> Metric {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, m)) = inner.iter().find(|(n, _)| n == name) {
+            return m.clone();
+        }
+        let m = make();
+        inner.push((name.to_string(), m.clone()));
+        m
+    }
+
+    /// Register (or re-resolve) a counter named `name`.
+    pub fn counter(&self, name: &str) -> Counter {
+        match self.get_or_insert(name, || Metric::Counter(Counter::default())) {
+            Metric::Counter(c) => c,
+            m => panic!("metric {name:?} is a {}, not a counter", m.kind()),
+        }
+    }
+
+    /// Register (or re-resolve) a float counter named `name`.
+    pub fn fcounter(&self, name: &str) -> FCounter {
+        match self.get_or_insert(name, || Metric::FCounter(FCounter::default())) {
+            Metric::FCounter(c) => c,
+            m => panic!("metric {name:?} is a {}, not an fcounter", m.kind()),
+        }
+    }
+
+    /// Register (or re-resolve) a gauge named `name` (starts unset).
+    pub fn gauge(&self, name: &str) -> Gauge {
+        match self.get_or_insert(name, || Metric::Gauge(Gauge::unset())) {
+            Metric::Gauge(g) => g,
+            m => panic!("metric {name:?} is a {}, not a gauge", m.kind()),
+        }
+    }
+
+    /// Register (or re-resolve) a fixed-bucket histogram named `name`.
+    /// `bounds` are ignored when the name already exists.
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Histo {
+        match self.get_or_insert(name, || Metric::Histo(Histo::new(bounds))) {
+            Metric::Histo(h) => h,
+            m => panic!("metric {name:?} is a {}, not a histogram", m.kind()),
+        }
+    }
+
+    /// Register (or re-resolve) a raw-sample series named `name`.
+    pub fn series(&self, name: &str) -> Series {
+        match self.get_or_insert(name, || Metric::Series(Series::default())) {
+            Metric::Series(s) => s,
+            m => panic!("metric {name:?} is a {}, not a series", m.kind()),
+        }
+    }
+
+    /// Sorted `(name, metric)` snapshot of the registration table.
+    fn sorted(&self) -> Vec<(String, Metric)> {
+        let mut v = self.inner.lock().unwrap().clone();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// One JSON object with stable sections: `counters` (integer and
+    /// float counters), `gauges`, `hists`, `series`. Names are sorted,
+    /// unset gauges serialize as `null`.
+    pub fn snapshot_json(&self) -> Json {
+        let mut counters = Vec::new();
+        let mut gauges = Vec::new();
+        let mut hists = Vec::new();
+        let mut series = Vec::new();
+        for (name, m) in self.sorted() {
+            match m {
+                Metric::Counter(c) => counters.push((name, num(c.get() as f64))),
+                Metric::FCounter(c) => counters.push((name, num(c.get()))),
+                Metric::Gauge(g) => gauges.push((name, num(g.get()))),
+                Metric::Histo(h) => hists.push((name, h.to_json())),
+                Metric::Series(s) => series.push((name, s.to_json())),
+            }
+        }
+        Json::Obj(vec![
+            ("counters".to_string(), Json::Obj(counters)),
+            ("gauges".to_string(), Json::Obj(gauges)),
+            ("hists".to_string(), Json::Obj(hists)),
+            ("series".to_string(), Json::Obj(series)),
+        ])
+    }
+
+    /// Plain-text exposition: `name value` per scalar, histogram bucket
+    /// lines as `name_bucket{le="B"} count` plus `_count`/`_sum`, series
+    /// as `_count`/`_p50`/`_p95`/`_p99`/`_max`.
+    pub fn text_exposition(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, m) in self.sorted() {
+            match m {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "{name} {}", c.get());
+                }
+                Metric::FCounter(c) => {
+                    let _ = writeln!(out, "{name} {}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "{name} {}", g.get());
+                }
+                Metric::Histo(h) => {
+                    let counts = h.bucket_counts();
+                    let mut cum = 0u64;
+                    for (i, &b) in h.bounds().iter().enumerate() {
+                        cum += counts[i];
+                        let _ = writeln!(out, "{name}_bucket{{le=\"{b}\"}} {cum}");
+                    }
+                    cum += counts[counts.len() - 1];
+                    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+                    let _ = writeln!(out, "{name}_count {}", h.count());
+                    let _ = writeln!(out, "{name}_sum {}", h.sum());
+                }
+                Metric::Series(s) => {
+                    let xs = s.values();
+                    let _ = writeln!(out, "{name}_count {}", xs.len());
+                    let _ = writeln!(out, "{name}_p50 {}", percentile(&xs, 50.0));
+                    let _ = writeln!(out, "{name}_p95 {}", percentile(&xs, 95.0));
+                    let _ = writeln!(out, "{name}_p99 {}", percentile(&xs, 99.0));
+                    let _ =
+                        writeln!(out, "{name}_max {}", xs.iter().fold(0.0f64, |a, &b| a.max(b)));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The four quantized linear layer types of a ViT block, in store
+/// order (the [`crate::serve::LinearExec`] `store` index).
+pub const LAYER_NAMES: [&str; 4] = ["qkv", "proj", "fc1", "fc2"];
+
+/// Per-layer fused-GEMM instrumentation handles: call counts and
+/// cumulative forward milliseconds, one pair per quantized layer type.
+#[derive(Debug, Clone)]
+pub struct KernelMetrics {
+    pub calls: [Counter; 4],
+    pub ms: [FCounter; 4],
+}
+
+impl KernelMetrics {
+    /// Register under `kernel.{qkv,proj,fc1,fc2}.{calls,ms}`.
+    pub fn in_registry(reg: &MetricsRegistry) -> KernelMetrics {
+        KernelMetrics {
+            calls: std::array::from_fn(|i| {
+                reg.counter(&format!("kernel.{}.calls", LAYER_NAMES[i]))
+            }),
+            ms: std::array::from_fn(|i| reg.fcounter(&format!("kernel.{}.ms", LAYER_NAMES[i]))),
+        }
+    }
+
+    /// Handles not attached to any shared registry (no-op-ish default).
+    pub fn detached() -> KernelMetrics {
+        KernelMetrics::in_registry(&MetricsRegistry::new())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_and_idempotent_registration() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("a.calls");
+        c.inc();
+        c.add(4);
+        // Same name resolves to the same underlying cell.
+        assert_eq!(reg.counter("a.calls").get(), 5);
+
+        let f = reg.fcounter("a.ms");
+        f.add(1.5);
+        f.add(2.25);
+        assert_eq!(reg.fcounter("a.ms").get(), 3.75);
+
+        let g = reg.gauge("a.depth");
+        assert!(g.get_opt().is_none(), "gauges start unset");
+        g.set(7.0);
+        assert_eq!(reg.gauge("a.depth").get_opt(), Some(7.0));
+        g.min_of(3.0);
+        g.min_of(5.0);
+        assert_eq!(g.get(), 3.0);
+        g.max_of(9.0);
+        g.max_of(4.0);
+        assert_eq!(g.get(), 9.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a gauge")]
+    fn kind_mismatch_panics() {
+        let reg = MetricsRegistry::new();
+        reg.counter("x");
+        reg.gauge("x");
+    }
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("batch", &[1.0, 2.0, 4.0]);
+        for v in [0.5, 1.0, 1.5, 4.0, 100.0] {
+            h.observe(v);
+        }
+        // le=1: {0.5, 1.0}; le=2: {1.5}; le=4: {4.0}; +Inf: {100.0}.
+        assert_eq!(h.bucket_counts(), vec![2, 1, 1, 1]);
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 107.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn series_percentiles_and_snapshot_schema() {
+        let reg = MetricsRegistry::new();
+        reg.counter("n.calls").add(3);
+        reg.gauge("n.depth").set(2.0);
+        reg.histogram("n.hist", &[1.0]).observe(0.5);
+        let s = reg.series("n.lat");
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.record(v);
+        }
+        let j = reg.snapshot_json();
+        for sect in ["counters", "gauges", "hists", "series"] {
+            assert!(j.get(sect).is_some(), "snapshot missing section {sect}");
+        }
+        assert_eq!(j.get("counters").unwrap().get("n.calls").unwrap().as_i64().unwrap(), 3);
+        let lat = j.get("series").unwrap().get("n.lat").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_i64().unwrap(), 4);
+        assert!((lat.get("p50").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-12);
+        // Snapshot is parseable back (it is how obs-validate reads it).
+        let rt = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(rt.to_string(), j.to_string());
+    }
+
+    #[test]
+    fn text_exposition_lists_scalars_and_buckets() {
+        let reg = MetricsRegistry::new();
+        reg.counter("serve.images").add(12);
+        let h = reg.histogram("fleet.batch_images", &[1.0, 8.0]);
+        h.observe(1.0);
+        h.observe(6.0);
+        let text = reg.text_exposition();
+        assert!(text.contains("serve.images 12"), "{text}");
+        assert!(text.contains("fleet.batch_images_bucket{le=\"1\"} 1"), "{text}");
+        assert!(text.contains("fleet.batch_images_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("fleet.batch_images_count 2"), "{text}");
+    }
+
+    #[test]
+    fn handles_are_send_sync_across_threads() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("t.calls");
+        let f = reg.fcounter("t.ms");
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let (c, f) = (c.clone(), f.clone());
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                        f.add(0.5);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+        assert!((f.get() - 2000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,76 @@
+//! Observability: global-free metrics, deterministic request tracing,
+//! and snapshot/exposition surfaces.
+//!
+//! Three pieces, all std-only:
+//!
+//! - [`metrics`] — a [`MetricsRegistry`] of named counters / gauges /
+//!   fixed-bucket histograms / raw series, handed out as `Arc`-backed
+//!   handles and threaded *by handle* through the scheduler, fleet,
+//!   kernel layer and trainer. No global state: the registry lives
+//!   with the loop it measures, and [`crate::serve::LatencySummary::from_registry`]
+//!   derives the end-of-run summary from the same cells the loop
+//!   incremented.
+//! - [`trace`] — a [`TraceSink`] emitting Chrome trace-event JSONL
+//!   (load into `chrome://tracing` / Perfetto). Every timestamp comes
+//!   from the caller's injected clock, so a `--pace virtual` load test
+//!   replays to a byte-identical file; the FNV-1a [`TraceDigest`] over
+//!   the emitted bytes is the determinism witness asserted in tests.
+//! - [`export`] — [`spawn_metrics_endpoint`], a std::net text
+//!   exposition endpoint for `serve --metrics-addr`, plus the periodic
+//!   one-line `METRICS {...}` snapshots the fleet loop prints.
+//!
+//! Request lifecycle as traced (tid 0 = scheduler/request events,
+//! tid 1 = fleet execution):
+//!
+//! ```text
+//! admit (i) ── queued (X: arrival→batch formation) ── batched (i)
+//!          └─ shard-forward (X) ── gather (X) ── redeemed (i)
+//! ```
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+pub use export::spawn_metrics_endpoint;
+pub use metrics::{
+    Counter, FCounter, Gauge, Histo, KernelMetrics, LAYER_NAMES, MetricsRegistry, Series,
+};
+pub use trace::{TraceDigest, TraceSink};
+
+/// Log verbosity, ordered: `Quiet` < `Warn` < `Info`. Routed through
+/// `util::log` and settable via the `TJ_LOG` environment variable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Silence everything, warnings included.
+    Quiet = 0,
+    /// Warnings only.
+    Warn = 1,
+    /// Warnings and info lines (default).
+    Info = 2,
+}
+
+impl Level {
+    /// Parse a `TJ_LOG` value; unknown strings yield `None`.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "quiet" | "off" | "silent" => Some(Level::Quiet),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" | "on" => Some(Level::Info),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("quiet"), Some(Level::Quiet));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse(" info "), Some(Level::Info));
+        assert_eq!(Level::parse("debug"), None);
+        assert!(Level::Quiet < Level::Warn && Level::Warn < Level::Info);
+    }
+}

@@ -1,0 +1,240 @@
+//! Chrome trace-event JSONL sink with a running content digest.
+//!
+//! One event per line (not the array form), so a crashed run still
+//! leaves a loadable prefix and `obs-validate` can stream it. Each
+//! line is a Chrome `trace_event`:
+//!
+//! ```text
+//! {"name":"queued","ph":"X","ts":1234,"dur":500,"pid":1,"tid":0,"args":{...}}
+//! ```
+//!
+//! `ph` is `"X"` (complete span with `dur`) or `"i"` (instant);
+//! timestamps are microseconds (the emitting code passes milliseconds
+//! from its injected clock and they are scaled here). Nothing in this
+//! module reads a wall clock: determinism is entirely the caller's —
+//! under `--pace virtual` every ts/dur is derived from the simulated
+//! clock, so a fixed (seed, config) run produces byte-identical lines.
+//!
+//! The sink folds every emitted byte (newline included) into an
+//! FNV-1a 64-bit [`TraceDigest`], which is what the determinism tests
+//! and `serve --trace-out` assert/report on.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{num, s, Json};
+
+/// Incremental FNV-1a 64-bit hash over emitted bytes.
+#[derive(Debug, Clone)]
+pub struct TraceDigest(u64);
+
+impl Default for TraceDigest {
+    fn default() -> TraceDigest {
+        TraceDigest(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl TraceDigest {
+    pub fn new() -> TraceDigest {
+        TraceDigest::default()
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    /// 16-hex-digit digest of everything folded in so far.
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+/// Writes trace-event lines to an optional sink while hashing them.
+pub struct TraceSink {
+    out: Option<Box<dyn Write + Send>>,
+    deterministic: bool,
+    digest: TraceDigest,
+    events: u64,
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceSink")
+            .field("deterministic", &self.deterministic)
+            .field("events", &self.events)
+            .field("digest", &self.digest.hex())
+            .finish()
+    }
+}
+
+impl TraceSink {
+    /// Buffered file sink. `deterministic` records whether the feeding
+    /// clock is virtual — emitters consult it to substitute simulated
+    /// durations for measured ones.
+    pub fn to_file(path: &Path, deterministic: bool) -> Result<TraceSink> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        Ok(TraceSink {
+            out: Some(Box::new(std::io::BufWriter::new(f))),
+            deterministic,
+            digest: TraceDigest::new(),
+            events: 0,
+        })
+    }
+
+    /// Digest-only sink (tests): events are hashed but written nowhere.
+    pub fn in_memory(deterministic: bool) -> TraceSink {
+        TraceSink { out: None, deterministic, digest: TraceDigest::new(), events: 0 }
+    }
+
+    /// Whether emitters should keep measured wall durations out of the
+    /// trace (virtual pace) to preserve byte-identical replays.
+    pub fn deterministic(&self) -> bool {
+        self.deterministic
+    }
+
+    /// Complete span (`ph:"X"`): starts `ts_ms`, lasts `dur_ms`.
+    pub fn duration(
+        &mut self,
+        name: &str,
+        ts_ms: f64,
+        dur_ms: f64,
+        tid: u64,
+        args: Vec<(&str, Json)>,
+    ) {
+        self.emit(name, "X", ts_ms, Some(dur_ms), tid, args);
+    }
+
+    /// Instant event (`ph:"i"`) at `ts_ms`.
+    pub fn instant(&mut self, name: &str, ts_ms: f64, tid: u64, args: Vec<(&str, Json)>) {
+        self.emit(name, "i", ts_ms, None, tid, args);
+    }
+
+    fn emit(
+        &mut self,
+        name: &str,
+        ph: &str,
+        ts_ms: f64,
+        dur_ms: Option<f64>,
+        tid: u64,
+        args: Vec<(&str, Json)>,
+    ) {
+        let mut fields = vec![
+            ("name".to_string(), s(name)),
+            ("ph".to_string(), s(ph)),
+            ("ts".to_string(), num(ts_ms * 1000.0)),
+        ];
+        if let Some(d) = dur_ms {
+            fields.push(("dur".to_string(), num(d * 1000.0)));
+        }
+        fields.push(("pid".to_string(), num(1.0)));
+        fields.push(("tid".to_string(), num(tid as f64)));
+        if !args.is_empty() {
+            let a = args.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+            fields.push(("args".to_string(), Json::Obj(a)));
+        }
+        let line = Json::Obj(fields).to_string();
+        self.digest.update(line.as_bytes());
+        self.digest.update(b"\n");
+        self.events += 1;
+        if let Some(out) = &mut self.out {
+            let _ = writeln!(out, "{line}");
+        }
+    }
+
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    pub fn digest(&self) -> String {
+        self.digest.hex()
+    }
+
+    /// Flush the underlying writer (call before reading the file).
+    pub fn finish(&mut self) -> Result<()> {
+        if let Some(out) = &mut self.out {
+            out.flush().context("flushing trace sink")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_reference_vectors() {
+        // Standard FNV-1a 64 vectors.
+        let mut d = TraceDigest::new();
+        assert_eq!(d.hex(), "cbf29ce484222325"); // empty
+        d.update(b"a");
+        assert_eq!(d.hex(), "af63dc4c8601ec8c");
+        let mut d2 = TraceDigest::new();
+        d2.update(b"foobar");
+        assert_eq!(d2.hex(), "85944171f73967e8");
+    }
+
+    #[test]
+    fn identical_event_streams_share_a_digest() {
+        let run = || {
+            let mut t = TraceSink::in_memory(true);
+            t.instant("admit", 1.0, 0, vec![("id", num(1.0))]);
+            t.duration("queued", 1.0, 2.5, 0, vec![("id", num(1.0)), ("n", num(4.0))]);
+            t.duration("shard-forward", 3.5, 1.0, 1, vec![("batch", num(0.0))]);
+            (t.digest(), t.events())
+        };
+        let (d1, e1) = run();
+        let (d2, e2) = run();
+        assert_eq!(d1, d2);
+        assert_eq!(e1, 2 + 1);
+        assert_eq!(e2, 3);
+        // Any perturbation moves the digest.
+        let mut t = TraceSink::in_memory(true);
+        t.instant("admit", 1.0, 0, vec![("id", num(2.0))]);
+        t.duration("queued", 1.0, 2.5, 0, vec![("id", num(1.0)), ("n", num(4.0))]);
+        t.duration("shard-forward", 3.5, 1.0, 1, vec![("batch", num(0.0))]);
+        assert_ne!(t.digest(), d1);
+    }
+
+    #[test]
+    fn file_sink_writes_parseable_jsonl_matching_digest() {
+        let path = std::env::temp_dir()
+            .join(format!("tj-trace-{}.jsonl", std::process::id()));
+        let mut t = TraceSink::to_file(&path, true).unwrap();
+        t.instant("admit", 0.0, 0, vec![]);
+        t.duration("queued", 0.0, 1.5, 0, vec![("id", num(7.0))]);
+        let digest = t.digest();
+        t.finish().unwrap();
+        drop(t);
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut redigest = TraceDigest::new();
+        let mut n = 0;
+        for line in text.lines() {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("name").is_some() && j.get("ph").is_some());
+            assert!(j.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+            redigest.update(line.as_bytes());
+            redigest.update(b"\n");
+            n += 1;
+        }
+        assert_eq!(n, 2);
+        assert_eq!(redigest.hex(), digest, "file bytes must reproduce the sink digest");
+        // ts is microseconds: 1.5 ms span -> dur 1500.
+        let span = Json::parse(text.lines().nth(1).unwrap()).unwrap();
+        assert_eq!(span.get("dur").unwrap().as_i64().unwrap(), 1500);
+        let _ = std::fs::remove_file(&path);
+    }
+}

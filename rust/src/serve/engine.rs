@@ -7,6 +7,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::EvalResult;
 use crate::data::EvalSet;
+use crate::obs::{KernelMetrics, MetricsRegistry};
 use crate::serve::model::PackedVit;
 use crate::util::parallel::default_workers;
 
@@ -102,12 +103,26 @@ impl ServeConfigBuilder {
 pub struct ServeEngine {
     model: PackedVit,
     pub cfg: ServeConfig,
+    /// Per-layer fused-GEMM instrumentation; detached until
+    /// [`instrument`](Self::instrument) attaches a shared registry.
+    kernel: KernelMetrics,
 }
 
 impl ServeEngine {
     pub fn new(model: PackedVit, cfg: ServeConfig) -> Result<ServeEngine> {
         cfg.validate()?;
-        Ok(ServeEngine { model, cfg })
+        Ok(ServeEngine { model, cfg, kernel: KernelMetrics::detached() })
+    }
+
+    /// Re-home the engine's kernel metrics into `reg` (the session does
+    /// this so `kernel.{layer}.calls/.ms` land in its registry).
+    pub fn instrument(&mut self, reg: &MetricsRegistry) {
+        self.kernel = KernelMetrics::in_registry(reg);
+    }
+
+    /// The engine's per-layer GEMM instrumentation handles.
+    pub fn kernel_metrics(&self) -> &KernelMetrics {
+        &self.kernel
     }
 
     pub fn model(&self) -> &PackedVit {
@@ -134,7 +149,7 @@ impl ServeEngine {
         while done < n {
             let m = self.cfg.micro_batch.min(n - done);
             let chunk = &images[done * px..(done + m) * px];
-            logits.extend(self.model.forward(chunk, m, self.cfg.workers));
+            logits.extend(self.model.forward_observed(chunk, m, self.cfg.workers, &self.kernel));
             done += m;
         }
         logits
@@ -156,7 +171,7 @@ impl ServeEngine {
         for b in 0..nb {
             let (x, y) = evalset.batch(b);
             let batch = y.len();
-            let logits = self.model.forward(&x, batch, self.cfg.workers);
+            let logits = self.model.forward_observed(&x, batch, self.cfg.workers, &self.kernel);
             let (ls, c) = batch_loss_correct(&logits, &y, self.classes());
             loss_sum += ls as f64;
             correct += c as f64;
@@ -256,6 +271,28 @@ mod tests {
         assert_eq!(r.samples, 16);
         assert!(r.acc_pct >= 0.0 && r.acc_pct <= 100.0);
         assert!(r.mean_loss.is_finite());
+    }
+
+    #[test]
+    fn kernel_metrics_count_gemms_without_perturbing_logits() {
+        let mut e = tiny_engine(4);
+        let reg = MetricsRegistry::new();
+        e.instrument(&reg);
+        let mut rng = Rng::new(9);
+        let n = 6;
+        let x: Vec<f32> = (0..n * e.pixels_per_image()).map(|_| rng.normal()).collect();
+        let observed = e.infer_logits(&x, n);
+        // Instrumentation must be a bit-exact passthrough.
+        assert_eq!(observed, e.model().forward(&x, n, e.cfg.workers));
+        // depth=2 blocks, micro_batch=4 -> 2 forwards -> 4 calls/layer.
+        for layer in crate::obs::LAYER_NAMES {
+            assert_eq!(
+                reg.counter(&format!("kernel.{layer}.calls")).get(),
+                4,
+                "{layer} call count"
+            );
+            assert!(reg.fcounter(&format!("kernel.{layer}.ms")).get() >= 0.0);
+        }
     }
 
     #[test]

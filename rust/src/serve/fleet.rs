@@ -27,10 +27,48 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs::{
+    Counter, FCounter, Histo, KernelMetrics, MetricsRegistry, TraceSink,
+};
 use crate::serve::engine::ServeConfig;
-use crate::serve::model::{LinearExec, PackedVit, ServeGeom, VitShard};
-use crate::serve::scheduler::{Completions, Outcome, Reject, Scheduler, Ticket};
+use crate::serve::model::{LinearExec, ObservedExec, PackedVit, ServeGeom, VitShard};
+use crate::serve::scheduler::{Completions, Outcome, Reject, SchedMetrics, Scheduler, Ticket};
 use crate::serve::stats::LatencySummary;
+use crate::util::json::num;
+
+/// Trace thread ids: request/scheduler events vs fleet execution.
+const TID_REQUEST: u64 = 0;
+const TID_EXEC: u64 = 1;
+
+/// Fleet-level instrumentation handles.
+#[derive(Debug, Clone)]
+pub struct FleetMetrics {
+    /// Executed micro-batch sizes (`fleet.batch_images`).
+    pub batch_images: Histo,
+    /// Coordinator time blocked on engine replies (`fleet.gather_wait_ms`).
+    pub gather_wait_ms: FCounter,
+    /// Steps that executed a batch (`fleet.steps`).
+    pub steps: Counter,
+    /// Per-engine forward time (`fleet.engine{e}.busy_ms`).
+    pub engine_busy_ms: Vec<FCounter>,
+    /// Per-layer fused-GEMM calls/time (`kernel.{layer}.*`).
+    pub kernel: KernelMetrics,
+}
+
+impl FleetMetrics {
+    fn in_registry(reg: &MetricsRegistry, engines: usize) -> FleetMetrics {
+        FleetMetrics {
+            batch_images: reg
+                .histogram("fleet.batch_images", &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0]),
+            gather_wait_ms: reg.fcounter("fleet.gather_wait_ms"),
+            steps: reg.counter("fleet.steps"),
+            engine_busy_ms: (0..engines)
+                .map(|e| reg.fcounter(&format!("fleet.engine{e}.busy_ms")))
+                .collect(),
+            kernel: KernelMetrics::in_registry(reg),
+        }
+    }
+}
 
 /// Work item for an engine thread: one row-slice of one quantized
 /// linear over a shared activation block.
@@ -75,6 +113,13 @@ pub struct ServeFleet {
     sched: Scheduler,
     done: Completions,
     clock: Instant,
+    reg: MetricsRegistry,
+    obs: FleetMetrics,
+    trace: Option<TraceSink>,
+    /// Print a one-line `METRICS {...}` snapshot every N executed
+    /// batches (0 = off).
+    snapshot_every: u64,
+    batch_seq: u64,
 }
 
 impl ServeFleet {
@@ -84,12 +129,15 @@ impl ServeFleet {
         let g = &vit.geom;
         let px = g.img * g.img * 3;
         let classes = g.classes;
+        let reg = MetricsRegistry::new();
+        let obs = FleetMetrics::in_registry(&reg, cfg.engines);
         let (trunk, shards) = vit.into_shards(cfg.engines)?;
         let mut engines = Vec::with_capacity(shards.len());
         for (e, shard) in shards.into_iter().enumerate() {
             let ranges = [shard.range(0), shard.range(1), shard.range(2), shard.range(3)];
             let shard_bytes = shard.bytes();
             let workers = cfg.workers;
+            let busy = obs.engine_busy_ms[e].clone();
             let (tx, rx) = channel::<Job>();
             let join = std::thread::Builder::new()
                 .name(format!("tj-engine-{e}"))
@@ -97,7 +145,9 @@ impl ServeFleet {
                     while let Ok(job) = rx.recv() {
                         match job {
                             Job::Linear { store, x, n, grow0, rows, reply } => {
+                                let t0 = Instant::now();
                                 let out = shard.linear(store, &x, n, grow0, rows, workers);
+                                busy.add(t0.elapsed().as_secs_f64() * 1e3);
                                 // A dropped gather (coordinator gone)
                                 // just ends the loop's usefulness.
                                 let _ = reply.send((e, out));
@@ -113,10 +163,43 @@ impl ServeFleet {
             trunk,
             engines,
             cfg,
-            sched: Scheduler::new(px, cfg.queue_depth),
-            done: Completions::new(classes),
+            sched: Scheduler::with_metrics(px, cfg.queue_depth, SchedMetrics::in_registry(&reg)),
+            done: Completions::in_registry(classes, &reg),
             clock: Instant::now(),
+            reg,
+            obs,
+            trace: None,
+            snapshot_every: 0,
+            batch_seq: 0,
         })
+    }
+
+    /// The fleet's metrics registry (`sched.*`, `serve.*`, `fleet.*`,
+    /// `kernel.*`). Clone it to share with an exposition endpoint.
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.reg
+    }
+
+    /// Attach a trace sink; request/batch lifecycle events flow into it
+    /// from now on.
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = Some(sink);
+    }
+
+    /// Detach and return the trace sink (flush/digest at end of run).
+    pub fn take_trace(&mut self) -> Option<TraceSink> {
+        self.trace.take()
+    }
+
+    /// Digest of the events traced so far, if a sink is attached.
+    pub fn trace_digest(&self) -> Option<String> {
+        self.trace.as_ref().map(|t| t.digest())
+    }
+
+    /// Print a one-line `METRICS {...}` JSON snapshot every `every`
+    /// executed batches (0 disables).
+    pub fn set_snapshot_every(&mut self, every: u64) {
+        self.snapshot_every = every;
     }
 
     pub fn engines(&self) -> usize {
@@ -175,6 +258,28 @@ impl ServeFleet {
         if matches!(r, Err(Reject::QueueFull { .. })) {
             self.done.rec.record_reject();
         }
+        if let Some(trace) = &mut self.trace {
+            match &r {
+                Ok(t) => trace.instant(
+                    "admit",
+                    arrival_ms,
+                    TID_REQUEST,
+                    vec![("id", num(t.id as f64)), ("n", num(n as f64))],
+                ),
+                Err(Reject::QueueFull { queued_images, limit }) => trace.instant(
+                    "reject",
+                    arrival_ms,
+                    TID_REQUEST,
+                    vec![
+                        ("queued_images", num(*queued_images as f64)),
+                        ("limit", num(*limit as f64)),
+                    ],
+                ),
+                Err(Reject::BadRequest(_)) => {
+                    trace.instant("reject", arrival_ms, TID_REQUEST, vec![])
+                }
+            }
+        }
         r
     }
 
@@ -212,22 +317,95 @@ impl ServeFleet {
         let (expired, plan) = self.sched.next_batch(self.cfg.micro_batch, form_ms);
         for e in &expired {
             self.done.on_expired(e);
+            if let Some(trace) = &mut self.trace {
+                trace.instant(
+                    "expired",
+                    form_ms,
+                    TID_REQUEST,
+                    vec![("id", num(e.id as f64)), ("deadline_ms", num(e.deadline_ms))],
+                );
+            }
         }
         let Some(plan) = plan else {
             return (!expired.is_empty())
                 .then_some(StepInfo { m: 0, done_ms: form_ms, compute_ms: 0.0 });
         };
+        let batch = self.batch_seq;
+        self.batch_seq += 1;
+        let gather0 = self.obs.gather_wait_ms.get();
         let t0 = Instant::now();
         let logits = {
-            let exec = FleetExec { engines: &self.engines };
+            let exec = FleetExec {
+                engines: &self.engines,
+                gather_wait: &self.obs.gather_wait_ms,
+            };
+            let exec = ObservedExec { inner: &exec, kernel: &self.obs.kernel };
             self.trunk.forward_with(&plan.images, plan.m, &exec)
         };
         let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let gather_ms = self.obs.gather_wait_ms.get() - gather0;
         let done_ms = match virtual_ms_per_image {
             Some(mspi) => form_ms + plan.m as f64 * mspi,
             None => self.now_ms(),
         };
         self.done.on_batch(&plan, &logits, done_ms, compute_ms);
+        self.obs.steps.inc();
+        self.obs.batch_images.observe(plan.m as f64);
+        if let Some(trace) = &mut self.trace {
+            // Under a virtual clock (deterministic sink) the trace must
+            // be a pure function of (seed, config): the shard-forward
+            // span takes the simulated service time and the gather
+            // collapses to an instant-width span at completion, keeping
+            // the real-measured compute_ms/gather_ms out of the bytes.
+            let det = trace.deterministic();
+            for span in &plan.spans {
+                trace.duration(
+                    "queued",
+                    span.arrival_ms,
+                    form_ms - span.arrival_ms,
+                    TID_REQUEST,
+                    vec![("id", num(span.id as f64)), ("n", num(span.n as f64))],
+                );
+                trace.instant(
+                    "batched",
+                    form_ms,
+                    TID_REQUEST,
+                    vec![("id", num(span.id as f64)), ("batch", num(batch as f64))],
+                );
+            }
+            let fwd_ms = if det { done_ms - form_ms } else { compute_ms };
+            trace.duration(
+                "shard-forward",
+                form_ms,
+                fwd_ms,
+                TID_EXEC,
+                vec![("batch", num(batch as f64)), ("m", num(plan.m as f64))],
+            );
+            let (gts, gdur) = if det { (done_ms, 0.0) } else { (form_ms + fwd_ms, gather_ms) };
+            trace.duration(
+                "gather",
+                gts,
+                gdur,
+                TID_EXEC,
+                vec![("batch", num(batch as f64))],
+            );
+            for span in &plan.spans {
+                if span.final_chunk {
+                    trace.instant(
+                        "redeemed",
+                        done_ms,
+                        TID_REQUEST,
+                        vec![
+                            ("id", num(span.id as f64)),
+                            ("latency_ms", num(done_ms - span.arrival_ms)),
+                        ],
+                    );
+                }
+            }
+        }
+        if self.snapshot_every > 0 && self.batch_seq % self.snapshot_every == 0 {
+            println!("METRICS {}", self.reg.snapshot_json().to_string());
+        }
         Some(StepInfo { m: plan.m, done_ms, compute_ms })
     }
 
@@ -289,6 +467,8 @@ impl Drop for ServeFleet {
 /// their column blocks, add the bias once.
 struct FleetExec<'a> {
     engines: &'a [EngineHandle],
+    /// Accumulates coordinator time blocked on engine replies.
+    gather_wait: &'a FCounter,
 }
 
 impl FleetExec<'_> {
@@ -337,7 +517,9 @@ impl LinearExec for FleetExec<'_> {
         drop(rtx);
         let mut out = vec![0.0f32; n * rows];
         for _ in 0..expected {
+            let t0 = Instant::now();
             let (e, part) = rrx.recv().expect("engine thread died mid-batch");
+            self.gather_wait.add(t0.elapsed().as_secs_f64() * 1e3);
             let (a, b) = Self::intersect(&self.engines[e], store, row0, rows)
                 .expect("reply from a non-intersecting engine");
             let (w, c0) = (b - a, a - row0);
@@ -417,6 +599,29 @@ mod tests {
         let st = fleet.stats();
         assert_eq!((st.count, st.images, st.rejected), (1, 60, 1));
         assert_eq!(st.batches, 15); // 60 images / micro-batch 4
+    }
+
+    #[test]
+    fn fleet_metrics_and_trace_cover_the_request_lifecycle() {
+        let vit = tiny_vit(8);
+        let px = vit.geom.img * vit.geom.img * 3;
+        let mut fleet = ServeFleet::new(vit, fleet_cfg(2)).unwrap();
+        fleet.set_trace(TraceSink::in_memory(false));
+        fleet.submit(vec![0.2; 6 * px], 6, None).unwrap();
+        let outs = fleet.wait_all();
+        assert_eq!(outs.len(), 1);
+        let reg = fleet.registry().clone();
+        // 6 images / micro-batch 4 -> 2 executed batches.
+        assert_eq!(reg.counter("fleet.steps").get(), 2);
+        assert_eq!(reg.histogram("fleet.batch_images", &[]).count(), 2);
+        assert_eq!(reg.counter("sched.admits").get(), 1);
+        // depth=2 blocks x 2 batches = 4 qkv GEMMs.
+        assert_eq!(reg.counter("kernel.qkv.calls").get(), 4);
+        // stats() is a view over the same registry cells.
+        assert_eq!(fleet.stats(), LatencySummary::from_registry(&reg, "serve"));
+        // Lifecycle: admit + 2x(queued+batched) + 2x(fwd+gather) + redeemed.
+        let trace = fleet.take_trace().unwrap();
+        assert_eq!(trace.events(), 1 + 4 + 4 + 1);
     }
 
     #[test]

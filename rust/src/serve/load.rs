@@ -18,6 +18,13 @@
 //!   accuracy are genuine), but admission, rejection, expiry, batch
 //!   formation and every latency number are pure functions of
 //!   (seed, config) — the determinism property the load tests pin.
+//!
+//! The same property extends to observability: with a deterministic
+//! [`crate::obs::TraceSink`] attached (`serve --trace-out` under
+//! `--pace virtual`), every trace timestamp comes from the simulated
+//! clock and the emitted JSONL is byte-identical across runs — the
+//! trace digest is asserted in `tests/obs.rs`. Real-measured compute
+//! times never enter the trace in that mode.
 
 use anyhow::{bail, Result};
 use std::collections::HashMap;

@@ -30,7 +30,12 @@
 //!   virtual (deterministic) pacing.
 //! * [`stats`] — [`stats::LatencySummary`]: the one typed
 //!   p50/p95/p99/throughput snapshot session, fleet, load test, and
-//!   bench all serialize into BENCH json.
+//!   bench all serialize into BENCH json. Since PR 7 the recorder is a
+//!   bundle of [`crate::obs::MetricsRegistry`] handles and the summary
+//!   is [`stats::LatencySummary::from_registry`] — one registry backs
+//!   live scrapes (`serve --metrics-addr`), periodic `METRICS {...}`
+//!   snapshots, request tracing (`serve --trace-out`), and the
+//!   end-of-run BENCH lines.
 //!
 //! Models load from TJCKPT02 packed checkpoints
 //! ([`crate::coordinator::TrainState::load_with_packed`]) written by
@@ -49,14 +54,14 @@ pub mod session;
 pub mod stats;
 
 pub use engine::{ServeConfig, ServeConfigBuilder, ServeEngine};
-pub use fleet::{ServeFleet, StepInfo};
+pub use fleet::{FleetMetrics, ServeFleet, StepInfo};
 pub use kernel::{dense_matmul, fused_matmul, matmul_ref};
 pub use load::{run_load_test, LoadReport, LoadSpec, Pace};
 pub use model::{
-    shard_ranges, variant_quant, ActQuant, LinearExec, PackedVit, ServeGeom, VitShard,
-    WeightQuant,
+    shard_ranges, variant_quant, ActQuant, LinearExec, ObservedExec, PackedVit, ServeGeom,
+    VitShard, WeightQuant,
 };
-pub use scheduler::{Outcome, Reject, Response, Scheduler, Ticket};
+pub use scheduler::{Outcome, Reject, Response, SchedMetrics, Scheduler, Ticket};
 pub use session::ServeSession;
 pub use stats::{LatencyRecorder, LatencySummary};
 #[allow(deprecated)]

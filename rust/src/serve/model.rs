@@ -27,6 +27,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::PackedSeg;
+use crate::obs::KernelMetrics;
 use crate::quant::{
     fp4_format, int4_quantize, mx_quantize_cols, Fp4Format, Int4Quantizer,
     MxQuantizer, PackedMx, QemaQuantizer, Quantizer, Scaling,
@@ -373,6 +374,34 @@ impl LinearExec for LocalExec<'_> {
     }
 }
 
+/// Instrumentation passthrough for any [`LinearExec`]: counts each
+/// fused-GEMM call and accumulates its wall time into per-layer
+/// [`KernelMetrics`], then delegates unchanged — the returned block is
+/// bit-identical to the inner executor's, so observing a forward never
+/// perturbs its numerics.
+pub struct ObservedExec<'a> {
+    pub inner: &'a dyn LinearExec,
+    pub kernel: &'a KernelMetrics,
+}
+
+impl LinearExec for ObservedExec<'_> {
+    fn qlinear(
+        &self,
+        store: usize,
+        x: &[f32],
+        n: usize,
+        row0: usize,
+        rows: usize,
+        bias: Option<&[f32]>,
+    ) -> Vec<f32> {
+        let t0 = std::time::Instant::now();
+        let out = self.inner.qlinear(store, x, n, row0, rows, bias);
+        self.kernel.calls[store].inc();
+        self.kernel.ms[store].add(t0.elapsed().as_secs_f64() * 1e3);
+        out
+    }
+}
+
 /// Split `total` rows into `n` near-even contiguous `(start, end)`
 /// ranges; the first `total % n` ranges get one extra row. Ragged by
 /// design — the fleet's bit-exactness property is tested on
@@ -690,6 +719,20 @@ impl PackedVit {
     /// [`to_dense`](Self::to_dense) mirrors) with identical numerics.
     pub fn forward(&self, x: &[f32], batch: usize, workers: usize) -> Vec<f32> {
         self.forward_with(x, batch, &LocalExec { vit: self, workers })
+    }
+
+    /// [`forward`](Self::forward) with per-layer kernel instrumentation:
+    /// each quantized linear bumps `kernel.{layer}.calls` / `.ms` on the
+    /// way through. Numerically identical to the uninstrumented path.
+    pub fn forward_observed(
+        &self,
+        x: &[f32],
+        batch: usize,
+        workers: usize,
+        kernel: &KernelMetrics,
+    ) -> Vec<f32> {
+        let local = LocalExec { vit: self, workers };
+        self.forward_with(x, batch, &ObservedExec { inner: &local, kernel })
     }
 
     /// The forward pass with the quantized linears delegated to `exec`

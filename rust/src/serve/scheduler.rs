@@ -15,8 +15,37 @@
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 
+use crate::obs::{Counter, Gauge, MetricsRegistry};
 use crate::serve::engine::argmax_rows;
 use crate::serve::stats::LatencyRecorder;
+
+/// Scheduler instrumentation handles: queue depth (in images) plus
+/// admit/reject/expiry counters.
+#[derive(Debug, Clone)]
+pub struct SchedMetrics {
+    pub queue_depth: Gauge,
+    pub admits: Counter,
+    pub rejects: Counter,
+    pub expiries: Counter,
+}
+
+impl SchedMetrics {
+    /// Register under `sched.queue_depth` / `sched.admits` /
+    /// `sched.rejects` / `sched.expiries`.
+    pub fn in_registry(reg: &MetricsRegistry) -> SchedMetrics {
+        SchedMetrics {
+            queue_depth: reg.gauge("sched.queue_depth"),
+            admits: reg.counter("sched.admits"),
+            rejects: reg.counter("sched.rejects"),
+            expiries: reg.counter("sched.expiries"),
+        }
+    }
+
+    /// Handles not attached to any shared registry.
+    pub fn detached() -> SchedMetrics {
+        SchedMetrics::in_registry(&MetricsRegistry::new())
+    }
+}
 
 /// Handle returned by `submit`; redeem it with `poll`/`wait`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -130,17 +159,25 @@ pub struct Scheduler {
     queue: VecDeque<Pending>,
     queued_images: usize,
     next_id: u64,
+    obs: SchedMetrics,
 }
 
 impl Scheduler {
     /// `px` is pixels per image; `queue_depth` bounds queued images.
     pub fn new(px: usize, queue_depth: usize) -> Scheduler {
+        Scheduler::with_metrics(px, queue_depth, SchedMetrics::detached())
+    }
+
+    /// Like [`Scheduler::new`], with instrumentation handles from a
+    /// shared registry.
+    pub fn with_metrics(px: usize, queue_depth: usize, obs: SchedMetrics) -> Scheduler {
         Scheduler {
             px,
             limit_images: queue_depth,
             queue: VecDeque::new(),
             queued_images: 0,
             next_id: 0,
+            obs,
         }
     }
 
@@ -175,6 +212,7 @@ impl Scheduler {
             )));
         }
         if self.queued_images + n > self.limit_images {
+            self.obs.rejects.inc();
             return Err(Reject::QueueFull {
                 queued_images: self.queued_images,
                 limit: self.limit_images,
@@ -191,6 +229,8 @@ impl Scheduler {
             arrival_ms,
             deadline_ms,
         });
+        self.obs.admits.inc();
+        self.obs.queue_depth.set(self.queued_images as f64);
         Ok(Ticket { id })
     }
 
@@ -235,6 +275,8 @@ impl Scheduler {
                 self.queue.pop_front();
             }
         }
+        self.obs.expiries.add(expired.len() as u64);
+        self.obs.queue_depth.set(self.queued_images as f64);
         let plan = (m > 0).then_some(BatchPlan { images, m, spans });
         (expired, plan)
     }
@@ -256,6 +298,16 @@ pub struct Completions {
 impl Completions {
     pub fn new(classes: usize) -> Completions {
         Completions { classes, ..Default::default() }
+    }
+
+    /// Like [`Completions::new`], with the latency recorder registered
+    /// under `serve.*` in a shared registry.
+    pub fn in_registry(classes: usize, reg: &MetricsRegistry) -> Completions {
+        Completions {
+            classes,
+            rec: LatencyRecorder::in_registry(reg, "serve"),
+            ..Default::default()
+        }
     }
 
     pub fn on_expired(&mut self, e: &Expired) {
@@ -377,6 +429,25 @@ mod tests {
         assert_eq!(exp.len(), 1);
         assert_eq!(exp[0].id, 1);
         assert_eq!(s.pending_images(), 0);
+    }
+
+    #[test]
+    fn metrics_track_admits_rejects_expiries_and_depth() {
+        let reg = MetricsRegistry::new();
+        let mut s = Scheduler::with_metrics(PX, 4, SchedMetrics::in_registry(&reg));
+        s.try_admit(imgs(2, 1.0), 2, Some(5.0), 0.0).unwrap();
+        s.try_admit(imgs(2, 2.0), 2, None, 1.0).unwrap();
+        assert_eq!(reg.gauge("sched.queue_depth").get_opt(), Some(4.0));
+        // Over the image bound: counted as a reject.
+        assert!(s.try_admit(imgs(1, 3.0), 1, None, 2.0).is_err());
+        // Past request 0's deadline: it expires, request 1 forms a batch.
+        let (exp, plan) = s.next_batch(8, 10.0);
+        assert_eq!(exp.len(), 1);
+        assert!(plan.is_some());
+        assert_eq!(reg.counter("sched.admits").get(), 2);
+        assert_eq!(reg.counter("sched.rejects").get(), 1);
+        assert_eq!(reg.counter("sched.expiries").get(), 1);
+        assert_eq!(reg.gauge("sched.queue_depth").get_opt(), Some(0.0));
     }
 
     #[test]

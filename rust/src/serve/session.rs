@@ -23,8 +23,11 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::obs::MetricsRegistry;
 use crate::serve::engine::ServeEngine;
-use crate::serve::scheduler::{Completions, Outcome, Reject, Response, Scheduler, Ticket};
+use crate::serve::scheduler::{
+    Completions, Outcome, Reject, Response, SchedMetrics, Scheduler, Ticket,
+};
 use crate::serve::stats::LatencySummary;
 
 /// Ticket-based serving session.
@@ -33,17 +36,30 @@ pub struct ServeSession {
     sched: Scheduler,
     done: Completions,
     clock: Instant,
+    reg: MetricsRegistry,
 }
 
 impl ServeSession {
-    pub fn new(engine: ServeEngine) -> ServeSession {
-        let sched = Scheduler::new(engine.pixels_per_image(), engine.cfg.queue_depth);
-        let done = Completions::new(engine.classes());
-        ServeSession { engine, sched, done, clock: Instant::now() }
+    pub fn new(mut engine: ServeEngine) -> ServeSession {
+        let reg = MetricsRegistry::new();
+        engine.instrument(&reg);
+        let sched = Scheduler::with_metrics(
+            engine.pixels_per_image(),
+            engine.cfg.queue_depth,
+            SchedMetrics::in_registry(&reg),
+        );
+        let done = Completions::in_registry(engine.classes(), &reg);
+        ServeSession { engine, sched, done, clock: Instant::now(), reg }
     }
 
     pub fn engine(&self) -> &ServeEngine {
         &self.engine
+    }
+
+    /// The session's metrics registry (`sched.*`, `serve.*`,
+    /// `kernel.*` all live here).
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.reg
     }
 
     /// Milliseconds since the session started (the session clock).
@@ -92,7 +108,12 @@ impl ServeSession {
             return !expired.is_empty();
         };
         let t0 = Instant::now();
-        let logits = self.engine.model().forward(&plan.images, plan.m, self.engine.cfg.workers);
+        let logits = self.engine.model().forward_observed(
+            &plan.images,
+            plan.m,
+            self.engine.cfg.workers,
+            self.engine.kernel_metrics(),
+        );
         let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
         self.done.on_batch(&plan, &logits, self.now_ms(), compute_ms);
         true
@@ -258,6 +279,24 @@ mod tests {
             .submit_with_deadline(vec![0.2; px], 1, Some(60_000.0))
             .unwrap();
         assert!(sess.wait(t2).unwrap().response().is_some());
+    }
+
+    #[test]
+    fn registry_sees_scheduler_kernel_and_latency_metrics() {
+        let mut sess = ServeSession::new(engine(2));
+        let px = sess.engine().pixels_per_image();
+        sess.submit_request(vec![0.1; 4 * px], 4).unwrap();
+        let outs = sess.wait_all();
+        assert_eq!(outs.len(), 1);
+        let reg = sess.registry().clone();
+        assert_eq!(reg.counter("sched.admits").get(), 1);
+        // 4 images / micro-batch 2 = 2 batches; depth=2 blocks each.
+        assert_eq!(reg.counter("serve.batches").get(), 2);
+        assert_eq!(reg.counter("serve.images").get(), 4);
+        assert_eq!(reg.counter("kernel.qkv.calls").get(), 4);
+        // stats() is literally a view over the registry.
+        assert_eq!(sess.stats(), LatencySummary::from_registry(&reg, "serve"));
+        assert_eq!(sess.stats().count, 1);
     }
 
     #[test]

@@ -1,15 +1,15 @@
 //! Typed latency accounting shared by the session, the fleet, and the
 //! serve bench — one percentile implementation, one JSON field set.
 //!
-//! [`LatencyRecorder`] is the mutable accumulator the serving loops
-//! feed (per-request latencies, per-batch compute time, rejections,
-//! deadline expiries); [`LatencySummary`] is the immutable snapshot it
-//! produces, with the p50/p95/p99 distribution the ROADMAP's serving
-//! milestone asks for. The summary serializes itself into the BENCH
-//! json (`fields`/`to_json`), so session, fleet, bench harness, and the
-//! load generator all emit byte-identical schemas instead of each
-//! recomputing percentiles.
+//! Since PR 7 the accumulator is not a parallel data structure: a
+//! [`LatencyRecorder`] is a bundle of [`crate::obs::MetricsRegistry`]
+//! handles (`{prefix}.latency_ms`, `{prefix}.images`, …), and
+//! [`LatencySummary::from_registry`] derives the end-of-run snapshot
+//! from those same cells. Session, fleet, bench harness, and the load
+//! generator therefore all emit byte-identical schemas *and* the same
+//! numbers a live `--metrics-addr` scrape would show.
 
+use crate::obs::{Counter, FCounter, Gauge, MetricsRegistry, Series};
 use crate::util::json::{num, obj, Json};
 use crate::util::stats::{mean, percentile};
 
@@ -38,6 +38,32 @@ pub struct LatencySummary {
 }
 
 impl LatencySummary {
+    /// Derive a summary from the `{prefix}.*` metrics of `reg` — the
+    /// seam that makes session/fleet/bench stats one view of the
+    /// registry. Metrics that were never registered read as zero.
+    pub fn from_registry(reg: &MetricsRegistry, prefix: &str) -> LatencySummary {
+        let xs = reg.series(&format!("{prefix}.latency_ms")).values();
+        let first = reg.gauge(&format!("{prefix}.first_arrival_ms")).get_opt();
+        let last = reg.gauge(&format!("{prefix}.last_done_ms")).get_opt();
+        LatencySummary {
+            count: xs.len(),
+            images: reg.counter(&format!("{prefix}.images")).get() as usize,
+            batches: reg.counter(&format!("{prefix}.batches")).get() as usize,
+            rejected: reg.counter(&format!("{prefix}.rejected")).get() as usize,
+            expired: reg.counter(&format!("{prefix}.expired")).get() as usize,
+            wall_ms: match (first, last) {
+                (Some(f), Some(l)) => l - f,
+                _ => 0.0,
+            },
+            busy_ms: reg.fcounter(&format!("{prefix}.busy_ms")).get(),
+            mean_ms: mean(&xs),
+            p50_ms: percentile(&xs, 50.0),
+            p95_ms: percentile(&xs, 95.0),
+            p99_ms: percentile(&xs, 99.0),
+            max_ms: xs.iter().fold(0.0f64, |a, &b| a.max(b)),
+        }
+    }
+
     /// Serving throughput over the wall-clock span (0 for empty runs).
     pub fn imgs_per_sec(&self) -> f64 {
         if self.wall_ms > 0.0 {
@@ -75,24 +101,58 @@ impl LatencySummary {
 #[deprecated(note = "use LatencySummary (the typed percentile snapshot)")]
 pub type SessionStats = LatencySummary;
 
-/// Mutable accumulator behind [`LatencySummary`].
-#[derive(Debug, Clone, Default)]
+/// Serving-loop accumulator: a bundle of registry handles under one
+/// name prefix. Cloning shares the underlying cells.
+#[derive(Debug, Clone)]
 pub struct LatencyRecorder {
-    latencies_ms: Vec<f64>,
-    images: usize,
-    batches: usize,
-    rejected: usize,
-    expired: usize,
-    busy_ms: f64,
-    first_ms: Option<f64>,
-    last_ms: Option<f64>,
+    reg: MetricsRegistry,
+    prefix: String,
+    latencies: Series,
+    images: Counter,
+    batches: Counter,
+    rejected: Counter,
+    expired: Counter,
+    busy_ms: FCounter,
+    first: Gauge,
+    last: Gauge,
+}
+
+impl Default for LatencyRecorder {
+    /// Standalone recorder over a private registry (bench harness,
+    /// tests) under the `serve` prefix.
+    fn default() -> LatencyRecorder {
+        LatencyRecorder::in_registry(&MetricsRegistry::new(), "serve")
+    }
 }
 
 impl LatencyRecorder {
+    /// Register the recorder's metrics in `reg` under
+    /// `{prefix}.latency_ms` / `.images` / `.batches` / `.rejected` /
+    /// `.expired` / `.busy_ms` / `.first_arrival_ms` / `.last_done_ms`.
+    pub fn in_registry(reg: &MetricsRegistry, prefix: &str) -> LatencyRecorder {
+        LatencyRecorder {
+            reg: reg.clone(),
+            prefix: prefix.to_string(),
+            latencies: reg.series(&format!("{prefix}.latency_ms")),
+            images: reg.counter(&format!("{prefix}.images")),
+            batches: reg.counter(&format!("{prefix}.batches")),
+            rejected: reg.counter(&format!("{prefix}.rejected")),
+            expired: reg.counter(&format!("{prefix}.expired")),
+            busy_ms: reg.fcounter(&format!("{prefix}.busy_ms")),
+            first: reg.gauge(&format!("{prefix}.first_arrival_ms")),
+            last: reg.gauge(&format!("{prefix}.last_done_ms")),
+        }
+    }
+
+    /// The registry this recorder writes into.
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.reg
+    }
+
     /// Widen the observed wall-clock span to include `ms`.
     fn touch(&mut self, ms: f64) {
-        self.first_ms = Some(self.first_ms.map_or(ms, |f| f.min(ms)));
-        self.last_ms = Some(self.last_ms.map_or(ms, |l| l.max(ms)));
+        self.first.min_of(ms);
+        self.last.max_of(ms);
     }
 
     /// A request arrived at `ms` (admitted or not) — wall time starts
@@ -104,55 +164,39 @@ impl LatencyRecorder {
     /// A micro-batch of `images` finished at `done_ms` after
     /// `compute_ms` of forward time.
     pub fn record_batch(&mut self, images: usize, compute_ms: f64, done_ms: f64) {
-        self.images += images;
-        self.batches += 1;
-        self.busy_ms += compute_ms;
+        self.images.add(images as u64);
+        self.batches.inc();
+        self.busy_ms.add(compute_ms);
         self.touch(done_ms);
     }
 
     /// A request completed with end-to-end latency `ms`.
     pub fn record_latency(&mut self, ms: f64) {
-        self.latencies_ms.push(ms);
+        self.latencies.record(ms);
     }
 
     pub fn record_reject(&mut self) {
-        self.rejected += 1;
+        self.rejected.inc();
     }
 
     pub fn record_expired(&mut self) {
-        self.expired += 1;
+        self.expired.inc();
     }
 
     /// Requests completed so far.
     pub fn completed(&self) -> usize {
-        self.latencies_ms.len()
+        self.latencies.len()
     }
 
     pub fn summary(&self) -> LatencySummary {
-        let xs = &self.latencies_ms;
-        LatencySummary {
-            count: xs.len(),
-            images: self.images,
-            batches: self.batches,
-            rejected: self.rejected,
-            expired: self.expired,
-            wall_ms: match (self.first_ms, self.last_ms) {
-                (Some(f), Some(l)) => l - f,
-                _ => 0.0,
-            },
-            busy_ms: self.busy_ms,
-            mean_ms: mean(xs),
-            p50_ms: percentile(xs, 50.0),
-            p95_ms: percentile(xs, 95.0),
-            p99_ms: percentile(xs, 99.0),
-            max_ms: xs.iter().fold(0.0f64, |a, &b| a.max(b)),
-        }
+        LatencySummary::from_registry(&self.reg, &self.prefix)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn recorder_summarizes_percentiles_and_span() {
@@ -184,6 +228,74 @@ mod tests {
         let s = LatencyRecorder::default().summary();
         assert_eq!(s, LatencySummary::default());
         assert_eq!(s.imgs_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_summary() {
+        let mut rec = LatencyRecorder::default();
+        rec.note_arrival(0.0);
+        rec.record_batch(1, 0.5, 3.0);
+        rec.record_latency(3.0);
+        let s = rec.summary();
+        assert_eq!(s.count, 1);
+        // Every percentile of a single sample is that sample.
+        assert_eq!(s.mean_ms, 3.0);
+        assert_eq!(s.p50_ms, 3.0);
+        assert_eq!(s.p95_ms, 3.0);
+        assert_eq!(s.p99_ms, 3.0);
+        assert_eq!(s.max_ms, 3.0);
+        assert!((s.wall_ms - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_wall_span_means_zero_throughput() {
+        // All events at the same instant: wall_ms == 0 must not divide.
+        let mut rec = LatencyRecorder::default();
+        rec.note_arrival(5.0);
+        rec.record_batch(16, 0.0, 5.0);
+        rec.record_latency(0.0);
+        let s = rec.summary();
+        assert_eq!(s.wall_ms, 0.0);
+        assert_eq!(s.images, 16);
+        assert_eq!(s.imgs_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_are_monotone_under_random_inputs() {
+        let mut rng = Rng::new(0xbeef);
+        for trial in 0..32 {
+            let n = 1 + (rng.next_u64() % 200) as usize;
+            let mut rec = LatencyRecorder::default();
+            rec.note_arrival(0.0);
+            for _ in 0..n {
+                rec.record_latency(rng.uniform() as f64 * 100.0);
+            }
+            let s = rec.summary();
+            assert!(
+                s.p50_ms <= s.p95_ms && s.p95_ms <= s.p99_ms && s.p99_ms <= s.max_ms,
+                "trial {trial}: p50={} p95={} p99={} max={}",
+                s.p50_ms,
+                s.p95_ms,
+                s.p99_ms,
+                s.max_ms
+            );
+            assert!(s.mean_ms <= s.max_ms && s.mean_ms >= 0.0);
+        }
+    }
+
+    #[test]
+    fn from_registry_matches_recorder_summary() {
+        let reg = MetricsRegistry::new();
+        let mut rec = LatencyRecorder::in_registry(&reg, "serve");
+        rec.note_arrival(1.0);
+        rec.record_batch(3, 2.0, 4.0);
+        rec.record_latency(3.0);
+        rec.record_latency(1.0);
+        assert_eq!(rec.summary(), LatencySummary::from_registry(&reg, "serve"));
+        // A clone shares the same cells.
+        let mut rec2 = rec.clone();
+        rec2.record_reject();
+        assert_eq!(rec.summary().rejected, 1);
     }
 
     #[test]

@@ -17,13 +17,16 @@ use anyhow::{Context, Result};
 use crate::util::json::{num, obj, Json};
 
 /// Keys that carry measurements (everything else identifies the case).
-const MEASURED: [&str; 14] = [
+const MEASURED: [&str; 17] = [
     "imgs_per_s",
     "p50_ms",
     "p95_ms",
     "p99_ms",
     "max_ms",
     "mean_ms",
+    "min_ms",
+    "med_ms",
+    "melem_per_s",
     "wall_ms",
     "busy_ms",
     "requests",
@@ -46,6 +49,29 @@ pub fn write_bench(path: &Path, pr: u64, entries: Vec<Json>) -> Result<()> {
     std::fs::write(path, doc.to_string())
         .with_context(|| format!("writing {}", path.display()))?;
     Ok(())
+}
+
+/// Merge `new_entries` into an existing `BENCH_<pr>.json` (or create
+/// it): an existing entry describing the [`same_case`] is replaced in
+/// place, anything else is appended. This is what lets the serve load
+/// test and several `cargo bench` harness runs accumulate into the one
+/// per-PR BENCH file instead of overwriting each other.
+pub fn merge_bench(path: &Path, pr: u64, new_entries: Vec<Json>) -> Result<()> {
+    let mut entries: Vec<Json> = match std::fs::read_to_string(path) {
+        Ok(text) => Json::parse(&text)
+            .with_context(|| format!("parsing existing {}", path.display()))?
+            .get("entries")
+            .and_then(|e| e.as_arr().ok().map(<[Json]>::to_vec))
+            .unwrap_or_default(),
+        Err(_) => Vec::new(),
+    };
+    for ne in new_entries {
+        match entries.iter_mut().find(|e| same_case(&ne, e)) {
+            Some(slot) => *slot = ne,
+            None => entries.push(ne),
+        }
+    }
+    write_bench(path, pr, entries)
 }
 
 /// Newest `BENCH_<n>.json` in `dir` with `n < pr`, parsed.
@@ -122,6 +148,24 @@ pub fn compare(prev: &Json, cur: &Json, tol: f64) -> Vec<String> {
                 ));
             }
         }
+        // Harness-persisted (non-serving) benches report throughput as
+        // melem_per_s and latency as med_ms; gate those the same way.
+        if let (Some(p), Some(c)) = (metric(pe, "melem_per_s"), metric(ce, "melem_per_s")) {
+            if p > 0.0 && c < p * (1.0 - tol) {
+                flags.push(format!(
+                    "{case}: melem_per_s {c:.1} fell >{:.0}% below previous {p:.1}",
+                    tol * 100.0
+                ));
+            }
+        }
+        if let (Some(p), Some(c)) = (metric(pe, "med_ms"), metric(ce, "med_ms")) {
+            if p > 0.0 && c > p * (1.0 + tol) {
+                flags.push(format!(
+                    "{case}: med_ms {c:.3} rose >{:.0}% above previous {p:.3}",
+                    tol * 100.0
+                ));
+            }
+        }
     }
     flags
 }
@@ -183,6 +227,45 @@ mod tests {
         }
         let cur2 = obj(vec![("pr", num(6.0)), ("entries", Json::Arr(vec![e]))]);
         assert!(compare(&prev, &cur2, 0.10).is_empty());
+    }
+
+    #[test]
+    fn merge_replaces_matching_cases_and_appends_new_ones() {
+        let dir = tmpdir("merge");
+        let p = dir.join("BENCH_7.json");
+        merge_bench(&p, 7, vec![entry("smoke", 1000.0, 10.0)]).unwrap();
+        // Second run of the same case replaces it; a new case appends.
+        merge_bench(&p, 7, vec![entry("smoke", 1100.0, 9.0), entry("quantizer", 50.0, 0.2)])
+            .unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        let entries = doc.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 2, "{doc:?}");
+        let smoke = entries.iter().find(|e| {
+            e.get("case").and_then(|c| c.as_str().ok()) == Some("smoke")
+        });
+        let ips = smoke.unwrap().get("imgs_per_s").unwrap().as_f64().unwrap();
+        assert_eq!(ips, 1100.0, "matched case must be replaced, not duplicated");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compare_gates_harness_metrics_too() {
+        let bench = |m: f64, med: f64| {
+            obj(vec![
+                ("case", s("quantizer/pack")),
+                ("items", num(4096.0)),
+                ("melem_per_s", num(m)),
+                ("med_ms", num(med)),
+            ])
+        };
+        let prev = obj(vec![("pr", num(6.0)), ("entries", Json::Arr(vec![bench(200.0, 1.0)]))]);
+        let ok = obj(vec![("pr", num(7.0)), ("entries", Json::Arr(vec![bench(195.0, 1.05)]))]);
+        assert!(compare(&prev, &ok, 0.10).is_empty());
+        let bad = obj(vec![("pr", num(7.0)), ("entries", Json::Arr(vec![bench(100.0, 3.0)]))]);
+        let flags = compare(&prev, &bad, 0.10);
+        assert_eq!(flags.len(), 2, "{flags:?}");
+        assert!(flags[0].contains("melem_per_s"));
+        assert!(flags[1].contains("med_ms"));
     }
 
     #[test]

@@ -1,9 +1,18 @@
 //! Tiny leveled logger with wall-clock-relative timestamps.
+//!
+//! Verbosity is an [`crate::obs::Level`]: `quiet` silences everything,
+//! `warn` keeps warnings, `info` (default) keeps both. The initial
+//! level comes from the `TJ_LOG` environment variable (read once,
+//! lazily); explicit [`set_level`]/[`set_quiet`] calls override it.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Once;
 use std::time::{SystemTime, UNIX_EPOCH};
 
-static QUIET: AtomicBool = AtomicBool::new(false);
+use crate::obs::Level;
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static LEVEL_FROM_ENV: Once = Once::new();
 static START_MS: AtomicU64 = AtomicU64::new(0);
 
 fn now_ms() -> u64 {
@@ -13,30 +22,57 @@ fn now_ms() -> u64 {
         .unwrap_or(0)
 }
 
+fn level() -> Level {
+    LEVEL_FROM_ENV.call_once(|| {
+        if let Some(l) = std::env::var("TJ_LOG").ok().as_deref().and_then(Level::parse) {
+            LEVEL.store(l as u8, Ordering::Relaxed);
+        }
+    });
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Quiet,
+        1 => Level::Warn,
+        _ => Level::Info,
+    }
+}
+
+/// Set the log level explicitly (wins over `TJ_LOG`).
+pub fn set_level(l: Level) {
+    // Consume the env read first so it can't overwrite this later.
+    LEVEL_FROM_ENV.call_once(|| {});
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Back-compat shim: `quiet=true` maps to [`Level::Warn`] (the old
+/// behaviour — info silenced, warnings kept).
 pub fn set_quiet(q: bool) {
-    QUIET.store(q, Ordering::Relaxed);
+    set_level(if q { Level::Warn } else { Level::Info });
 }
 
 fn elapsed() -> f64 {
-    let start = START_MS.load(Ordering::Relaxed);
-    let start = if start == 0 {
-        let n = now_ms();
-        START_MS.store(n, Ordering::Relaxed);
-        n
-    } else {
-        start
-    };
+    let mut start = START_MS.load(Ordering::Relaxed);
+    if start == 0 {
+        // First caller claims the epoch; a racing thread keeps the
+        // winner's value instead of storing its own. now_ms() is
+        // clamped away from the 0 sentinel.
+        let n = now_ms().max(1);
+        start = match START_MS.compare_exchange(0, n, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => n,
+            Err(existing) => existing,
+        };
+    }
     (now_ms().saturating_sub(start)) as f64 / 1000.0
 }
 
 pub fn info(msg: &str) {
-    if !QUIET.load(Ordering::Relaxed) {
+    if level() >= Level::Info {
         println!("[{:8.1}s] {}", elapsed(), msg);
     }
 }
 
 pub fn warn(msg: &str) {
-    eprintln!("[{:8.1}s] WARN {}", elapsed(), msg);
+    if level() >= Level::Warn {
+        eprintln!("[{:8.1}s] WARN {}", elapsed(), msg);
+    }
 }
 
 #[macro_export]
@@ -47,4 +83,25 @@ macro_rules! loginfo {
 #[macro_export]
 macro_rules! logwarn {
     ($($arg:tt)*) => { $crate::util::log::warn(&format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_epoch_is_claimed_once_across_threads() {
+        // Hammer elapsed() from many threads; every observed epoch must
+        // be identical (the CAS winner's), never a mix.
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    let _ = elapsed();
+                    START_MS.load(Ordering::Relaxed)
+                })
+            })
+            .collect();
+        let seen: Vec<u64> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(seen.iter().all(|&s| s == seen[0] && s != 0), "{seen:?}");
+    }
 }

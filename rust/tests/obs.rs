@@ -1,0 +1,146 @@
+//! Integration tests for the observability subsystem: deterministic
+//! trace digests under virtual pace, bit-exactness of the instrumented
+//! fleet forward, registry snapshot schema stability (the contract
+//! `obs-validate` checks), and the live TCP metrics endpoint.
+
+use tetrajet::obs::{spawn_metrics_endpoint, MetricsRegistry, TraceSink};
+use tetrajet::serve::{
+    run_load_test, ActQuant, LatencySummary, LoadReport, LoadSpec, Pace, PackedVit,
+    ServeConfig, ServeFleet, ServeGeom, WeightQuant,
+};
+use tetrajet::util::rng::Rng;
+
+fn tiny_vit(seed: u64) -> PackedVit {
+    let geom = ServeGeom::new(8, 4, 32, 2, 4, 3, 4);
+    let mut rng = Rng::new(seed);
+    let params: Vec<f32> = (0..geom.total_params()).map(|_| rng.normal() * 0.05).collect();
+    let fmt = tetrajet::quant::e2m1();
+    let scaling = tetrajet::quant::Scaling::TruncationFree;
+    PackedVit::build(
+        geom,
+        &params,
+        None,
+        WeightQuant::Mx { fmt, scaling },
+        ActQuant::Mx { fmt, scaling },
+    )
+    .unwrap()
+}
+
+fn fleet_cfg(engines: usize) -> ServeConfig {
+    ServeConfig::builder()
+        .micro_batch(8)
+        .workers(1)
+        .engines(engines)
+        .queue_depth(32)
+        .build()
+        .unwrap()
+}
+
+/// One traced virtual-pace load run; everything returned must be a
+/// pure function of the arguments.
+fn traced_run(model_seed: u64, load_seed: u64) -> (String, u64, LatencySummary, LoadReport) {
+    let vit = tiny_vit(model_seed);
+    let px = vit.geom.img * vit.geom.img * 3;
+    let mut fleet = ServeFleet::new(vit, fleet_cfg(2)).unwrap();
+    fleet.set_trace(TraceSink::in_memory(true));
+    let spec = LoadSpec {
+        seed: load_seed,
+        requests: 60,
+        request_size: 2,
+        rate_rps: 500.0,
+        deadline_ms: Some(40.0),
+        pace: Pace::Virtual { ms_per_image: 0.5 },
+    };
+    let base = Rng::new(load_seed).fold_in(0x494d47);
+    let report = run_load_test(&mut fleet, &spec, |i| {
+        let mut rng = base.fold_in(i as u64);
+        ((0..2 * px).map(|_| rng.uniform() * 2.0 - 1.0).collect(), Vec::new())
+    })
+    .unwrap();
+    let trace = fleet.take_trace().unwrap();
+    (trace.digest(), trace.events(), fleet.stats(), report)
+}
+
+#[test]
+fn virtual_pace_trace_digest_is_byte_identical_across_runs() {
+    let (d1, e1, s1, r1) = traced_run(3, 11);
+    let (d2, e2, s2, r2) = traced_run(3, 11);
+    assert!(e1 > 0, "a 60-request run must emit trace events");
+    assert_eq!(d1, d2, "same (seed, config) must replay to the same trace bytes");
+    assert_eq!(e1, e2);
+    assert_eq!(s1, s2, "latency summary must be deterministic too");
+    assert_eq!(
+        (r1.accepted, r1.rejected, r1.expired, r1.completed),
+        (r2.accepted, r2.rejected, r2.expired, r2.completed)
+    );
+    // A different arrival seed must perturb the trace.
+    let (d3, _, _, _) = traced_run(3, 12);
+    assert_ne!(d1, d3);
+}
+
+#[test]
+fn instrumented_fleet_logits_stay_bit_exact_to_single_engine() {
+    let vit = tiny_vit(4);
+    let px = vit.geom.img * vit.geom.img * 3;
+    let n = 5;
+    let mut rng = Rng::new(21);
+    let x: Vec<f32> = (0..n * px).map(|_| rng.normal()).collect();
+    let want = vit.forward(&x, n, 1);
+
+    let mut fleet = ServeFleet::new(vit, fleet_cfg(2)).unwrap();
+    fleet.set_trace(TraceSink::in_memory(false));
+    fleet.set_snapshot_every(0);
+    let got = fleet.infer_logits(x, n).unwrap();
+    assert_eq!(got, want, "tracing + metrics must not perturb the forward");
+    assert!(fleet.registry().counter("kernel.qkv.calls").get() > 0);
+}
+
+#[test]
+fn registry_snapshot_has_the_stable_obs_validate_schema() {
+    let vit = tiny_vit(5);
+    let px = vit.geom.img * vit.geom.img * 3;
+    let mut fleet = ServeFleet::new(vit, fleet_cfg(2)).unwrap();
+    fleet.infer_logits(vec![0.1; 3 * px], 3).unwrap();
+
+    let snap = fleet.registry().snapshot_json();
+    for section in ["counters", "gauges", "hists", "series"] {
+        assert!(snap.get(section).is_some(), "snapshot missing {section}");
+    }
+    // The names `tetrajet obs-validate --snapshot` requires.
+    let counters = snap.get("counters").unwrap();
+    for name in [
+        "sched.admits",
+        "sched.rejects",
+        "sched.expiries",
+        "serve.images",
+        "serve.batches",
+        "serve.busy_ms",
+        "fleet.steps",
+        "fleet.gather_wait_ms",
+        "kernel.qkv.calls",
+    ] {
+        assert!(counters.get(name).is_some(), "snapshot missing counters.{name}");
+    }
+    assert!(snap.get("gauges").unwrap().get("sched.queue_depth").is_some());
+    assert!(snap.get("hists").unwrap().get("fleet.batch_images").is_some());
+    assert!(snap.get("series").unwrap().get("serve.latency_ms").is_some());
+    // And the summary view over those cells agrees with fleet.stats().
+    assert_eq!(fleet.stats(), LatencySummary::from_registry(fleet.registry(), "serve"));
+}
+
+#[test]
+fn metrics_endpoint_serves_the_live_registry() {
+    use std::io::{Read, Write};
+
+    let reg = MetricsRegistry::new();
+    reg.counter("fleet.steps").add(3);
+    let addr = spawn_metrics_endpoint("127.0.0.1:0", reg.clone()).unwrap();
+    reg.counter("fleet.steps").add(4);
+
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    conn.write_all(b"GET / HTTP/1.0\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    conn.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.0 200"), "{resp}");
+    assert!(resp.contains("fleet.steps 7"), "endpoint must see live updates: {resp}");
+}
