@@ -6,9 +6,12 @@ RUST_DIR := rust
 .PHONY: tier1 build test fmt fmt-check bench loadtest-smoke obs-smoke artifacts
 
 # `cargo bench --no-run` keeps the bench code compiling without paying
-# for a full measurement sweep.
+# for a full measurement sweep. The second test run forces the scalar
+# kernel (`TJ_SIMD=off`) so the dispatch fallback path stays green on
+# hosts where it would otherwise never execute.
 tier1:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q && cargo bench --no-run && cargo fmt --check
+	cd $(RUST_DIR) && TJ_SIMD=off cargo test -q
 	$(MAKE) loadtest-smoke
 	$(MAKE) obs-smoke
 

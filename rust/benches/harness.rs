@@ -76,7 +76,7 @@ impl Bench {
 
     /// Merge the accumulated entries into `TJ_BENCH_DIR/BENCH_<TJ_BENCH_PR>.json`.
     pub fn persist(&self) {
-        let pr = std::env::var("TJ_BENCH_PR").ok().and_then(|s| s.parse().ok()).unwrap_or(7u64);
+        let pr = std::env::var("TJ_BENCH_PR").ok().and_then(|s| s.parse().ok()).unwrap_or(8u64);
         let dir = std::env::var("TJ_BENCH_DIR").unwrap_or_else(|_| "results".to_string());
         let path = std::path::Path::new(&dir).join(format!("BENCH_{pr}.json"));
         let entries = self.entries.borrow().clone();

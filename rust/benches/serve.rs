@@ -13,8 +13,8 @@ use std::time::Instant;
 use harness::Bench;
 use tetrajet::quant::{e2m1, MxQuantizer, PackedMx, Quantizer, Scaling};
 use tetrajet::serve::{
-    fused_matmul, matmul_ref, ActQuant, LatencyRecorder, PackedVit, ServeConfig, ServeEngine,
-    ServeFleet, ServeGeom, WeightQuant,
+    fused_matmul, fused_matmul_at, matmul_ref, simd, ActQuant, LatencyRecorder, PackedVit,
+    ServeConfig, ServeEngine, ServeFleet, ServeGeom, SimdLevel, WeightQuant,
 };
 use tetrajet::util::json::{num, obj, s};
 use tetrajet::util::rng::Rng;
@@ -51,6 +51,17 @@ fn main() {
             p.dequantize_into(&mut wbuf);
             std::hint::black_box(matmul_ref(&x, n, d, &wbuf, rows, None));
         });
+        // Scalar vs SIMD fused GEMM at each dispatch level the host
+        // has (the AVX2-vs-scalar ratio is the ISSUE 8 acceptance
+        // number; single worker isolates the kernel from threading).
+        for level in [SimdLevel::Off, SimdLevel::Ssse3, SimdLevel::Avx2] {
+            if !simd::available(level) {
+                continue;
+            }
+            b.case(&format!("fused_{} {label} (n={n})", level.as_str()), items, || {
+                std::hint::black_box(fused_matmul_at(level, &x, n, &p, 0, rows, None, 1));
+            });
+        }
     }
 
     // --- engine throughput at batch 1 / 16 / 64 ---

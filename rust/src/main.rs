@@ -53,7 +53,12 @@ eval options:
                     dequant-matmul over codes; needs only the manifest,
                     not the compiled HLO)
   --verify-mirror   with --packed: also run the dequantize-then-matmul
-                    mirror and assert bit-identical accuracy/loss
+                    mirror interleaved per batch (sharing the fused
+                    engine's activation-quant cache) and assert
+                    bit-identical logits
+  --simd LEVEL      kernel dispatch override: auto | off | ssse3 | avx2
+                    (default auto = highest the host supports; the
+                    TJ_SIMD env var does the same)
 
 serve options:
   --ckpt PATH       checkpoint (TJCKPT02 serves codes directly;
@@ -67,6 +72,8 @@ serve options:
                     the cores)
   --queue-depth N   admission queue bound in images (default 256);
                     arrivals beyond it are rejected with a reason
+  --simd LEVEL      kernel dispatch override: auto | off | ssse3 | avx2
+                    (default auto; TJ_SIMD env var equivalent)
   --requests N      request count (default 32)
   --request-size N  images per request (default 4)
   --load-test       open-loop Poisson load test (emits BENCH json)
@@ -78,7 +85,7 @@ serve options:
                     whole run deterministic for a given seed
   --service-ms F    virtual-pace per-image service time (default 1.0)
   --bench-out PATH  BENCH json file (default results/BENCH_<pr>.json)
-  --bench-pr N      PR number stamped into the BENCH file (default 7)
+  --bench-pr N      PR number stamped into the BENCH file (default 8)
   --gate-tol F      regression tolerance vs the previous BENCH_*.json
                     (default 0.10 = 10%)
   --strict-gate     exit nonzero when a regression is flagged
@@ -221,10 +228,33 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Apply a `--simd` dispatch override (process-wide, like `TJ_SIMD`)
+/// and log what the kernels will actually run at.
+fn apply_simd_override(args: &Args) -> Result<()> {
+    use tetrajet::serve::simd;
+    if let Some(v) = args.get("simd") {
+        if v == "auto" {
+            simd::set_override(None);
+        } else {
+            let Some(level) = tetrajet::serve::SimdLevel::parse(v) else {
+                bail!("unknown --simd level {v:?} (auto | off | ssse3 | avx2)");
+            };
+            simd::set_override(Some(level));
+        }
+    }
+    loginfo!(
+        "kernel dispatch: {} (detected {})",
+        simd::active().as_str(),
+        simd::detected().as_str()
+    );
+    Ok(())
+}
+
 /// Shared serving-config parsing: `serve` and `eval --packed` read the
 /// same flag set through the same validating builder, so the two
 /// subcommands cannot drift apart.
 fn serve_cfg_from_args(args: &Args, default_micro: usize) -> Result<tetrajet::serve::ServeConfig> {
+    apply_simd_override(args)?;
     tetrajet::serve::ServeConfig::builder()
         .micro_batch(args.get_usize("micro-batch", default_micro)?)
         .workers(args.get_usize("workers", tetrajet::util::parallel::default_workers())?)
@@ -274,20 +304,39 @@ fn cmd_eval_packed(args: &Args) -> Result<()> {
     let evalset = tetrajet::data::EvalSet::new(ds, man.batch, eval_samples);
     let scfg = serve_cfg_from_args(args, man.batch)?;
     if args.has_flag("verify-mirror") {
-        let mirror = tetrajet::serve::ServeEngine::new(vit.to_dense(), scfg)?;
-        let em = mirror.eval(&evalset);
+        // Interleaved per-batch verification: the mirror shares the
+        // fused engine's activation-quant cache (its whole Q1 pass
+        // replays as hits) and every batch's logits are compared
+        // bitwise, not just the aggregate accuracy/loss.
+        let mirror_model = vit.to_dense();
         let engine = tetrajet::serve::ServeEngine::new(vit, scfg)?;
-        let ev = engine.eval(&evalset);
-        if (ev.acc_pct, ev.mean_loss) != (em.acc_pct, em.mean_loss) {
-            bail!(
-                "fused/packed eval ({:.4}%, {:.6}) != dequant-mirror eval ({:.4}%, {:.6})",
-                ev.acc_pct,
-                ev.mean_loss,
-                em.acc_pct,
-                em.mean_loss
-            );
+        let mut mirror = tetrajet::serve::ServeEngine::new(mirror_model, scfg)?;
+        mirror.share_act_cache(&engine);
+        let classes = engine.classes();
+        let (mut loss_sum, mut correct) = (0.0f64, 0.0f64);
+        for b in 0..evalset.num_batches() {
+            let (x, y) = evalset.batch(b);
+            let fused = engine.eval_logits(&x, y.len());
+            let dense = mirror.eval_logits(&x, y.len());
+            if fused != dense {
+                bail!("batch {b}: fused/packed logits != dequant-mirror logits");
+            }
+            let (ls, c) = tetrajet::serve::engine::batch_loss_correct(&fused, &y, classes);
+            loss_sum += ls as f64;
+            correct += c as f64;
         }
-        loginfo!("verify-mirror: fused == dequant-then-matmul (bit-exact)");
+        let n = evalset.num_samples().max(1);
+        let ev = tetrajet::coordinator::EvalResult {
+            acc_pct: 100.0 * correct / n as f64,
+            mean_loss: loss_sum / n as f64,
+            samples: n,
+        };
+        let (hits, misses) = mirror.act_cache_stats();
+        loginfo!(
+            "verify-mirror: fused == dequant-then-matmul logits bit-exact over {} batches \
+             (act-quant cache: {hits} hits / {misses} misses)",
+            evalset.num_batches()
+        );
         print_eval(&ev, step, "packed");
         return Ok(());
     }
@@ -569,7 +618,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let entry = obj(fields);
         println!("BENCH {}", entry.to_string());
 
-        let pr = args.get_u64("bench-pr", 7)?;
+        let pr = args.get_u64("bench-pr", 8)?;
         let default_out = format!("results/BENCH_{pr}.json");
         let out = std::path::PathBuf::from(args.get_or("bench-out", &default_out));
         let dir = out.parent().map(std::path::Path::to_path_buf).unwrap_or_default();
@@ -696,10 +745,13 @@ fn cmd_obs_validate(args: &Args) -> Result<()> {
             "fleet.steps",
             "fleet.gather_wait_ms",
             "kernel.qkv.calls",
+            "kernel.actq.hits",
+            "kernel.actq.misses",
         ] {
             require("counters", name)?;
         }
         require("gauges", "sched.queue_depth")?;
+        require("gauges", "kernel.dispatch_level")?;
         require("hists", "fleet.batch_images")?;
         require("series", "serve.latency_ms")?;
         println!("obs-validate[snapshot]: schema ok ({p})");

@@ -373,21 +373,27 @@ impl MetricsRegistry {
 pub const LAYER_NAMES: [&str; 4] = ["qkv", "proj", "fc1", "fc2"];
 
 /// Per-layer fused-GEMM instrumentation handles: call counts and
-/// cumulative forward milliseconds, one pair per quantized layer type.
+/// cumulative forward milliseconds, one pair per quantized layer type,
+/// plus a gauge recording which SIMD dispatch level the kernels ran at
+/// (`SimdLevel::id()`: 0 = scalar, 1 = ssse3, 2 = avx2; NaN until the
+/// first instrumented GEMM).
 #[derive(Debug, Clone)]
 pub struct KernelMetrics {
     pub calls: [Counter; 4],
     pub ms: [FCounter; 4],
+    pub dispatch: Gauge,
 }
 
 impl KernelMetrics {
-    /// Register under `kernel.{qkv,proj,fc1,fc2}.{calls,ms}`.
+    /// Register under `kernel.{qkv,proj,fc1,fc2}.{calls,ms}` plus
+    /// `kernel.dispatch_level`.
     pub fn in_registry(reg: &MetricsRegistry) -> KernelMetrics {
         KernelMetrics {
             calls: std::array::from_fn(|i| {
                 reg.counter(&format!("kernel.{}.calls", LAYER_NAMES[i]))
             }),
             ms: std::array::from_fn(|i| reg.fcounter(&format!("kernel.{}.ms", LAYER_NAMES[i]))),
+            dispatch: reg.gauge("kernel.dispatch_level"),
         }
     }
 

@@ -35,7 +35,8 @@ pub use formats::{
 pub use int4::{int4_quantize, int4_quantize_into, Int4Quantizer};
 pub use mx::{
     group_scales, mx_quantize_cols, mx_quantize_cols_into,
-    mx_quantize_stoch_cols, mx_quantize_stoch_cols_into, MxQuantizer,
+    mx_quantize_cols_with_scales, mx_quantize_stoch_cols,
+    mx_quantize_stoch_cols_into, mx_scale_bytes, MxQuantizer,
 };
 pub use packed::{
     level_table_from_id, level_table_id, PackedMx, Quantizer, E8M0_BIAS,

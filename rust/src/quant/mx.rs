@@ -12,10 +12,8 @@
 //! [`MxQuantizer`] is the [`Quantizer`](super::packed::Quantizer)-trait
 //! face of the deterministic path.
 
-use super::formats::{
-    bracket, exp2i, round_det, scale_exponent, Fp4Format, Scaling,
-};
-use super::packed::{PackedMx, Quantizer};
+use super::formats::{bracket, exp2i, round_det, scale_exponent, Fp4Format, Scaling};
+use super::packed::{PackedMx, Quantizer, E8M0_BIAS};
 
 /// Iterate the 1x32 groups of a row-major `(rows, cols)` matrix,
 /// computing the shared-scale exponent of each group once. The closure
@@ -106,6 +104,53 @@ pub fn mx_quantize_stoch_cols_into(
             out[i] = q * scale;
         }
     });
+}
+
+/// Stage 1 of the split deterministic quantizer: the per-group E8M0
+/// scale bytes (`scale_exponent + E8M0_BIAS`) of a 1x32-grouped matrix,
+/// without touching the values. [`mx_quantize_cols_with_scales`] is the
+/// matching stage 2; together they are bit-exact to
+/// [`mx_quantize_cols_into`] (tested below). The serving activation
+/// cache ([`crate::serve::act`]) persists these bytes so a mirror pass
+/// or repeated forward skips the max-abs/frexp scan.
+pub fn mx_scale_bytes(
+    x: &[f32],
+    cols: usize,
+    fmt: &Fp4Format,
+    scaling: Scaling,
+    out: &mut Vec<u8>,
+) {
+    out.clear();
+    for_each_group(x, cols, fmt, scaling, |_rng, s, _scale| {
+        // scale_exponent clamps to +-E8M0_BIAS, so the byte is 0..=254.
+        out.push((s + E8M0_BIAS) as u8);
+    });
+}
+
+/// Stage 2 of the split deterministic quantizer: round onto the grid
+/// using previously computed E8M0 scale bytes (one per 1x32 group, in
+/// [`mx_scale_bytes`] order). Same clamp/round loop as
+/// [`mx_quantize_cols_into`], so the pair is bit-exact to the fused
+/// single pass.
+pub fn mx_quantize_cols_with_scales(
+    x: &[f32],
+    cols: usize,
+    fmt: &Fp4Format,
+    scales: &[u8],
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), x.len());
+    let mut g = 0usize;
+    super::packed::group_ranges(x.len(), cols, |_gi, a, b| {
+        let scale = exp2i(scales[g] as i32 - E8M0_BIAS);
+        g += 1;
+        let inv = 1.0 / scale;
+        for i in a..b {
+            let y = (x[i] * inv).clamp(fmt.qn(), fmt.qp());
+            out[i] = round_det(y, fmt) * scale;
+        }
+    });
+    assert_eq!(g, scales.len(), "one scale byte per group");
 }
 
 /// Per-group scale exponents for a 1x32-grouped matrix; used by the
@@ -243,6 +288,28 @@ mod tests {
         let mut b = vec![0.0; 96];
         mx_quantize_stoch_cols_into(&x, &u, 48, e2m1(), Scaling::TruncationFree, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn split_scale_then_round_matches_fused_pass_bit_exact() {
+        let x: Vec<f32> = (0..240).map(|i| (i as f32 * 0.61).sin() * 5.0).collect();
+        // Ragged (48) and aligned (80) rows, both formats and scalings.
+        for cols in [48usize, 80] {
+            for fmt in [e2m1(), e3m0()] {
+                for scaling in [Scaling::TruncationFree, Scaling::Floor] {
+                    let mut want = vec![0.0f32; x.len()];
+                    mx_quantize_cols_into(&x, cols, fmt, scaling, &mut want);
+                    let mut bytes = Vec::new();
+                    mx_scale_bytes(&x, cols, fmt, scaling, &mut bytes);
+                    let groups_per_row = (cols + GROUP - 1) / GROUP;
+                    assert_eq!(bytes.len(), (x.len() / cols) * groups_per_row);
+                    let mut got = vec![0.0f32; x.len()];
+                    mx_quantize_cols_with_scales(&x, cols, fmt, &bytes, &mut got);
+                    let same = want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(same, "cols {cols} fmt {} {scaling:?}", fmt.name);
+                }
+            }
+        }
     }
 
     #[test]

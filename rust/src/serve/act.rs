@@ -1,0 +1,188 @@
+//! Memoizing cache for Q1 activation quantization.
+//!
+//! Every quantized linear in the [`super::model::PackedVit`] forward
+//! quantizes its input activation block first (Eq. 3's `Q1(X)`), which
+//! costs a max-abs + frexp scan per 1x32 group and a rounding pass per
+//! element. Two serving patterns repeat that work on bit-identical
+//! inputs:
+//!
+//! * `eval --packed --verify-mirror` runs the fused engine and the
+//!   dense-mirror engine over the same batches — the mirror's Q1 inputs
+//!   are bit-identical to the fused pass's (the forwards are bit-exact
+//!   by construction), so every mirror quantization is a repeat;
+//! * repeated forwards over the same images (steady-state benches,
+//!   golden replays) re-quantize the same blocks each time.
+//!
+//! [`ActQuantCache`] keys each of a model's Q1 sites (4 per transformer
+//! block: qkv, proj, fc1, fc2 inputs) by slot and memoizes
+//! `(raw activation bytes) -> (quantized activation, scale bytes)`. A
+//! hit is detected by bitwise comparison of the raw input — no
+//! hashing, no false positives — so cached == uncached is exact by
+//! construction (and still parity-tested in `model.rs`). On a miss the
+//! MX path runs the split quantizer
+//! ([`crate::quant::mx_scale_bytes`] then
+//! [`crate::quant::mx_quantize_cols_with_scales`]), persisting the
+//! per-group E8M0 scale bytes alongside the values; INT4 memoizes the
+//! per-tensor pass. `ActQuant::None` bypasses the cache entirely.
+
+use crate::obs::{Counter, MetricsRegistry};
+use crate::quant::{int4_quantize, mx_quantize_cols_with_scales, mx_scale_bytes};
+use crate::serve::model::ActQuant;
+
+/// One memoized Q1 site: the raw input it was computed from, the
+/// quantized output, and (MX only) the per-group E8M0 scale bytes.
+#[derive(Debug, Clone)]
+struct Slot {
+    raw: Vec<f32>,
+    q: Vec<f32>,
+    scale_bytes: Vec<u8>,
+}
+
+/// Per-model activation-quantization cache; see the module doc. One
+/// slot per Q1 site (`depth * 4` for a ViT). Not thread-safe by itself
+/// — share across engines behind a mutex
+/// ([`crate::serve::ServeEngine::share_act_cache`]).
+#[derive(Debug)]
+pub struct ActQuantCache {
+    slots: Vec<Option<Slot>>,
+    hits: Counter,
+    misses: Counter,
+}
+
+impl ActQuantCache {
+    /// A cache with `slots` Q1 sites and detached hit/miss counters.
+    pub fn new(slots: usize) -> ActQuantCache {
+        let reg = MetricsRegistry::new();
+        ActQuantCache {
+            slots: vec![None; slots],
+            hits: reg.counter("kernel.actq.hits"),
+            misses: reg.counter("kernel.actq.misses"),
+        }
+    }
+
+    /// Swap in registry-attached hit/miss counters (see
+    /// [`MetricsRegistry::counter`] names `kernel.actq.{hits,misses}`).
+    pub fn attach(&mut self, reg: &MetricsRegistry) {
+        self.hits = reg.counter("kernel.actq.hits");
+        self.misses = reg.counter("kernel.actq.misses");
+    }
+
+    /// `(hits, misses)` so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.get(), self.misses.get())
+    }
+
+    /// Number of Q1 sites this cache covers.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True if the cache covers no sites.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Quantize `x` (a `(n, cols)` activation block) in place per `aq`,
+    /// reusing the slot's memoized result when the input is bitwise
+    /// identical to the previous call at this site.
+    pub fn quantize(&mut self, slot: usize, aq: &ActQuant, x: &mut Vec<f32>, cols: usize) {
+        if matches!(aq, ActQuant::None) {
+            return;
+        }
+        if let Some(s) = &self.slots[slot] {
+            let hit = s.raw.len() == x.len()
+                && s.raw.iter().zip(x.iter()).all(|(a, b)| a.to_bits() == b.to_bits());
+            if hit {
+                self.hits.inc();
+                x.copy_from_slice(&s.q);
+                return;
+            }
+        }
+        self.misses.inc();
+        let raw = x.clone();
+        let mut scale_bytes = Vec::new();
+        match *aq {
+            ActQuant::None => unreachable!(),
+            ActQuant::Mx { fmt, scaling } => {
+                mx_scale_bytes(&raw, cols, fmt, scaling, &mut scale_bytes);
+                mx_quantize_cols_with_scales(&raw, cols, fmt, &scale_bytes, x);
+            }
+            ActQuant::Int4 => *x = int4_quantize(&raw, None),
+        }
+        self.slots[slot] = Some(Slot { raw, q: x.clone(), scale_bytes });
+    }
+
+    /// The memoized per-group E8M0 scale bytes at `slot` (empty for
+    /// INT4 sites or before the first miss).
+    pub fn scale_bytes(&self, slot: usize) -> &[u8] {
+        self.slots[slot].as_ref().map_or(&[], |s| &s.scale_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{e2m1, mx_quantize_cols, Scaling};
+
+    fn mx() -> ActQuant {
+        ActQuant::Mx { fmt: e2m1(), scaling: Scaling::TruncationFree }
+    }
+
+    #[test]
+    fn miss_then_hit_returns_identical_bytes() {
+        let mut c = ActQuantCache::new(1);
+        let x0: Vec<f32> = (0..96).map(|i| (i as f32 * 0.7).sin() * 4.0).collect();
+        let want = mx_quantize_cols(&x0, 48, e2m1(), Scaling::TruncationFree);
+        let mut x = x0.clone();
+        c.quantize(0, &mx(), &mut x, 48);
+        assert_eq!(x, want);
+        assert_eq!(c.stats(), (0, 1));
+        assert!(!c.scale_bytes(0).is_empty());
+        let mut x = x0.clone();
+        c.quantize(0, &mx(), &mut x, 48);
+        assert_eq!(c.stats(), (1, 1));
+        let same = x.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "cached result must be bit-identical");
+    }
+
+    #[test]
+    fn changed_input_misses_and_recomputes() {
+        let mut c = ActQuantCache::new(2);
+        let a0: Vec<f32> = (0..32).map(|i| i as f32 / 7.0).collect();
+        let b0: Vec<f32> = (0..32).map(|i| i as f32 / 5.0).collect();
+        let mut a = a0.clone();
+        let mut b = b0.clone();
+        c.quantize(0, &mx(), &mut a, 32);
+        c.quantize(0, &mx(), &mut b, 32);
+        assert_eq!(c.stats(), (0, 2));
+        assert_eq!(b, mx_quantize_cols(&b0, 32, e2m1(), Scaling::TruncationFree));
+        // Distinct slots never cross-talk even on identical inputs.
+        let mut a2 = a0.clone();
+        c.quantize(1, &mx(), &mut a2, 32);
+        assert_eq!(c.stats(), (0, 3));
+    }
+
+    #[test]
+    fn int4_sites_memoize_per_tensor_pass() {
+        let mut c = ActQuantCache::new(1);
+        let x0: Vec<f32> = (0..20).map(|i| (i as f32 - 10.0) * 1.3).collect();
+        let want = int4_quantize(&x0, None);
+        let mut x = x0.clone();
+        c.quantize(0, &ActQuant::Int4, &mut x, 20);
+        assert_eq!(x, want);
+        let mut x = x0;
+        c.quantize(0, &ActQuant::Int4, &mut x, 20);
+        assert_eq!(c.stats(), (1, 1));
+        assert_eq!(x, want);
+        assert!(c.scale_bytes(0).is_empty());
+    }
+
+    #[test]
+    fn none_bypasses_cache() {
+        let mut c = ActQuantCache::new(1);
+        let mut x = vec![1.5f32; 8];
+        c.quantize(0, &ActQuant::None, &mut x, 8);
+        assert_eq!(x, vec![1.5f32; 8]);
+        assert_eq!(c.stats(), (0, 0));
+    }
+}

@@ -3,11 +3,14 @@
 //! eval semantics as the trainer so accuracy parity is directly
 //! checkable (`tetrajet eval --packed` vs the HLO eval path).
 
+use std::sync::{Arc, Mutex};
+
 use anyhow::{bail, Result};
 
 use crate::coordinator::EvalResult;
 use crate::data::EvalSet;
 use crate::obs::{KernelMetrics, MetricsRegistry};
+use crate::serve::act::ActQuantCache;
 use crate::serve::model::PackedVit;
 use crate::util::parallel::default_workers;
 
@@ -106,18 +109,36 @@ pub struct ServeEngine {
     /// Per-layer fused-GEMM instrumentation; detached until
     /// [`instrument`](Self::instrument) attaches a shared registry.
     kernel: KernelMetrics,
+    /// Q1 activation memoization, shareable across engines (the
+    /// `--verify-mirror` pair shares one so the mirror pass reuses the
+    /// fused engine's quantizations).
+    act_cache: Arc<Mutex<ActQuantCache>>,
 }
 
 impl ServeEngine {
     pub fn new(model: PackedVit, cfg: ServeConfig) -> Result<ServeEngine> {
         cfg.validate()?;
-        Ok(ServeEngine { model, cfg, kernel: KernelMetrics::detached() })
+        let act_cache = Arc::new(Mutex::new(ActQuantCache::new(model.geom.depth * 4)));
+        Ok(ServeEngine { model, cfg, kernel: KernelMetrics::detached(), act_cache })
     }
 
     /// Re-home the engine's kernel metrics into `reg` (the session does
-    /// this so `kernel.{layer}.calls/.ms` land in its registry).
+    /// this so `kernel.{layer}.calls/.ms` land in its registry), along
+    /// with the activation cache's `kernel.actq.{hits,misses}`.
     pub fn instrument(&mut self, reg: &MetricsRegistry) {
         self.kernel = KernelMetrics::in_registry(reg);
+        self.act_cache.lock().unwrap().attach(reg);
+    }
+
+    /// Adopt `other`'s activation-quant cache, so bit-identical Q1
+    /// inputs seen by either engine hit the same memoized bytes.
+    pub fn share_act_cache(&mut self, other: &ServeEngine) {
+        self.act_cache = Arc::clone(&other.act_cache);
+    }
+
+    /// `(hits, misses)` of the engine's activation-quant cache.
+    pub fn act_cache_stats(&self) -> (u64, u64) {
+        self.act_cache.lock().unwrap().stats()
     }
 
     /// The engine's per-layer GEMM instrumentation handles.
@@ -149,10 +170,20 @@ impl ServeEngine {
         while done < n {
             let m = self.cfg.micro_batch.min(n - done);
             let chunk = &images[done * px..(done + m) * px];
-            logits.extend(self.model.forward_observed(chunk, m, self.cfg.workers, &self.kernel));
+            logits.extend(self.eval_logits(chunk, m));
             done += m;
         }
         logits
+    }
+
+    /// One instrumented forward over `n` images through the engine's
+    /// activation cache (no micro-batching — the caller owns the batch
+    /// shape). This is the per-batch unit `eval` runs and the hook
+    /// `--verify-mirror` uses to compare fused vs mirror logits
+    /// bitwise.
+    pub fn eval_logits(&self, images: &[f32], n: usize) -> Vec<f32> {
+        let mut cache = self.act_cache.lock().unwrap();
+        self.model.forward_cached(images, n, self.cfg.workers, &self.kernel, &mut cache)
     }
 
     /// Predicted class per image (first-max argmax, like jnp.argmax).
@@ -171,7 +202,7 @@ impl ServeEngine {
         for b in 0..nb {
             let (x, y) = evalset.batch(b);
             let batch = y.len();
-            let logits = self.model.forward_observed(&x, batch, self.cfg.workers, &self.kernel);
+            let logits = self.eval_logits(&x, batch);
             let (ls, c) = batch_loss_correct(&logits, &y, self.classes());
             loss_sum += ls as f64;
             correct += c as f64;
@@ -210,7 +241,9 @@ pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<usize> {
 
 /// Sum of cross-entropy losses + correct count for one batch (mirror of
 /// the eval_step HLO: log-softmax with max subtraction, f32 sums).
-fn batch_loss_correct(logits: &[f32], y: &[i32], classes: usize) -> (f32, f32) {
+/// Public so `--verify-mirror` can aggregate the trainer-parity eval
+/// while comparing per-batch logits itself.
+pub fn batch_loss_correct(logits: &[f32], y: &[i32], classes: usize) -> (f32, f32) {
     let mut loss_sum = 0.0f32;
     let mut correct = 0.0f32;
     for (row, &label) in logits.chunks_exact(classes).zip(y) {
@@ -293,6 +326,24 @@ mod tests {
             );
             assert!(reg.fcounter(&format!("kernel.{layer}.ms")).get() >= 0.0);
         }
+    }
+
+    #[test]
+    fn shared_act_cache_turns_mirror_pass_into_hits() {
+        let e = tiny_engine(4);
+        let mut mirror = ServeEngine::new(e.model().to_dense(), e.cfg).unwrap();
+        mirror.share_act_cache(&e);
+        let mut rng = Rng::new(17);
+        let n = 4;
+        let x: Vec<f32> = (0..n * e.pixels_per_image()).map(|_| rng.normal()).collect();
+        let a = e.eval_logits(&x, n);
+        // depth=2 blocks x 4 Q1 sites: all cold.
+        assert_eq!(e.act_cache_stats(), (0, 8));
+        let b = mirror.eval_logits(&x, n);
+        assert_eq!(a, b, "mirror logits must be bit-exact to fused");
+        // The mirror saw bit-identical Q1 inputs, so its whole
+        // quantization pass replayed from the shared cache.
+        assert_eq!(mirror.act_cache_stats(), (8, 8));
     }
 
     #[test]

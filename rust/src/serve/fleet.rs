@@ -30,6 +30,7 @@ use anyhow::{bail, Context, Result};
 use crate::obs::{
     Counter, FCounter, Histo, KernelMetrics, MetricsRegistry, TraceSink,
 };
+use crate::serve::act::ActQuantCache;
 use crate::serve::engine::ServeConfig;
 use crate::serve::model::{LinearExec, ObservedExec, PackedVit, ServeGeom, VitShard};
 use crate::serve::scheduler::{Completions, Outcome, Reject, SchedMetrics, Scheduler, Ticket};
@@ -115,6 +116,10 @@ pub struct ServeFleet {
     clock: Instant,
     reg: MetricsRegistry,
     obs: FleetMetrics,
+    /// Coordinator-side Q1 memoization (`kernel.actq.{hits,misses}`);
+    /// the activation quant runs on the trunk before the scatter, so
+    /// one cache covers every engine.
+    act_cache: ActQuantCache,
     trace: Option<TraceSink>,
     /// Print a one-line `METRICS {...}` snapshot every N executed
     /// batches (0 = off).
@@ -159,6 +164,8 @@ impl ServeFleet {
                 .with_context(|| format!("spawning engine thread {e}"))?;
             engines.push(EngineHandle { tx, ranges, shard_bytes, join: Some(join) });
         }
+        let mut act_cache = ActQuantCache::new(trunk.geom.depth * 4);
+        act_cache.attach(&reg);
         Ok(ServeFleet {
             trunk,
             engines,
@@ -168,6 +175,7 @@ impl ServeFleet {
             clock: Instant::now(),
             reg,
             obs,
+            act_cache,
             trace: None,
             snapshot_every: 0,
             batch_seq: 0,
@@ -340,7 +348,7 @@ impl ServeFleet {
                 gather_wait: &self.obs.gather_wait_ms,
             };
             let exec = ObservedExec { inner: &exec, kernel: &self.obs.kernel };
-            self.trunk.forward_with(&plan.images, plan.m, &exec)
+            self.trunk.forward_with_cache(&plan.images, plan.m, &exec, Some(&mut self.act_cache))
         };
         let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
         let gather_ms = self.obs.gather_wait_ms.get() - gather0;

@@ -1,27 +1,46 @@
 //! Fused group-wise dequant-matmul: the serving GEMM that consumes
-//! [`PackedMx`] codes directly.
+//! [`PackedMx`] codes directly, with runtime SIMD dispatch.
 //!
 //! `Y = X · W_Q^T` with `X: (n, d)` activations and `W_Q` a packed
 //! quantized weight whose rows live in a [`PackedMx`] (optionally a row
-//! range of a depth-stacked tensor). The kernel walks the codes one
-//! 1x32 group at a time: the E8M0 scale is decoded once per group (one
-//! `exp2i`), the group's nibbles are expanded through the level table
-//! into a 32-wide stack tile, and that tile is FMAed against every
-//! activation row before the next group is touched. No full f32 weight
-//! matrix ever exists.
+//! range of a depth-stacked tensor). Per weight row the kernel decodes
+//! the codes group-by-group into a d-element row buffer
+//! ([`crate::serve::simd::decode_row`]: `pshufb` table lookup on the
+//! SIMD levels, scalar `level * scale` otherwise), then dots the buffer
+//! against every activation row — so decode work is paid once per
+//! weight row regardless of batch size, and no full f32 weight matrix
+//! ever exists.
 //!
-//! **Bit-exactness guarantee:** for every output element the fused
-//! kernel performs *the same f32 operations in the same order* as
-//! [`matmul_ref`] over [`PackedMx::dequantize_into`]'s output —
-//! per-element products against `level * scale` values accumulated in
-//! ascending contraction order, bias added once at the end. The two
-//! paths therefore agree bit-for-bit (property-tested in
-//! `tests/serve.rs`, including ragged non-multiple-of-32 columns).
+//! **Bit-exactness guarantee / accumulation-order decision:** the
+//! canonical contraction order is *defined* as the 8-lane lane-strided
+//! reduction of [`crate::serve::simd`] — element `j` accumulates into
+//! lane `j % 8` in ascending `j`, lanes reduced by the one fixed tree
+//! in [`crate::serve::simd::reduce_lanes`], bias added once at the
+//! end. It was redefined from PR 5's single-accumulator ascending
+//! order so one order can be implemented *identically* by the scalar
+//! loop, SSE2, and AVX2 (`mul` + `add`, never hardware FMA — `fmadd`
+//! rounds once and would diverge). [`matmul_ref`], [`dense_matmul`],
+//! and [`fused_matmul`] at every dispatch level all perform the same
+//! f32 operations in the same order per output element, so fused ==
+//! ref, dense mirror == packed, fleet == single-engine, and SIMD ==
+//! scalar all hold bit-for-bit (property-tested in `tests/serve.rs`
+//! across ragged columns, row ranges, MX + INT4, and every available
+//! dispatch level).
+//!
+//! Dispatch: [`fused_matmul`]/[`dense_matmul`] run at
+//! [`crate::serve::simd::active`] (feature probe, `TJ_SIMD`, `--simd`
+//! override); the `*_at` variants take an explicit [`SimdLevel`] for
+//! tests and benches, clamped to what the host supports. The dispatch
+//! *boundary* is one [`crate::serve::simd::strip_dots_at`] call per
+//! decoded weight row, never per dot: `#[target_feature]` functions
+//! can't inline into baseline callers, and per-dot calls into AVX2
+//! code pay an SSE<->VEX transition / `vzeroupper` per output element
+//! — measured ~18x slower than the per-strip form on an AVX2 host.
 //!
 //! Parallelism: output rows of the internal `(rows, n)` transposed tile
 //! (i.e. the rows of `W_Q`) are distributed over a scoped thread pool
-//! ([`crate::util::parallel`]), so decode work is done exactly once per
-//! weight row regardless of batch size.
+//! ([`crate::util::parallel`]); [`transpose_back`] returns the tile to
+//! the caller's `(n, rows)` layout in cache-sized blocks.
 //!
 //! The same row axis is the fleet's sharding seam: because each output
 //! element depends on exactly one weight row, a contiguous row range
@@ -32,13 +51,20 @@
 //! (`serve/fleet.rs`).
 
 use crate::quant::{PackedMx, GROUP};
+use crate::serve::simd::{self, NibbleTable, SimdLevel};
 use crate::util::parallel::parallel_for_each_mut;
 
+/// Row buffers up to this many columns live on the worker's stack; the
+/// ViT stores cap at `d = hidden = 256` for vit-micro, so serving
+/// never pays a per-row allocation.
+const STACK_COLS: usize = 512;
+
 /// Reference GEMM over an already-dequantized weight: `x (n, d)` times
-/// `wq (rows, d)` transposed, accumulating the contraction axis in
-/// ascending order, plus an optional per-output-column bias. This is
-/// the "dequantize-then-matmul" baseline the fused kernel is measured
-/// and verified against.
+/// `wq (rows, d)` transposed, each output element one canonical
+/// lane-strided dot ([`crate::serve::simd::dot_scalar`]) plus an
+/// optional per-output-column bias. This is the serial
+/// "dequantize-then-matmul" baseline the fused kernel is measured and
+/// verified against.
 pub fn matmul_ref(
     x: &[f32],
     n: usize,
@@ -58,21 +84,15 @@ pub fn matmul_ref(
         let oi = &mut out[i * rows..(i + 1) * rows];
         for (c, o) in oi.iter_mut().enumerate() {
             let wr = &wq[c * d..(c + 1) * d];
-            let mut acc = 0.0f32;
-            for j in 0..d {
-                acc += xi[j] * wr[j];
-            }
-            *o = acc + bias.map_or(0.0, |b| b[c]);
+            *o = simd::dot_scalar(xi, wr) + bias.map_or(0.0, |b| b[c]);
         }
     }
     out
 }
 
-/// Row-parallel dense GEMM with [`matmul_ref`]'s exact per-element
-/// accumulation order (ascending contraction index, bias last), so the
-/// dense mirror of a packed model stays bit-exact to the serial
-/// reference while sharing the fused kernel's strip parallelism.
-/// `wq` is the `(rows, d)` row range already sliced by the caller.
+/// Row-parallel dense GEMM at the process's active dispatch level,
+/// bit-exact to [`matmul_ref`] (canonical order at every level). `wq`
+/// is the `(rows, d)` row range already sliced by the caller.
 pub fn dense_matmul(
     x: &[f32],
     n: usize,
@@ -82,6 +102,23 @@ pub fn dense_matmul(
     bias: Option<&[f32]>,
     workers: usize,
 ) -> Vec<f32> {
+    dense_matmul_at(simd::active(), x, n, d, wq, rows, bias, workers)
+}
+
+/// [`dense_matmul`] pinned to an explicit dispatch level (clamped to
+/// the host's capabilities).
+#[allow(clippy::too_many_arguments)]
+pub fn dense_matmul_at(
+    level: SimdLevel,
+    x: &[f32],
+    n: usize,
+    d: usize,
+    wq: &[f32],
+    rows: usize,
+    bias: Option<&[f32]>,
+    workers: usize,
+) -> Vec<f32> {
+    let level = level.min(simd::detected());
     assert_eq!(x.len(), n * d, "x must be (n, d)");
     assert_eq!(wq.len(), rows * d, "wq must be (rows, d)");
     if let Some(b) = bias {
@@ -95,23 +132,10 @@ pub fn dense_matmul(
     let workers = workers.max(1).min(rows);
     parallel_for_each_mut(&mut strips, workers, |c, acc| {
         let wr = &wq[c * d..(c + 1) * d];
-        for (i, av) in acc.iter_mut().enumerate() {
-            let xi = &x[i * d..(i + 1) * d];
-            let mut s = 0.0f32;
-            for (xv, wv) in xi.iter().zip(wr) {
-                s += xv * wv;
-            }
-            *av = s + bias.map_or(0.0, |b| b[c]);
-        }
+        let bias_c = bias.map_or(0.0, |b| b[c]);
+        simd::strip_dots_at(level, x, d, wr, bias_c, acc);
     });
-    let mut out = vec![0.0f32; n * rows];
-    for c in 0..rows {
-        let strip = &out_t[c * n..(c + 1) * n];
-        for (i, &v) in strip.iter().enumerate() {
-            out[i * rows + c] = v;
-        }
-    }
-    out
+    transpose_back(&out_t, rows, n)
 }
 
 /// Fused dequant-matmul over a row range of a packed weight:
@@ -119,8 +143,8 @@ pub fn dense_matmul(
 /// bias[c]`, without materializing the dequantized weight. `w.cols()`
 /// is the contraction dimension; `row0`/`rows` select a block of a
 /// depth-stacked tensor (e.g. one transformer block's slice of
-/// `blocks.fc1_w`). Bit-exact to [`matmul_ref`] over the dequantized
-/// rows.
+/// `blocks.fc1_w`). Runs at the process's active dispatch level;
+/// bit-exact to [`matmul_ref`] over the dequantized rows at any level.
 pub fn fused_matmul(
     x: &[f32],
     n: usize,
@@ -130,6 +154,24 @@ pub fn fused_matmul(
     bias: Option<&[f32]>,
     workers: usize,
 ) -> Vec<f32> {
+    fused_matmul_at(simd::active(), x, n, w, row0, rows, bias, workers)
+}
+
+/// [`fused_matmul`] pinned to an explicit dispatch level (clamped to
+/// the host's capabilities) — the entry point the dispatch property
+/// tests and the scalar-vs-SIMD benches drive.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_matmul_at(
+    level: SimdLevel,
+    x: &[f32],
+    n: usize,
+    w: &PackedMx,
+    row0: usize,
+    rows: usize,
+    bias: Option<&[f32]>,
+    workers: usize,
+) -> Vec<f32> {
+    let level = level.min(simd::detected());
     let d = w.cols();
     assert!(d > 0 && w.len() % d == 0, "packed weight must be rectangular");
     assert!((row0 + rows) * d <= w.len(), "row range exceeds packed weight");
@@ -140,8 +182,8 @@ pub fn fused_matmul(
     if n == 0 || rows == 0 {
         return Vec::new();
     }
-    let gpr = w.groups_per_row();
-    let grouped = w.num_groups() > 0;
+    let table = if level == SimdLevel::Off { None } else { NibbleTable::for_levels(w.levels()) };
+    let pt_simd_scale = simd::per_tensor_simd_scale(table.as_ref(), w);
 
     // Transposed output tile (rows, n): each weight row owns a
     // contiguous strip, so the row-parallel workers never share cache
@@ -150,42 +192,39 @@ pub fn fused_matmul(
     let mut strips: Vec<&mut [f32]> = out_t.chunks_mut(n).collect();
     let workers = workers.max(1).min(rows);
     parallel_for_each_mut(&mut strips, workers, |c, acc| {
-        let r = row0 + c;
-        let mut tile = [0.0f32; GROUP];
-        for k in 0..gpr {
-            let a = r * d + k * GROUP;
-            let b = r * d + ((k + 1) * GROUP).min(d);
-            let glen = b - a;
-            // One scale decode (exp2i) per group, hoisted out of the
-            // element loop; per-tensor (INT4) weights share one scale.
-            let scale = if grouped { w.group_scale(r * gpr + k) } else { w.tensor_scale() };
-            for (j, t) in tile[..glen].iter_mut().enumerate() {
-                *t = w.level(w.code(a + j)) * scale;
-            }
-            let col0 = k * GROUP;
-            for (i, av) in acc.iter_mut().enumerate() {
-                let xg = &x[i * d + col0..i * d + col0 + glen];
-                let mut s = *av;
-                for (xv, tv) in xg.iter().zip(&tile[..glen]) {
-                    s += xv * tv;
-                }
-                *av = s;
-            }
-        }
-        if let Some(bias) = bias {
-            let bv = bias[c];
-            for av in acc.iter_mut() {
-                *av += bv;
-            }
-        }
+        let mut stack = [0.0f32; STACK_COLS];
+        let mut heap = Vec::new();
+        let row: &mut [f32] = if d <= STACK_COLS {
+            &mut stack[..d]
+        } else {
+            heap.resize(d, 0.0);
+            &mut heap
+        };
+        simd::decode_row(level, table.as_ref(), w, row0 + c, pt_simd_scale, row);
+        let bias_c = bias.map_or(0.0, |b| b[c]);
+        simd::strip_dots_at(level, x, d, row, bias_c, acc);
     });
+    transpose_back(&out_t, rows, n)
+}
 
-    // Back to the caller's (n, rows) layout.
+/// Return a `(rows, n)` strip tile to the caller's `(n, rows)` layout,
+/// walking both axes in cache-sized blocks so neither side streams the
+/// whole matrix per line. Shared by the dense and fused kernels (it
+/// was duplicated verbatim at both tails before).
+pub fn transpose_back(out_t: &[f32], rows: usize, n: usize) -> Vec<f32> {
+    const B: usize = 32;
+    debug_assert_eq!(out_t.len(), rows * n);
     let mut out = vec![0.0f32; n * rows];
-    for c in 0..rows {
-        let strip = &out_t[c * n..(c + 1) * n];
-        for (i, &v) in strip.iter().enumerate() {
-            out[i * rows + c] = v;
+    for c0 in (0..rows).step_by(B) {
+        let c1 = (c0 + B).min(rows);
+        for i0 in (0..n).step_by(B) {
+            let i1 = (i0 + B).min(n);
+            for c in c0..c1 {
+                let strip = &out_t[c * n..(c + 1) * n];
+                for i in i0..i1 {
+                    out[i * rows + c] = strip[i];
+                }
+            }
         }
     }
     out
@@ -262,6 +301,42 @@ mod tests {
             let want = matmul_ref(&x, n, d, &w, rows, bias);
             for workers in [1, 4] {
                 assert_eq!(dense_matmul(&x, n, d, &w, rows, bias, workers), want);
+            }
+        }
+    }
+
+    #[test]
+    fn every_dispatch_level_is_bit_identical() {
+        let mut rng = Rng::new(33);
+        // d = 57 exercises ragged groups AND odd-row nibble offsets
+        // (row * 57 is odd for odd rows), d = 64 the all-SIMD path.
+        for d in [57usize, 64] {
+            let (n, rows) = (3usize, 9usize);
+            let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+            let w: Vec<f32> = (0..rows * d).map(|_| rng.normal() * 0.3).collect();
+            let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+            let mut p = PackedMx::default();
+            q.quantize_packed(&w, d, &mut p);
+            let want = fused_matmul_at(SimdLevel::Off, &x, n, &p, 0, rows, None, 1);
+            for level in [SimdLevel::Ssse3, SimdLevel::Avx2] {
+                if !crate::serve::simd::available(level) {
+                    continue;
+                }
+                let got = fused_matmul_at(level, &x, n, &p, 0, rows, None, 2);
+                assert_eq!(got, want, "level {level:?} d {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_back_round_trips() {
+        // 37 x 23 exercises partial blocks on both axes.
+        let (rows, n) = (37usize, 23usize);
+        let t: Vec<f32> = (0..rows * n).map(|i| i as f32).collect();
+        let out = transpose_back(&t, rows, n);
+        for c in 0..rows {
+            for i in 0..n {
+                assert_eq!(out[i * rows + c], t[c * n + i]);
             }
         }
     }

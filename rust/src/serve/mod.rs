@@ -5,9 +5,21 @@
 //! serving process does not. This subsystem keeps the model in the
 //! [`crate::quant::PackedMx`] representation end to end:
 //!
-//! * [`kernel`] — the fused group-wise dequant-matmul: nibble decode →
-//!   level table → one `exp2i` per 1x32 group, FMAed straight into the
-//!   output tile, row-parallel. Bit-exact to dequantize-then-matmul.
+//! * [`kernel`] — the fused group-wise dequant-matmul: each weight row
+//!   decoded once per call (SIMD `pshufb` table lookup or scalar level
+//!   lookup, one broadcast multiply per 1x32 group scale), then dotted
+//!   against the batch in the canonical lane-strided order,
+//!   row-parallel. Bit-exact to dequantize-then-matmul at every
+//!   dispatch level.
+//! * [`simd`] — runtime kernel dispatch ([`simd::SimdLevel`]:
+//!   `off`/`ssse3`/`avx2`, probed via `is_x86_feature_detected!`,
+//!   overridable with `TJ_SIMD` or `--simd`) plus the canonical dot
+//!   definition and the nibble-decode microkernels themselves.
+//! * [`act`] — [`act::ActQuantCache`]: memoizes Q1 activation
+//!   quantization (per-group E8M0 scale bytes computed once, then the
+//!   rounding pass) keyed on the activation bytes, so a dense
+//!   `--verify-mirror` pass or a repeated forward reuses the fused
+//!   engine's quantization work bit-exactly.
 //! * [`model`] — [`model::PackedVit`]: manifest-derived geometry + the
 //!   quantized ViT forward (Eq. 3: `Y = Q1(X) · Q2(W)^T`) over packed
 //!   stores, never materializing an f32 weight mirror. The forward's
@@ -44,6 +56,7 @@
 //! forward recipe. CLI entry points: `tetrajet serve` (with
 //! `--engines N --load-test`) and `tetrajet eval --packed`.
 
+pub mod act;
 pub mod engine;
 pub mod fleet;
 pub mod kernel;
@@ -51,11 +64,15 @@ pub mod load;
 pub mod model;
 pub mod scheduler;
 pub mod session;
+pub mod simd;
 pub mod stats;
 
+pub use act::ActQuantCache;
 pub use engine::{ServeConfig, ServeConfigBuilder, ServeEngine};
 pub use fleet::{FleetMetrics, ServeFleet, StepInfo};
-pub use kernel::{dense_matmul, fused_matmul, matmul_ref};
+pub use kernel::{
+    dense_matmul, dense_matmul_at, fused_matmul, fused_matmul_at, matmul_ref, transpose_back,
+};
 pub use load::{run_load_test, LoadReport, LoadSpec, Pace};
 pub use model::{
     shard_ranges, variant_quant, ActQuant, LinearExec, ObservedExec, PackedVit, ServeGeom,
@@ -63,6 +80,7 @@ pub use model::{
 };
 pub use scheduler::{Outcome, Reject, Response, SchedMetrics, Scheduler, Ticket};
 pub use session::ServeSession;
+pub use simd::SimdLevel;
 pub use stats::{LatencyRecorder, LatencySummary};
 #[allow(deprecated)]
 pub use stats::SessionStats;

@@ -33,6 +33,7 @@ use crate::quant::{
     MxQuantizer, PackedMx, QemaQuantizer, Quantizer, Scaling,
 };
 use crate::runtime::Manifest;
+use crate::serve::act::ActQuantCache;
 use crate::serve::kernel::{dense_matmul, fused_matmul, matmul_ref};
 
 /// One entry of the flat parameter layout (mirror of vit.py ParamSeg).
@@ -340,8 +341,9 @@ const QW_NAMES: [&str; 4] = ["blocks.qkv_w", "blocks.proj_w", "blocks.fc1_w", "b
 /// `store` indexes the qkv/proj/fc1/fc2 stacked tensors in layout
 /// order; `row0`/`rows` select the calling block's row range of the
 /// depth-stacked tensor. Implementations must be bit-exact to
-/// [`fused_matmul`] over the full store: same ascending contraction
-/// order per output element, bias added once after accumulation.
+/// [`fused_matmul`] over the full store: the canonical lane-strided
+/// contraction order per output element (see the accumulation-order
+/// contract in `serve/kernel.rs`), bias added once after accumulation.
 pub trait LinearExec {
     fn qlinear(
         &self,
@@ -398,6 +400,7 @@ impl LinearExec for ObservedExec<'_> {
         let out = self.inner.qlinear(store, x, n, row0, rows, bias);
         self.kernel.calls[store].inc();
         self.kernel.ms[store].add(t0.elapsed().as_secs_f64() * 1e3);
+        self.kernel.dispatch.set(crate::serve::simd::active().id() as f64);
         out
     }
 }
@@ -713,6 +716,23 @@ impl PackedVit {
         }
     }
 
+    /// [`act_q`](Self::act_q) through an optional memoizing
+    /// [`ActQuantCache`] (slot = `blk * 4 + linear index`); bit-exact
+    /// to the direct path either way (the cache recomputes via the
+    /// split quantizer on a miss and replays stored bytes on a hit).
+    fn act_q_cached(
+        &self,
+        cache: &mut Option<&mut ActQuantCache>,
+        slot: usize,
+        x: &mut Vec<f32>,
+        cols: usize,
+    ) {
+        match cache {
+            Some(c) => c.quantize(slot, &self.act_quant, x, cols),
+            None => self.act_q(x, cols),
+        }
+    }
+
     /// Forward pass: `x` is a (batch, img, img, 3) HWC pixel block; the
     /// result is (batch, classes) logits. Deterministic; the quantized
     /// linears run fused over packed codes (or dense f32 for
@@ -735,12 +755,43 @@ impl PackedVit {
         self.forward_with(x, batch, &ObservedExec { inner: &local, kernel })
     }
 
+    /// [`forward_observed`](Self::forward_observed) with Q1 activation
+    /// quantization routed through a memoizing [`ActQuantCache`]
+    /// (slot = `blk * 4 + linear index`). Logits are bit-identical to
+    /// the uncached forward whether each site hits or misses.
+    pub fn forward_cached(
+        &self,
+        x: &[f32],
+        batch: usize,
+        workers: usize,
+        kernel: &KernelMetrics,
+        cache: &mut ActQuantCache,
+    ) -> Vec<f32> {
+        let local = LocalExec { vit: self, workers };
+        let exec = ObservedExec { inner: &local, kernel };
+        self.forward_with_cache(x, batch, &exec, Some(cache))
+    }
+
     /// The forward pass with the quantized linears delegated to `exec`
     /// (the [`LinearExec`] seam). [`forward`](Self::forward) routes
     /// here with the in-process executor; the serve fleet routes here
     /// with its scatter/gather executor — one forward, two execution
     /// substrates, bit-exact by the trait's contract.
     pub fn forward_with(&self, x: &[f32], batch: usize, exec: &dyn LinearExec) -> Vec<f32> {
+        self.forward_with_cache(x, batch, exec, None)
+    }
+
+    /// [`forward_with`](Self::forward_with) plus an optional
+    /// [`ActQuantCache`]: each of the 4-per-block Q1 sites quantizes
+    /// through its cache slot when one is supplied, replaying the
+    /// memoized bytes when the activation block is bitwise unchanged.
+    pub fn forward_with_cache(
+        &self,
+        x: &[f32],
+        batch: usize,
+        exec: &dyn LinearExec,
+        mut cache: Option<&mut ActQuantCache>,
+    ) -> Vec<f32> {
         let g = &self.geom;
         assert_eq!(x.len(), batch * g.img * g.img * 3, "x must be (batch, img, img, 3)");
         let (dim, seq, heads, hd) = (g.dim, g.seq, g.heads, g.head_dim);
@@ -806,7 +857,7 @@ impl PackedVit {
                 &self.p("blocks.ln1.g")[blk * dim..(blk + 1) * dim],
                 &self.p("blocks.ln1.b")[blk * dim..(blk + 1) * dim],
             );
-            self.act_q(&mut hn, dim);
+            self.act_q_cached(&mut cache, blk * 4, &mut hn, dim);
             let qkv = exec.qlinear(
                 0,
                 &hn,
@@ -845,7 +896,7 @@ impl PackedVit {
                     }
                 }
             }
-            self.act_q(&mut att_out, dim);
+            self.act_q_cached(&mut cache, blk * 4 + 1, &mut att_out, dim);
             let proj = exec.qlinear(
                 1,
                 &att_out,
@@ -865,7 +916,7 @@ impl PackedVit {
                 &self.p("blocks.ln2.g")[blk * dim..(blk + 1) * dim],
                 &self.p("blocks.ln2.b")[blk * dim..(blk + 1) * dim],
             );
-            self.act_q(&mut hn, dim);
+            self.act_q_cached(&mut cache, blk * 4 + 2, &mut hn, dim);
             let mut z = exec.qlinear(
                 2,
                 &hn,
@@ -877,7 +928,7 @@ impl PackedVit {
             for v in z.iter_mut() {
                 *v = gelu_tanh(*v);
             }
-            self.act_q(&mut z, g.hidden);
+            self.act_q_cached(&mut cache, blk * 4 + 3, &mut z, g.hidden);
             let mlp = exec.qlinear(
                 3,
                 &z,
@@ -1011,6 +1062,41 @@ mod tests {
         assert_eq!(a, b, "fused and dequant-mirror forwards must agree bit-for-bit");
         assert_eq!(a.len(), batch * geom.classes);
         assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn cached_forward_matches_uncached_bit_exact() {
+        let geom = tiny_geom();
+        let params = random_params(&geom, 14);
+        let fmt = crate::quant::e2m1();
+        let packed = PackedVit::build(
+            geom.clone(),
+            &params,
+            None,
+            WeightQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+            ActQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+        )
+        .unwrap();
+        let mut rng = Rng::new(15);
+        let batch = 2;
+        let x: Vec<f32> = (0..batch * geom.img * geom.img * 3).map(|_| rng.normal()).collect();
+        let want = packed.forward(&x, batch, 1);
+        let kernel = KernelMetrics::detached();
+        let mut cache = ActQuantCache::new(geom.depth * 4);
+        let cold = packed.forward_cached(&x, batch, 2, &kernel, &mut cache);
+        let same = want.iter().zip(&cold).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "cold cached forward must equal uncached bit-for-bit");
+        assert_eq!(cache.stats(), (0, geom.depth as u64 * 4));
+        // Same images again: every Q1 site hits, logits unchanged.
+        let warm = packed.forward_cached(&x, batch, 2, &kernel, &mut cache);
+        assert_eq!(warm, cold);
+        assert_eq!(cache.stats(), (geom.depth as u64 * 4, geom.depth as u64 * 4));
+        // The dense mirror sees the same Q1 inputs, so a shared cache
+        // turns its whole quantization pass into hits.
+        let mirror = packed.to_dense();
+        let m = mirror.forward_cached(&x, batch, 2, &kernel, &mut cache);
+        assert_eq!(m, want);
+        assert_eq!(cache.stats().0, geom.depth as u64 * 8);
     }
 
     #[test]

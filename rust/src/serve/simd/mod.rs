@@ -1,0 +1,485 @@
+//! Runtime-dispatched SIMD substrate for the fused dequant-matmul.
+//!
+//! Two pieces live here, both shared by `serve/kernel.rs`:
+//!
+//! * **The canonical contraction order.** Every GEMM in the serve
+//!   stack ([`matmul_ref`](crate::serve::kernel::matmul_ref), the
+//!   dense mirror, the scalar fused kernel, and the SIMD paths)
+//!   accumulates a dot product into [`LANES`] = 8 lane accumulators —
+//!   element `j` of the contraction goes to lane `j % 8`, ascending
+//!   `j` within each lane — and reduces them with the one fixed tree
+//!   in [`reduce_lanes`]. That order is exactly what an 8-wide vector
+//!   loop over `mul` + `add` computes, so the scalar and SIMD paths
+//!   perform *the same f32 operations in the same order* and agree
+//!   bit-for-bit. Hardware FMA is deliberately not used: `fmadd`
+//!   rounds once where `mul` + `add` round twice, which would break
+//!   the cross-path guarantee.
+//! * **Nibble decode.** [`NibbleTable`] scales a 16-entry level table
+//!   to small integers (`level * 2^k` fits i8 for every registered
+//!   table), which a single `pshufb` maps 16 codes through at once;
+//!   the group's E8M0 scale is folded back as `2^(e - k)`. Both
+//!   `(K·L) · 2^(e-k)` and `L · 2^e` are single correctly-rounded
+//!   multiplications of the same real value, so the decoded weights
+//!   are bit-identical to the scalar `level(code) * scale` path —
+//!   including subnormal/underflow cases (verified by property test).
+//!
+//! Dispatch: [`detected`] probes the host once
+//! (`is_x86_feature_detected!`), [`active`] folds in the `TJ_SIMD`
+//! environment variable and the process-wide [`set_override`] (the
+//! `--simd` CLI flag), always clamped to what the host supports. The
+//! `*_at` kernel entry points take an explicit level so tests and
+//! benches can pin a path regardless of the global state.
+
+use crate::quant::formats::exp2i;
+use crate::quant::{PackedMx, GROUP};
+
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+/// Kernel dispatch level, ordered weakest to strongest. `Off` is the
+/// portable scalar path; the SIMD levels require the matching x86
+/// feature and are clamped to [`detected`] at every entry point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdLevel {
+    /// Portable scalar fallback (the canonical order, one lane loop).
+    Off,
+    /// SSSE3 `pshufb` decode + SSE2 two-register dot.
+    Ssse3,
+    /// AVX2 `vpshufb` decode + 8-wide dot.
+    Avx2,
+}
+
+impl SimdLevel {
+    /// Parse a `TJ_SIMD` / `--simd` value; unknown strings yield `None`.
+    pub fn parse(s: &str) -> Option<SimdLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "scalar" | "none" => Some(SimdLevel::Off),
+            "ssse3" | "sse" => Some(SimdLevel::Ssse3),
+            "avx2" => Some(SimdLevel::Avx2),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SimdLevel::Off => "off",
+            SimdLevel::Ssse3 => "ssse3",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+
+    /// Stable numeric id (the `kernel.dispatch_level` gauge value).
+    pub fn id(self) -> u8 {
+        match self {
+            SimdLevel::Off => 0,
+            SimdLevel::Ssse3 => 1,
+            SimdLevel::Avx2 => 2,
+        }
+    }
+
+    fn from_id(id: u8) -> SimdLevel {
+        match id {
+            1 => SimdLevel::Ssse3,
+            2 => SimdLevel::Avx2,
+            _ => SimdLevel::Off,
+        }
+    }
+}
+
+/// Strongest level the host supports, probed once per process.
+#[cfg(target_arch = "x86_64")]
+pub fn detected() -> SimdLevel {
+    static DETECTED: std::sync::OnceLock<SimdLevel> = std::sync::OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            SimdLevel::Avx2
+        } else if std::arch::is_x86_feature_detected!("ssse3") {
+            SimdLevel::Ssse3
+        } else {
+            SimdLevel::Off
+        }
+    })
+}
+
+/// Strongest level the host supports (non-x86: always `Off`).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn detected() -> SimdLevel {
+    SimdLevel::Off
+}
+
+/// `true` when `level` can actually execute on this host.
+pub fn available(level: SimdLevel) -> bool {
+    level <= detected()
+}
+
+/// Process-wide dispatch override: 0 = none, else `id() + 1`.
+static OVERRIDE: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(0);
+
+/// Force (or with `None` release) the dispatch level for the whole
+/// process — the `--simd` CLI flag. Takes precedence over `TJ_SIMD`;
+/// still clamped to [`detected`].
+pub fn set_override(level: Option<SimdLevel>) {
+    let v = level.map_or(0, |l| l.id() + 1);
+    OVERRIDE.store(v, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// The `TJ_SIMD` environment override, read once per process.
+fn env_level() -> Option<SimdLevel> {
+    static ENV: std::sync::OnceLock<Option<SimdLevel>> = std::sync::OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("TJ_SIMD").ok().as_deref().and_then(SimdLevel::parse))
+}
+
+/// The level the dispatched kernels run at right now:
+/// `--simd` override, else `TJ_SIMD`, else [`detected`] — always
+/// clamped to [`detected`] (requesting AVX2 on an SSSE3 host serves
+/// SSSE3, never undefined behavior).
+pub fn active() -> SimdLevel {
+    let req = match OVERRIDE.load(std::sync::atomic::Ordering::Relaxed) {
+        0 => env_level().unwrap_or_else(detected),
+        v => SimdLevel::from_id(v - 1),
+    };
+    req.min(detected())
+}
+
+/// Lane count of the canonical contraction order.
+pub const LANES: usize = 8;
+
+/// The one fixed lane-reduction tree, written to match the classic
+/// SSE horizontal sum (`extractf128`/`movehl`/`shuffle`): fold lanes
+/// 8 -> 4 pairwise, then `(s0 + s2) + (s1 + s3)`.
+#[inline(always)]
+pub fn reduce_lanes(l: &[f32; LANES]) -> f32 {
+    ((l[0] + l[4]) + (l[2] + l[6])) + ((l[1] + l[5]) + (l[3] + l[7]))
+}
+
+/// Shared dot epilogue: fold the tail elements (`j >= done`) into
+/// their canonical lanes, then reduce. Every dot implementation ends
+/// here, which is what makes the paths provably identical.
+///
+/// `inline(always)` is load-bearing, not a hint: inlined into a
+/// `#[target_feature]` caller this compiles to VEX encodings, but as
+/// an out-of-line call from AVX2 code it would be a legacy-SSE call
+/// with dirty upper YMM state — an SSE<->AVX transition per dot,
+/// measured ~18x slower than the inlined strip (see `strip_dots_at`).
+#[inline(always)]
+pub(crate) fn finish_dot(mut lanes: [f32; LANES], x: &[f32], w: &[f32], done: usize) -> f32 {
+    for j in done..x.len() {
+        lanes[j % LANES] += x[j] * w[j];
+    }
+    reduce_lanes(&lanes)
+}
+
+/// Canonical dot product, scalar implementation: lane `j % 8`
+/// accumulates `x[j] * w[j]` in ascending `j`, reduced by
+/// [`reduce_lanes`].
+pub fn dot_scalar(x: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), w.len());
+    let mut lanes = [0.0f32; LANES];
+    let chunks = x.len() / LANES;
+    for c in 0..chunks {
+        let xc = &x[c * LANES..c * LANES + LANES];
+        let wc = &w[c * LANES..c * LANES + LANES];
+        for l in 0..LANES {
+            lanes[l] += xc[l] * wc[l];
+        }
+    }
+    finish_dot(lanes, x, w, chunks * LANES)
+}
+
+/// Canonical dot product at an explicit dispatch level. All levels
+/// return bit-identical results; the level only selects how many
+/// elements are processed per instruction.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub fn dot_at(level: SimdLevel, x: &[f32], w: &[f32]) -> f32 {
+    match level {
+        SimdLevel::Off => dot_scalar(x, w),
+        SimdLevel::Ssse3 => x86::dot_sse2(x, w),
+        // Safety: every caller clamps `level` to `detected()`.
+        SimdLevel::Avx2 => unsafe { x86::dot_avx2(x, w) },
+    }
+}
+
+/// Canonical dot product at an explicit dispatch level (non-x86:
+/// always the scalar path).
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+pub fn dot_at(_level: SimdLevel, x: &[f32], w: &[f32]) -> f32 {
+    dot_scalar(x, w)
+}
+
+/// Canonical dots of every row of `x (n, d)` against one weight row,
+/// at an explicit dispatch level: `acc[i] = dot(x[i*d..], row) + bias`
+/// with `n = acc.len()`. Bit-identical across levels (the bias add is
+/// the same single f32 addition the per-dot form performs).
+///
+/// This whole strip — not one dot — is deliberately the dispatch
+/// boundary: a `#[target_feature]` function cannot inline into
+/// baseline callers, and on AVX2 each out-of-line call pays an
+/// SSE<->VEX transition / `vzeroupper` on entry and exit. Per-dot
+/// dispatch paid that ~n*rows times per GEMM and measured ~18x slower
+/// than scalar on an AVX2 host; per-strip it is paid once per weight
+/// row and the AVX2 path runs ~4.5x faster than scalar.
+#[cfg(target_arch = "x86_64")]
+pub fn strip_dots_at(
+    level: SimdLevel,
+    x: &[f32],
+    d: usize,
+    row: &[f32],
+    bias: f32,
+    acc: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), acc.len() * d);
+    match level {
+        SimdLevel::Off => strip_dots_scalar(x, d, row, bias, acc),
+        SimdLevel::Ssse3 => x86::strip_dots_sse2(x, d, row, bias, acc),
+        // Safety: every caller clamps `level` to `detected()`.
+        SimdLevel::Avx2 => unsafe { x86::strip_dots_avx2(x, d, row, bias, acc) },
+    }
+}
+
+/// Strip dots at an explicit dispatch level (non-x86: always scalar).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn strip_dots_at(
+    _level: SimdLevel,
+    x: &[f32],
+    d: usize,
+    row: &[f32],
+    bias: f32,
+    acc: &mut [f32],
+) {
+    strip_dots_scalar(x, d, row, bias, acc)
+}
+
+/// Scalar strip body: the canonical dot per activation row, bias
+/// added once per output element.
+fn strip_dots_scalar(x: &[f32], d: usize, row: &[f32], bias: f32, acc: &mut [f32]) {
+    for (i, av) in acc.iter_mut().enumerate() {
+        *av = dot_scalar(&x[i * d..(i + 1) * d], row) + bias;
+    }
+}
+
+/// A 16-entry level table rescaled to i8 for `pshufb` decode:
+/// `i8s[c] = levels[c] * 2^k` exactly, with the smallest such `k`.
+/// Entry 15 is 0 for the registered 15-level tables (code 15 is
+/// rejected at load, so the slot is never read back).
+#[derive(Debug, Clone, Copy)]
+pub struct NibbleTable {
+    /// `levels[c] = i8s[c] * 2^-k`.
+    pub k: i32,
+    pub i8s: [i8; 16],
+}
+
+impl NibbleTable {
+    /// Integerize a level table, or `None` if no `k <= 6` makes every
+    /// level an exact i8 (all registered tables qualify: e2m1 k=1,
+    /// e3m0 k=2, int4 k=0).
+    pub fn for_levels(levels: &[f32]) -> Option<NibbleTable> {
+        if levels.len() > 16 {
+            return None;
+        }
+        'outer: for k in 0..=6i32 {
+            let mul = exp2i(k);
+            let mut i8s = [0i8; 16];
+            for (c, &l) in levels.iter().enumerate() {
+                let v = l * mul;
+                if v != v.trunc() || !(-128.0..=127.0).contains(&v) {
+                    continue 'outer;
+                }
+                i8s[c] = v as i8;
+            }
+            return Some(NibbleTable { k, i8s });
+        }
+        None
+    }
+}
+
+/// Decode one full weight row of `w` (row `r`, `w.cols()` elements)
+/// into `out`, bit-identical to `w.level(w.code(j)) * scale` per
+/// element. SIMD decode is used per 1x32 group when the group is
+/// full, starts on an even flat index (whole bytes), and its scale is
+/// an in-range power of two; every other group (ragged tails, rows at
+/// odd nibble offsets, E8M0 byte 255, non-power-of-two per-tensor
+/// scales) falls back to the scalar decode of exactly that group.
+pub fn decode_row(
+    level: SimdLevel,
+    table: Option<&NibbleTable>,
+    w: &PackedMx,
+    r: usize,
+    pt_simd_scale: Option<f32>,
+    out: &mut [f32],
+) {
+    let d = w.cols();
+    debug_assert_eq!(out.len(), d);
+    let gpr = w.groups_per_row();
+    let grouped = w.num_groups() > 0;
+    let row0 = r * d;
+    for k in 0..gpr {
+        let a = row0 + k * GROUP;
+        let b = row0 + ((k + 1) * GROUP).min(d);
+        let glen = b - a;
+        let (scale, simd_scale) = if grouped {
+            let e = w.group_scale_exp(r * gpr + k);
+            let ss = table.and_then(|t| (e <= 127).then(|| exp2i(e - t.k)));
+            (w.group_scale(r * gpr + k), ss)
+        } else {
+            (w.tensor_scale(), pt_simd_scale)
+        };
+        let dst = &mut out[k * GROUP..k * GROUP + glen];
+        #[cfg(target_arch = "x86_64")]
+        if level != SimdLevel::Off && glen == GROUP && a % 2 == 0 {
+            if let (Some(t), Some(ss)) = (table, simd_scale) {
+                let codes = w.codes()[a / 2..a / 2 + GROUP / 2].as_ptr();
+                // Safety: 16 code bytes in bounds, 32 f32 out slots,
+                // and `level` is clamped to `detected()` by callers.
+                unsafe {
+                    match level {
+                        SimdLevel::Avx2 => x86::decode32_avx2(codes, &t.i8s, ss, dst),
+                        _ => x86::decode32_ssse3(codes, &t.i8s, ss, dst),
+                    }
+                }
+                continue;
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = (level, simd_scale);
+        for (j, o) in dst.iter_mut().enumerate() {
+            *o = w.level(w.code(a + j)) * scale;
+        }
+    }
+}
+
+/// The per-tensor SIMD scale for `decode_row`, or `None` when the
+/// integerized decode cannot reproduce `level * tensor_scale`
+/// bit-exactly (only possible for hand-built stores: int4, the one
+/// per-tensor quantizer, has `k == 0` and is always exact).
+pub fn per_tensor_simd_scale(table: Option<&NibbleTable>, w: &PackedMx) -> Option<f32> {
+    let t = table?;
+    if w.num_groups() > 0 {
+        return None;
+    }
+    let ts = w.tensor_scale();
+    if t.k == 0 {
+        return Some(ts);
+    }
+    let s = ts * exp2i(-t.k);
+    (s * exp2i(t.k) == ts).then_some(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::int4::INT4_LEVELS;
+    use crate::quant::{e2m1, e3m0};
+
+    #[test]
+    fn level_order_and_parse() {
+        assert!(SimdLevel::Off < SimdLevel::Ssse3 && SimdLevel::Ssse3 < SimdLevel::Avx2);
+        assert_eq!(SimdLevel::parse("AVX2"), Some(SimdLevel::Avx2));
+        assert_eq!(SimdLevel::parse(" off "), Some(SimdLevel::Off));
+        assert_eq!(SimdLevel::parse("ssse3"), Some(SimdLevel::Ssse3));
+        assert_eq!(SimdLevel::parse("banana"), None);
+        for l in [SimdLevel::Off, SimdLevel::Ssse3, SimdLevel::Avx2] {
+            assert_eq!(SimdLevel::from_id(l.id()), l);
+            assert_eq!(SimdLevel::parse(l.as_str()), Some(l));
+        }
+    }
+
+    #[test]
+    fn detected_is_stable_and_off_is_always_available() {
+        assert_eq!(detected(), detected());
+        assert!(available(SimdLevel::Off));
+        assert!(active() <= detected(), "active level must be executable");
+    }
+
+    #[test]
+    fn override_clamps_to_detected() {
+        // Numerics are level-independent, so flipping the process-wide
+        // override around other tests is observable only as speed.
+        set_override(Some(SimdLevel::Off));
+        assert_eq!(active(), SimdLevel::Off);
+        set_override(Some(SimdLevel::Avx2));
+        assert_eq!(active(), SimdLevel::Avx2.min(detected()));
+        set_override(None);
+        assert!(active() <= detected());
+    }
+
+    #[test]
+    fn nibble_tables_integerize_all_registered_level_tables() {
+        let t = NibbleTable::for_levels(&e2m1().levels).unwrap();
+        assert_eq!(t.k, 1, "e2m1 levels * 2 are integers");
+        assert_eq!(t.i8s[e2m1().levels.iter().position(|&l| l == 6.0).unwrap()], 12);
+        let t = NibbleTable::for_levels(&e3m0().levels).unwrap();
+        assert_eq!(t.k, 2, "e3m0 levels * 4 are integers");
+        let t = NibbleTable::for_levels(&INT4_LEVELS).unwrap();
+        assert_eq!(t.k, 0, "int4 levels are already integers");
+        assert_eq!(t.i8s[0], -7);
+        assert!(NibbleTable::for_levels(&[0.3]).is_none(), "0.3 never integerizes");
+    }
+
+    #[test]
+    fn scaled_int_decode_is_bit_exact_for_every_level_and_exponent() {
+        // (K*L) * 2^(e-k) == L * 2^e for every level of every table and
+        // every representable E8M0 exponent, including deep subnormal
+        // results — both sides are one correctly-rounded multiply of
+        // the same real value.
+        for levels in [&e2m1().levels[..], &e3m0().levels[..], &INT4_LEVELS[..]] {
+            let t = NibbleTable::for_levels(levels).unwrap();
+            for e in -127..=127i32 {
+                let (scale, simd_scale) = (exp2i(e), exp2i(e - t.k));
+                for (c, &l) in levels.iter().enumerate() {
+                    let want = l * scale;
+                    let got = t.i8s[c] as f32 * simd_scale;
+                    assert_eq!(got.to_bits(), want.to_bits(), "level {l} e {e} k {}", t.k);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_scalar_matches_lane_model() {
+        // d = 11: one full 8-chunk + a 3-element tail.
+        let x: Vec<f32> = (0..11).map(|i| (i as f32 * 0.37).sin()).collect();
+        let w: Vec<f32> = (0..11).map(|i| (i as f32 * 0.81).cos()).collect();
+        let mut lanes = [0.0f32; LANES];
+        for j in 0..11 {
+            lanes[j % LANES] += x[j] * w[j];
+        }
+        assert_eq!(dot_scalar(&x, &w), reduce_lanes(&lanes));
+        assert_eq!(dot_scalar(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn dot_at_is_bit_identical_across_available_levels() {
+        let x: Vec<f32> = (0..57).map(|i| ((i * 37) % 61) as f32 / 7.0 - 4.0).collect();
+        let w: Vec<f32> = (0..57).map(|i| ((i * 17) % 29) as f32 / 3.0 - 4.0).collect();
+        let want = dot_scalar(&x, &w);
+        for level in [SimdLevel::Ssse3, SimdLevel::Avx2] {
+            if available(level) {
+                assert_eq!(dot_at(level, &x, &w).to_bits(), want.to_bits(), "{level:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn strip_dots_matches_per_dot_form_at_every_level() {
+        // d = 57: seven full 8-chunks + a 1-element tail per dot.
+        let (n, d) = (5usize, 57usize);
+        let x: Vec<f32> = (0..n * d).map(|i| ((i * 37) % 61) as f32 / 7.0 - 4.0).collect();
+        let row: Vec<f32> = (0..d).map(|i| ((i * 17) % 29) as f32 / 3.0 - 4.0).collect();
+        for bias in [0.0f32, -1.25] {
+            let want: Vec<f32> =
+                (0..n).map(|i| dot_scalar(&x[i * d..(i + 1) * d], &row) + bias).collect();
+            for level in [SimdLevel::Off, SimdLevel::Ssse3, SimdLevel::Avx2] {
+                if !available(level) {
+                    continue;
+                }
+                let mut acc = vec![0.0f32; n];
+                strip_dots_at(level, &x, d, &row, bias, &mut acc);
+                for (g, w) in acc.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "level {level:?} bias {bias}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! x86-64 implementations of the canonical dot and the `pshufb`
+//! nibble decode. Every function mirrors the scalar path's f32
+//! operation sequence exactly — see the module doc of
+//! [`super`](crate::serve::simd) for the order contract and why
+//! hardware FMA is not used.
+
+use std::arch::x86_64::*;
+
+use super::{finish_dot, LANES};
+
+/// Canonical dot on SSE2 (baseline x86-64, no runtime probe needed):
+/// two 4-lane accumulators hold canonical lanes 0..4 and 4..8, stored
+/// out and finished by the shared scalar epilogue.
+#[inline]
+pub fn dot_sse2(x: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), w.len());
+    let chunks = x.len() / LANES;
+    let mut lanes = [0.0f32; LANES];
+    unsafe {
+        let (xp, wp) = (x.as_ptr(), w.as_ptr());
+        let mut lo = _mm_setzero_ps();
+        let mut hi = _mm_setzero_ps();
+        for c in 0..chunks {
+            let o = c * LANES;
+            lo = _mm_add_ps(lo, _mm_mul_ps(_mm_loadu_ps(xp.add(o)), _mm_loadu_ps(wp.add(o))));
+            hi = _mm_add_ps(
+                hi,
+                _mm_mul_ps(_mm_loadu_ps(xp.add(o + 4)), _mm_loadu_ps(wp.add(o + 4))),
+            );
+        }
+        _mm_storeu_ps(lanes.as_mut_ptr(), lo);
+        _mm_storeu_ps(lanes.as_mut_ptr().add(4), hi);
+    }
+    finish_dot(lanes, x, w, chunks * LANES)
+}
+
+/// Canonical dot on AVX2: one 8-lane accumulator, `mul` + `add` (not
+/// `fmadd`), stored out and finished by the shared scalar epilogue.
+///
+/// # Safety
+/// The host must support AVX2 (callers clamp to `detected()`).
+#[inline]
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_avx2(x: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), w.len());
+    let chunks = x.len() / LANES;
+    let mut lanes = [0.0f32; LANES];
+    let (xp, wp) = (x.as_ptr(), w.as_ptr());
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let o = c * LANES;
+        acc = _mm256_add_ps(
+            acc,
+            _mm256_mul_ps(_mm256_loadu_ps(xp.add(o)), _mm256_loadu_ps(wp.add(o))),
+        );
+    }
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    finish_dot(lanes, x, w, chunks * LANES)
+}
+
+/// Canonical dots of every row of `x (n, d)` against one weight row
+/// on the SSE2 path, bias added once per output. SSE2 is baseline
+/// x86-64, so `dot_sse2` inlines here freely.
+pub fn strip_dots_sse2(x: &[f32], d: usize, row: &[f32], bias: f32, acc: &mut [f32]) {
+    for (i, av) in acc.iter_mut().enumerate() {
+        *av = dot_sse2(&x[i * d..(i + 1) * d], row) + bias;
+    }
+}
+
+/// Canonical dots of every row of `x (n, d)` against one weight row
+/// on AVX2. This strip is the dispatch boundary: `dot_avx2` and the
+/// shared epilogue inline into this one `#[target_feature]` body, so
+/// every f32 op compiles to VEX and the SSE<->AVX transition cost is
+/// paid once per strip, not once per dot (the per-dot structure
+/// measured ~18x slower — see `super::strip_dots_at`).
+///
+/// # Safety
+/// The host must support AVX2 (callers clamp to `detected()`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn strip_dots_avx2(x: &[f32], d: usize, row: &[f32], bias: f32, acc: &mut [f32]) {
+    for (i, av) in acc.iter_mut().enumerate() {
+        *av = dot_avx2(&x[i * d..(i + 1) * d], row) + bias;
+    }
+}
+
+/// Split 16 packed code bytes into two 16-lane nibble index vectors in
+/// flat element order: low nibbles are even elements, high nibbles odd,
+/// so `unpack(lo, hi)` interleaves them back to `e0, e1, e2, ...`.
+#[inline(always)]
+unsafe fn nibble_indices(codes: *const u8) -> (__m128i, __m128i) {
+    let raw = _mm_loadu_si128(codes as *const __m128i);
+    let mask = _mm_set1_epi8(0x0F);
+    let lo = _mm_and_si128(raw, mask);
+    let hi = _mm_and_si128(_mm_srli_epi16::<4>(raw), mask);
+    (_mm_unpacklo_epi8(lo, hi), _mm_unpackhi_epi8(lo, hi))
+}
+
+/// Decode one full 32-element group on SSSE3: `pshufb` maps 16 codes
+/// through the integerized level table at once, SSE2 unpack+shift
+/// sign-extends i8 -> i32, and one broadcast multiply by
+/// `scale * 2^-k` lands the exact dequantized values.
+///
+/// # Safety
+/// `codes` must point at 16 readable bytes, `out` at 32 writable
+/// f32s, and the host must support SSSE3.
+#[target_feature(enable = "ssse3")]
+pub unsafe fn decode32_ssse3(codes: *const u8, table: &[i8; 16], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), 32);
+    let t = _mm_loadu_si128(table.as_ptr() as *const __m128i);
+    let sv = _mm_set1_ps(scale);
+    let (idx_a, idx_b) = nibble_indices(codes);
+    let op = out.as_mut_ptr();
+    for (half, idx) in [idx_a, idx_b].into_iter().enumerate() {
+        let v = _mm_shuffle_epi8(t, idx);
+        // i8 -> i16 -> i32 sign extension via duplicate + arithmetic
+        // shift (SSE2; _mm_cvtepi8_epi32 would need SSE4.1).
+        let w_lo = _mm_srai_epi16::<8>(_mm_unpacklo_epi8(v, v));
+        let w_hi = _mm_srai_epi16::<8>(_mm_unpackhi_epi8(v, v));
+        let quads = [
+            _mm_srai_epi32::<16>(_mm_unpacklo_epi16(w_lo, w_lo)),
+            _mm_srai_epi32::<16>(_mm_unpackhi_epi16(w_lo, w_lo)),
+            _mm_srai_epi32::<16>(_mm_unpacklo_epi16(w_hi, w_hi)),
+            _mm_srai_epi32::<16>(_mm_unpackhi_epi16(w_hi, w_hi)),
+        ];
+        for (q, ints) in quads.into_iter().enumerate() {
+            let vals = _mm_mul_ps(_mm_cvtepi32_ps(ints), sv);
+            _mm_storeu_ps(op.add(half * 16 + q * 4), vals);
+        }
+    }
+}
+
+/// Decode one full 32-element group on AVX2: same `vpshufb` table
+/// lookup, widened 8 lanes at a time with `vpmovsxbd`.
+///
+/// # Safety
+/// Same contract as [`decode32_ssse3`], host must support AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn decode32_avx2(codes: *const u8, table: &[i8; 16], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), 32);
+    let t = _mm_loadu_si128(table.as_ptr() as *const __m128i);
+    let sv = _mm256_set1_ps(scale);
+    let (idx_a, idx_b) = nibble_indices(codes);
+    let op = out.as_mut_ptr();
+    for (half, idx) in [idx_a, idx_b].into_iter().enumerate() {
+        let v = _mm_shuffle_epi8(t, idx);
+        let ints_lo = _mm256_cvtepi8_epi32(v);
+        let ints_hi = _mm256_cvtepi8_epi32(_mm_unpackhi_epi64(v, v));
+        _mm256_storeu_ps(op.add(half * 16), _mm256_mul_ps(_mm256_cvtepi32_ps(ints_lo), sv));
+        _mm256_storeu_ps(op.add(half * 16 + 8), _mm256_mul_ps(_mm256_cvtepi32_ps(ints_hi), sv));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::simd::{available, dot_scalar, NibbleTable, SimdLevel};
+
+    #[test]
+    fn sse2_dot_matches_scalar_bitwise() {
+        for d in [0usize, 1, 7, 8, 9, 32, 57, 96] {
+            let x: Vec<f32> = (0..d).map(|i| ((i * 37) % 61) as f32 / 7.0 - 4.0).collect();
+            let w: Vec<f32> = (0..d).map(|i| ((i * 53) % 47) as f32 / 5.0 - 4.0).collect();
+            assert_eq!(dot_sse2(&x, &w).to_bits(), dot_scalar(&x, &w).to_bits(), "d={d}");
+        }
+    }
+
+    #[test]
+    fn decoders_match_scalar_table_lookup() {
+        let levels = &crate::quant::e2m1().levels;
+        let t = NibbleTable::for_levels(levels).unwrap();
+        // 32 codes covering every valid nibble 0..=14, packed 2/byte.
+        let codes: Vec<u8> = (0..16u8).map(|i| ((i * 2 % 15) << 4) | ((i * 7 + 1) % 15)).collect();
+        let flat = |i: usize| (codes[i / 2] >> ((i % 2) * 4)) & 0x0F;
+        for e in [-130i32, -8, 0, 9, 127] {
+            let scale = crate::quant::formats::exp2i(e);
+            let simd_scale = crate::quant::formats::exp2i(e - t.k);
+            let want: Vec<f32> = (0..32).map(|i| levels[flat(i) as usize] * scale).collect();
+            let mut got = vec![0.0f32; 32];
+            if available(SimdLevel::Ssse3) {
+                unsafe { decode32_ssse3(codes.as_ptr(), &t.i8s, simd_scale, &mut got) };
+                assert_eq!(got, want, "ssse3 e={e}");
+            }
+            if available(SimdLevel::Avx2) {
+                got.fill(0.0);
+                unsafe { decode32_avx2(codes.as_ptr(), &t.i8s, simd_scale, &mut got) };
+                assert_eq!(got, want, "avx2 e={e}");
+            }
+        }
+    }
+}

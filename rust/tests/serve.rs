@@ -6,11 +6,11 @@
 
 use tetrajet::coordinator::{PackedSeg, TrainState};
 use tetrajet::data::{EvalSet, SynthVision};
-use tetrajet::quant::{e2m1, MxQuantizer, PackedMx, Quantizer, Scaling};
+use tetrajet::quant::{e2m1, e3m0, Int4Quantizer, MxQuantizer, PackedMx, Quantizer, Scaling};
 use tetrajet::runtime::Manifest;
 use tetrajet::serve::{
-    fused_matmul, matmul_ref, PackedVit, ServeConfig, ServeEngine, ServeGeom,
-    ServeSession,
+    dense_matmul_at, fused_matmul, fused_matmul_at, matmul_ref, simd, PackedVit, ServeConfig,
+    ServeEngine, ServeGeom, ServeSession, SimdLevel,
 };
 use tetrajet::testing::{check, gen_f32_vec};
 use tetrajet::util::json::Json;
@@ -47,6 +47,72 @@ fn prop_fused_matmul_equals_dequant_then_matmul() {
             })
         },
     );
+}
+
+#[test]
+fn prop_every_dispatch_level_is_bit_identical() {
+    // The same seeded (x, w, bias) through the scalar, SSSE3, and AVX2
+    // kernels (skipping levels the host lacks) over ragged contraction
+    // dims, row sub-ranges, and MX (both formats) + INT4 packings —
+    // all dispatch levels and both kernels must agree byte for byte.
+    check(
+        "scalar == ssse3 == avx2 (fused and dense)",
+        48,
+        |r| {
+            let d = [32usize, 48, 57, 64, 96][r.below(5)];
+            let n = 1 + r.below(4);
+            let rows = 1 + r.below(10);
+            let x = gen_f32_vec(r, n * d, 1.0);
+            let w = gen_f32_vec(r, rows * d, 0.5);
+            let bias = gen_f32_vec(r, rows, 0.1);
+            let with_bias = r.below(2) == 0;
+            let row0 = r.below(rows);
+            let packing = r.below(3); // 0 = e2m1, 1 = e3m0, 2 = int4
+            (d, n, rows, x, w, bias, with_bias, row0, packing)
+        },
+        |(d, n, rows, x, w, bias, with_bias, row0, packing)| {
+            let mut p = PackedMx::default();
+            match *packing {
+                0 => MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree }
+                    .quantize_packed(w, *d, &mut p),
+                1 => MxQuantizer { fmt: e3m0(), scaling: Scaling::Floor }
+                    .quantize_packed(w, *d, &mut p),
+                _ => Int4Quantizer.quantize_packed(w, *d, &mut p),
+            }
+            let sub = *rows - *row0;
+            let b = with_bias.then_some(&bias[*row0..]);
+            let want = fused_matmul_at(SimdLevel::Off, x, *n, &p, *row0, sub, b, 1);
+            let wq = p.dequantize();
+            let wsub = &wq[row0 * d..rows * d];
+            let dense_off = dense_matmul_at(SimdLevel::Off, x, *n, *d, wsub, sub, b, 1);
+            // Scalar fused == scalar dense over the dequantized rows.
+            if want != dense_off {
+                return false;
+            }
+            [SimdLevel::Ssse3, SimdLevel::Avx2].iter().all(|&l| {
+                !simd::available(l)
+                    || (fused_matmul_at(l, x, *n, &p, *row0, sub, b, 2) == want
+                        && dense_matmul_at(l, x, *n, *d, wsub, sub, b, 2) == want)
+            })
+        },
+    );
+}
+
+#[test]
+fn tj_simd_env_override_is_respected() {
+    // `make tier1` runs this suite a second time under TJ_SIMD=off; in
+    // that run this asserts the scalar fallback is what dispatches. In
+    // a plain run it asserts the probe's answer is what dispatches.
+    match std::env::var("TJ_SIMD") {
+        Ok(v) => {
+            if let Some(want) = SimdLevel::parse(&v) {
+                assert_eq!(simd::active(), want.min(simd::detected()));
+            }
+        }
+        Err(_) => assert_eq!(simd::active(), simd::detected()),
+    }
+    // The scalar fallback is reachable on any host, env var or not.
+    assert!(simd::available(SimdLevel::Off));
 }
 
 fn tiny_geom() -> ServeGeom {
