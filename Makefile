@@ -8,10 +8,12 @@ RUST_DIR := rust
 # `cargo bench --no-run` keeps the bench code compiling without paying
 # for a full measurement sweep. The second test run forces the scalar
 # kernel (`TJ_SIMD=off`) so the dispatch fallback path stays green on
-# hosts where it would otherwise never execute.
+# hosts where it would otherwise never execute, and widens the packed /
+# serve property tests to extra group geometries (`TJ_GEOM_SWEEP=1`
+# adds 1x8/1x16 E8M0 and 1x32 E4M3 to the default MX + NVFP4 pair).
 tier1:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q && cargo bench --no-run && cargo fmt --check
-	cd $(RUST_DIR) && TJ_SIMD=off cargo test -q
+	cd $(RUST_DIR) && TJ_SIMD=off TJ_GEOM_SWEEP=1 cargo test -q
 	$(MAKE) loadtest-smoke
 	$(MAKE) obs-smoke
 

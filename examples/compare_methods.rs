@@ -1,25 +1,169 @@
-//! Head-to-head method comparison (a mini Table 2): FP32 vs
-//! Microscaling vs TetraJet vs TetraJet+Q-EMA vs TetraJet+Q-Ramping,
-//! trained from the same initialization on the same data stream.
+//! Head-to-head method comparison, in two parts.
+//!
+//! Part 1 (always runs, no artifacts needed): MXFP4 vs NVFP4 on the
+//! packed serve substrate — same synthetic weights quantized at both
+//! group geometries (1x32 E8M0 vs 1x16 E4M3 + outlier clamp), compared
+//! on reconstruction error, packed footprint, and fused-forward
+//! throughput. Entries are merged into `results/BENCH_<pr>.json` via
+//! `benchio::merge_bench` so the perf trajectory tracks both formats.
+//!
+//! Part 2 (a mini Table 2, skipped gracefully when the XLA artifacts
+//! are absent): FP32 vs Microscaling vs TetraJet vs TetraJet+Q-EMA vs
+//! TetraJet+Q-Ramping, trained from the same initialization on the
+//! same data stream.
 //!
 //! ```bash
 //! cargo run --release --example compare_methods -- --steps 150
 //! ```
 
+use std::time::Instant;
+
 use anyhow::Result;
 use tetrajet::config::{MetricsCfg, Policy};
 use tetrajet::experiments::common::{print_table, ExpOpts, Runner};
+use tetrajet::quant::{e2m1, MxQuantizer, NvQuantizer, PackedMx, Quantizer, ScaleEnc, Scaling};
+use tetrajet::runtime::artifacts;
+use tetrajet::serve::{ActQuant, PackedVit, ServeGeom, WeightQuant};
+use tetrajet::util::benchio;
 use tetrajet::util::cli::Args;
+use tetrajet::util::json::{num, obj, s, Json};
+use tetrajet::util::rng::Rng;
+
+/// One method's packed head-to-head measurements.
+struct HeadToHead {
+    method: &'static str,
+    group_size: usize,
+    scale_enc: &'static str,
+    rel_rmse: f64,
+    packed_bytes: usize,
+    imgs_per_s: f64,
+    wall_ms: f64,
+}
+
+fn head_to_head(q: &dyn Quantizer, method: &'static str, wq: WeightQuant) -> HeadToHead {
+    // Reconstruction error on a synthetic weight matrix (the serve
+    // substrate guarantees dequantize(quantize_packed(x)) is bit-exact
+    // to the fake-quant mirror, so this is the training-side error too).
+    let (rows, cols) = (96, 256);
+    let mut rng = Rng::new(17);
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * 0.05).collect();
+    let mut p = PackedMx::default();
+    q.quantize_packed(&w, cols, &mut p);
+    let y = p.dequantize();
+    let (mut se, mut ss) = (0.0f64, 0.0f64);
+    for (a, b) in w.iter().zip(&y) {
+        se += f64::from(a - b).powi(2);
+        ss += f64::from(*a).powi(2);
+    }
+    let geom = p.geom();
+
+    // Fused-forward throughput on a small-but-real PackedVit.
+    let vit_geom = ServeGeom::new(16, 4, 64, 2, 4, 5, 4);
+    let mut rng = Rng::new(23);
+    let params: Vec<f32> =
+        (0..vit_geom.total_params()).map(|_| rng.normal() * 0.05).collect();
+    let aq = match wq {
+        WeightQuant::Nvfp4 => ActQuant::Nvfp4,
+        _ => ActQuant::Mx { fmt: e2m1(), scaling: Scaling::TruncationFree },
+    };
+    let vit = PackedVit::build(vit_geom, &params, None, wq, aq).unwrap();
+    let n = 16;
+    let px = vit_geom.img * vit_geom.img * 3;
+    let x: Vec<f32> = (0..n * px).map(|_| rng.normal()).collect();
+    vit.forward(&x, n, 1); // warm up
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        vit.forward(&x, n, 1);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    HeadToHead {
+        method,
+        group_size: geom.group_size(),
+        scale_enc: match geom.scale_enc() {
+            ScaleEnc::E8m0 => "e8m0",
+            ScaleEnc::E4m3 => "e4m3",
+        },
+        rel_rmse: (se / ss).sqrt(),
+        packed_bytes: p.bytes(),
+        imgs_per_s: n as f64 / best,
+        wall_ms: best * 1e3,
+    }
+}
+
+fn run_head_to_head(args: &Args) -> Result<()> {
+    let mx = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+    let results = vec![
+        head_to_head(
+            &mx,
+            "mxfp4",
+            WeightQuant::Mx { fmt: e2m1(), scaling: Scaling::TruncationFree },
+        ),
+        head_to_head(&NvQuantizer::nvfp4(), "nvfp4", WeightQuant::Nvfp4),
+    ];
+
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                r.method.to_string(),
+                format!("1x{} {}", r.group_size, r.scale_enc),
+                format!("{:.4}", r.rel_rmse),
+                format!("{}", r.packed_bytes),
+                format!("{:.0}", r.imgs_per_s),
+            ]
+        })
+        .collect();
+    print_table(
+        "packed substrate head-to-head (96x256 weights, fused serve forward)",
+        &["method", "geometry", "rel rmse", "packed bytes", "imgs/s"],
+        &rows,
+    );
+
+    let pr = args.get_u64("bench-pr", 9)?;
+    let default_out = format!("results/BENCH_{pr}.json");
+    let out = std::path::PathBuf::from(args.get_or("bench-out", &default_out));
+    let entries: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("case", s("quant-compare")),
+                ("method", s(r.method)),
+                ("group_size", num(r.group_size as f64)),
+                ("scale_enc", s(r.scale_enc)),
+                ("rel_rmse", num(r.rel_rmse)),
+                ("packed_bytes", num(r.packed_bytes as f64)),
+                ("imgs_per_s", num(r.imgs_per_s)),
+                ("wall_ms", num(r.wall_ms)),
+            ])
+        })
+        .collect();
+    benchio::merge_bench(&out, pr, entries)?;
+    println!("BENCH json merged into {}", out.display());
+    Ok(())
+}
 
 fn main() -> Result<()> {
     let args = Args::parse_tokens(&std::env::args().skip(1).collect::<Vec<_>>(), false)?;
+
+    run_head_to_head(&args)?;
+
     let mut opts = ExpOpts::new(true);
     opts.steps = args.get_usize("steps", 150)?;
     opts.eval_samples = args.get_usize("eval-samples", 512)?;
+    let have = |v: &str| artifacts::variant_dir(&opts.root, &opts.model, opts.batch, v).exists();
+    if !have("tetrajet") {
+        println!(
+            "note: no compiled artifacts under {} — skipping the training comparison \
+             (run `make artifacts` first)",
+            opts.root.display()
+        );
+        return Ok(());
+    }
     let mut runner = Runner::new(&opts)?;
 
     let m = MetricsCfg::off;
-    let runs = vec![
+    let mut runs = vec![
         runner.run_one("FP32", "fp32", Policy::None, m(), |_| {})?,
         runner.run_one("Microscaling", "microscaling", Policy::None, m(), |_| {})?,
         runner.run_one("TetraJet", "tetrajet", Policy::None, m(), |_| {})?,
@@ -32,6 +176,11 @@ fn main() -> Result<()> {
             |_| {},
         )?,
     ];
+    // NVFP4 artifacts are non-core (`make artifacts-full`); include the
+    // row when they are present.
+    if have("nvfp4") {
+        runs.push(runner.run_one("NVFP4", "nvfp4", Policy::None, m(), |_| {})?);
+    }
     let rows: Vec<Vec<String>> = runs
         .iter()
         .map(|r| {

@@ -34,6 +34,10 @@ pub fn all_variants() -> Vec<String> {
     }
     v.push("tj_no_wq".into());
     v.push("tj_no_wq_aq".into());
+    // NVFP4 variant (TetraJet-v2 recipe): 16-element groups, E4M3
+    // scales, outlier clamp. Not in CORE_VARIANTS — like the ablation
+    // set, its artifacts come from `make artifacts-full`.
+    v.push("nvfp4".into());
     v
 }
 
@@ -266,8 +270,9 @@ mod tests {
     #[test]
     fn variant_list_contains_paper_sets() {
         let v = all_variants();
-        assert_eq!(v.len(), 5 + 6 + 8 + 4 + 2);
+        assert_eq!(v.len(), 5 + 6 + 8 + 4 + 2 + 1);
         assert!(v.contains(&"abl_det_naive_floor".to_string())); // Microscaling combo
         assert!(v.contains(&"fmt_e3m0_e2m1".to_string()));
+        assert!(v.contains(&"nvfp4".to_string()));
     }
 }

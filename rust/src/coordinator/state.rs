@@ -25,9 +25,16 @@
 //!   u64 offset   (flat element offset into the quantized prefix)
 //!   u64 len      (elements)
 //!   u64 cols     (trailing group axis)
-//!   u8  table_id (level-decode table: 0=e2m1, 1=e3m0, 2=int4)
+//!   u8  table_id (level-decode table: 0=e2m1, 1=e3m0, 2=int4).
+//!       Bit 7 (0x80) flags a non-MX group geometry: when set, one
+//!       geometry-id byte follows (0=MX 1x32/E8M0, 1=NVFP4 1x16/E4M3).
+//!       MX sections write the plain table id — byte-identical to the
+//!       original TJCKPT02 — so old files load unchanged (geometry
+//!       defaults to MX) and old readers fail loudly on new NVFP4
+//!       files ("unknown level table id") instead of misdecoding.
 //!   f32 tensor_scale (per-tensor mode; 1.0 in grouped mode)
-//!   u64 nscales, scale bytes (E8M0, one per 1x32 group; 0 = per-tensor)
+//!   u64 nscales, scale bytes (one per group in the section's
+//!                geometry; 0 = per-tensor)
 //!   u64 ncodes,  code bytes  (two 4-bit level indices per byte)
 //! ```
 
@@ -36,10 +43,15 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::quant::{level_table_from_id, level_table_id, PackedMx};
+use crate::quant::{level_table_from_id, level_table_id, GroupGeom, PackedMx};
 
 const MAGIC_V1: &[u8; 8] = b"TJCKPT01";
 const MAGIC_V2: &[u8; 8] = b"TJCKPT02";
+
+/// High bit of the packed-section table-id byte: set when a geometry-id
+/// byte follows (see the module doc's layout). Registered table ids are
+/// tiny, so the bit is always free.
+const GEOM_FLAG: u8 = 0x80;
 
 /// One quantized manifest segment in packed form, as stored in a
 /// TJCKPT02 checkpoint: the segment's name, its flat offset into the
@@ -173,6 +185,9 @@ impl TrainState {
             if level_table_id(seg.packed.levels()).is_none() {
                 bail!("segment {:?} uses an unregistered level table", seg.name);
             }
+            if seg.packed.geom().id().is_none() {
+                bail!("segment {:?} uses an unregistered group geometry", seg.name);
+            }
             if seg.offset + seg.packed.len() > self.qw_total() {
                 bail!(
                     "segment {:?} [{}..{}) exceeds quantized prefix {}",
@@ -197,7 +212,13 @@ impl TrainState {
             write_u64(&mut f, seg.offset as u64)?;
             write_u64(&mut f, seg.packed.len() as u64)?;
             write_u64(&mut f, seg.packed.cols() as u64)?;
-            f.write_all(&[level_table_id(seg.packed.levels()).unwrap()])?;
+            let tid = level_table_id(seg.packed.levels()).unwrap();
+            let geom = seg.packed.geom();
+            if geom == GroupGeom::mx() {
+                f.write_all(&[tid])?;
+            } else {
+                f.write_all(&[tid | GEOM_FLAG, geom.id().unwrap()])?;
+            }
             f.write_all(&seg.packed.tensor_scale().to_le_bytes())?;
             write_u64(&mut f, seg.packed.scale_bytes().len() as u64)?;
             f.write_all(seg.packed.scale_bytes())?;
@@ -272,8 +293,19 @@ impl TrainState {
                 }
                 let mut b1 = [0u8; 1];
                 f.read_exact(&mut b1)?;
-                let Some(levels) = level_table_from_id(b1[0]) else {
-                    bail!("segment {name:?}: unknown level table id {}", b1[0]);
+                let has_geom = b1[0] & GEOM_FLAG != 0;
+                let tid = b1[0] & !GEOM_FLAG;
+                let Some(levels) = level_table_from_id(tid) else {
+                    bail!("segment {name:?}: unknown level table id {tid}");
+                };
+                let geom = if has_geom {
+                    f.read_exact(&mut b1)?;
+                    let Some(g) = GroupGeom::from_id(b1[0]) else {
+                        bail!("segment {name:?}: unknown group geometry id {}", b1[0]);
+                    };
+                    g
+                } else {
+                    GroupGeom::mx()
                 };
                 f.read_exact(&mut b4)?;
                 let tensor_scale = f32::from_le_bytes(b4);
@@ -289,8 +321,20 @@ impl TrainState {
                 }
                 let mut codes = vec![0u8; ncodes];
                 f.read_exact(&mut codes)?;
-                let packed = PackedMx::from_parts(len, cols, codes, scales, tensor_scale, levels)
-                    .with_context(|| format!("packed segment {name:?}"))?;
+                // from_parts_geom re-validates byte counts against the
+                // geometry and rejects invalid scale bytes (E8M0 NaN
+                // 255, out-of-range E4M3), so a corrupt section fails
+                // here with context instead of inside a serve kernel.
+                let packed = PackedMx::from_parts_geom(
+                    geom,
+                    len,
+                    cols,
+                    codes,
+                    scales,
+                    tensor_scale,
+                    levels,
+                )
+                .with_context(|| format!("packed segment {name:?}"))?;
                 segs.push(PackedSeg { name, offset, packed });
             }
         }
@@ -307,12 +351,18 @@ impl TrainState {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::{e2m1, MxQuantizer, Quantizer, Scaling};
+    use crate::quant::{e2m1, MxQuantizer, NvQuantizer, Quantizer, Scaling};
 
     fn tmp(name: &str) -> std::path::PathBuf {
         let dir = std::env::temp_dir().join("tj_ckpt_test");
         std::fs::create_dir_all(&dir).unwrap();
         dir.join(name)
+    }
+
+    /// File offset of the first packed segment's table-id byte (module
+    /// doc layout: header, 8 f32 sections, nseg, name, offset/len/cols).
+    fn tid_offset(p_len: usize, qw: usize, name_len: usize) -> usize {
+        8 + 24 + 4 * (3 * p_len + 5 * qw) + 4 + 2 + name_len + 24
     }
 
     #[test]
@@ -426,6 +476,83 @@ mod tests {
         let (t, segs) = TrainState::load_with_packed(&path).unwrap();
         assert_eq!(t.params, s.params);
         assert!(segs.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn nvfp4_packed_checkpoint_roundtrips_geometry() {
+        let path = tmp("nv.ckpt");
+        let params: Vec<f32> = (0..64).map(|i| ((i * 41) % 89) as f32 / 7.0 - 5.0).collect();
+        let s = TrainState::new(params, 64);
+        let mut p = PackedMx::default();
+        NvQuantizer::nvfp4().quantize_packed(s.qw(), 32, &mut p);
+        assert_eq!(p.geom(), GroupGeom::nvfp4());
+        let segs = vec![PackedSeg { name: "w".into(), offset: 0, packed: p.clone() }];
+        s.save_packed(&path, &segs).unwrap();
+
+        // The table-id byte carries the geometry flag, so a pre-NVFP4
+        // reader fails loudly ("unknown level table id") on this file.
+        let bytes = std::fs::read(&path).unwrap();
+        let tid = tid_offset(64, 64, 1);
+        assert_eq!(bytes[tid] & GEOM_FLAG, GEOM_FLAG);
+        assert_eq!(bytes[tid + 1], GroupGeom::nvfp4().id().unwrap());
+
+        let (_, back) = TrainState::load_with_packed(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].packed.geom(), GroupGeom::nvfp4());
+        assert_eq!(back[0].packed.codes(), p.codes());
+        assert_eq!(back[0].packed.scale_bytes(), p.scale_bytes());
+        assert_eq!(back[0].packed.dequantize(), p.dequantize());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_corrupt_scale_bytes_both_geometries() {
+        // MX section with the E8M0 NaN byte 255 injected.
+        let path = tmp("corrupt_mx.ckpt");
+        let s = TrainState::new(vec![0.75; 64], 64);
+        let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+        let mut p = PackedMx::default();
+        q.quantize_packed(s.qw(), 32, &mut p);
+        s.save_packed(&path, &[PackedSeg { name: "w".into(), offset: 0, packed: p }])
+            .unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // tid(1) + tensor_scale(4) + nscales(8) precede the scale bytes.
+        let scales_at = tid_offset(64, 64, 1) + 1 + 4 + 8;
+        bytes[scales_at] = 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = TrainState::load_with_packed(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("not a valid"), "{err:#}");
+
+        // NVFP4 section with the E4M3 NaN byte 0x7F injected.
+        let path2 = tmp("corrupt_nv.ckpt");
+        let mut p = PackedMx::default();
+        NvQuantizer::nvfp4().quantize_packed(s.qw(), 32, &mut p);
+        s.save_packed(&path2, &[PackedSeg { name: "w".into(), offset: 0, packed: p }])
+            .unwrap();
+        let mut bytes = std::fs::read(&path2).unwrap();
+        let scales_at = tid_offset(64, 64, 1) + 2 + 4 + 8;
+        bytes[scales_at] = 0x7F;
+        std::fs::write(&path2, &bytes).unwrap();
+        let err = TrainState::load_with_packed(&path2).unwrap_err();
+        assert!(format!("{err:#}").contains("not a valid"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&path2).ok();
+    }
+
+    #[test]
+    fn load_rejects_unknown_geometry_id() {
+        let path = tmp("badgeom.ckpt");
+        let s = TrainState::new(vec![0.5; 64], 64);
+        let mut p = PackedMx::default();
+        NvQuantizer::nvfp4().quantize_packed(s.qw(), 32, &mut p);
+        s.save_packed(&path, &[PackedSeg { name: "w".into(), offset: 0, packed: p }])
+            .unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[tid_offset(64, 64, 1) + 1] = 9;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = TrainState::load_with_packed(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown group geometry"), "{err:#}");
         std::fs::remove_file(&path).ok();
     }
 

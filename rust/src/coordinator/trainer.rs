@@ -16,12 +16,12 @@ use crate::coordinator::recorder::Recorder;
 use crate::coordinator::state::{PackedSeg, TrainState};
 use crate::data::{Batcher, EvalSet, SynthVision};
 use crate::metrics::{
-    latents, quant_confidence, OscTracker, PackedOscTracker, RateTracker,
+    latents_geom, quant_confidence_geom, OscTracker, PackedOscTracker, RateTracker,
 };
 use crate::obs::{Counter, FCounter, Gauge, MetricsRegistry};
 use crate::quant::{
-    fp4_format, Fp4Format, Int4Quantizer, MxQuantizer, PackedMx,
-    QemaQuantizer, Quantizer, Scaling,
+    fp4_format, Fp4Format, GroupGeom, Int4Quantizer, MxQuantizer, NvQuantizer,
+    PackedMx, QemaQuantizer, Quantizer, Scaling,
 };
 use crate::runtime::{Arg, ModelArtifacts};
 use crate::util::parallel::{default_workers, parallel_for_each_mut};
@@ -40,6 +40,7 @@ enum WqMirror {
     Mx,
     Qema,
     Int4,
+    Nvfp4,
 }
 
 /// One quantized manifest segment, pre-validated at construction to
@@ -197,6 +198,8 @@ impl<'a> Trainer<'a> {
             WqMirror::Identity
         } else if man.variant.kind == "int4" {
             WqMirror::Int4
+        } else if man.variant.kind == "nvfp4" {
+            WqMirror::Nvfp4
         } else if man.variant.qema {
             WqMirror::Qema
         } else {
@@ -292,6 +295,7 @@ impl<'a> Trainer<'a> {
                 WqMirror::Qema => QemaQuantizer { fmt, scaling, ema: &ema[seg.range()] }
                     .quantize_packed(w, seg.cols, p),
                 WqMirror::Int4 => Int4Quantizer.quantize_packed(w, seg.cols, p),
+                WqMirror::Nvfp4 => NvQuantizer::nvfp4().quantize_packed(w, seg.cols, p),
                 WqMirror::Identity => unreachable!(),
             }
         };
@@ -351,18 +355,30 @@ impl<'a> Trainer<'a> {
         self.state.save_packed(path, &segs)
     }
 
+    /// The group geometry the confidence/latent metrics evaluate under
+    /// — the NVFP4 mirror's 16-element E4M3 groups, MX for everything
+    /// else (identity included: the fp32 variant's hypothetical
+    /// quantizer is the MX one).
+    fn metric_geom(&self) -> GroupGeom {
+        match self.mirror {
+            WqMirror::Nvfp4 => GroupGeom::nvfp4(),
+            _ => GroupGeom::mx(),
+        }
+    }
+
     /// Latent weights / confidences over all quantized segments.
     pub fn snapshot_latents(&mut self) -> (Vec<f32>, Vec<f32>) {
         let arts = self.arts;
         let man = &arts.manifest;
+        let geom = self.metric_geom();
         let mut lat = Vec::with_capacity(man.qw_total);
         let mut conf = Vec::with_capacity(man.qw_total);
         let mut seg_buf = Vec::new();
         for seg in man.quantized_segments() {
             let w = &self.state.params[seg.range()];
-            latents(w, seg.cols(), self.fmt, self.scaling, &mut seg_buf);
+            latents_geom(w, seg.cols(), self.fmt, self.scaling, geom, &mut seg_buf);
             lat.extend_from_slice(&seg_buf);
-            quant_confidence(w, seg.cols(), self.fmt, self.scaling, &mut seg_buf);
+            quant_confidence_geom(w, seg.cols(), self.fmt, self.scaling, geom, &mut seg_buf);
             conf.extend_from_slice(&seg_buf);
         }
         (lat, conf)
@@ -508,13 +524,21 @@ impl<'a> Trainer<'a> {
         let arts = self.arts;
         let man = &arts.manifest;
         let (qn, qp) = (self.fmt.qn(), self.fmt.qp());
+        let geom = self.metric_geom();
         let mut all_lat = Vec::with_capacity(man.qw_total);
         let mut all_conf = Vec::with_capacity(man.qw_total);
         for seg in man.quantized_segments() {
             let w = &self.state.params[seg.range()];
-            latents(w, seg.cols(), self.fmt, self.scaling, &mut self.scratch_lat);
+            latents_geom(w, seg.cols(), self.fmt, self.scaling, geom, &mut self.scratch_lat);
             all_lat.extend_from_slice(&self.scratch_lat);
-            quant_confidence(w, seg.cols(), self.fmt, self.scaling, &mut self.scratch_conf);
+            quant_confidence_geom(
+                w,
+                seg.cols(),
+                self.fmt,
+                self.scaling,
+                geom,
+                &mut self.scratch_conf,
+            );
             all_conf.extend_from_slice(&self.scratch_conf);
         }
         self.rec.push_conf_snapshot(step, &all_conf, &all_lat, qn, qp);

@@ -85,7 +85,7 @@ serve options:
                     whole run deterministic for a given seed
   --service-ms F    virtual-pace per-image service time (default 1.0)
   --bench-out PATH  BENCH json file (default results/BENCH_<pr>.json)
-  --bench-pr N      PR number stamped into the BENCH file (default 8)
+  --bench-pr N      PR number stamped into the BENCH file (default 9)
   --gate-tol F      regression tolerance vs the previous BENCH_*.json
                     (default 0.10 = 10%)
   --strict-gate     exit nonzero when a regression is flagged
@@ -618,7 +618,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let entry = obj(fields);
         println!("BENCH {}", entry.to_string());
 
-        let pr = args.get_u64("bench-pr", 8)?;
+        let pr = args.get_u64("bench-pr", 9)?;
         let default_out = format!("results/BENCH_{pr}.json");
         let out = std::path::PathBuf::from(args.get_or("bench-out", &default_out));
         let dir = out.parent().map(std::path::Path::to_path_buf).unwrap_or_default();

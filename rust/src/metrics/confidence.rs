@@ -7,8 +7,7 @@
 //! oscillate); confidence 1 means it sits as far from any threshold as
 //! its level allows.
 
-use crate::quant::formats::{exp2i, scale_exponent, Fp4Format, Scaling};
-use crate::quant::GROUP;
+use crate::quant::formats::{Fp4Format, GroupGeom, Scaling};
 
 /// Latent weights w/S (clamped to [Qn, Qp] like the quantizer input)
 /// for a 1x32-grouped matrix. Used for the Fig. 4 latent distribution.
@@ -19,12 +18,29 @@ pub fn latents(
     scaling: Scaling,
     out: &mut Vec<f32>,
 ) {
+    latents_geom(w, cols, fmt, scaling, GroupGeom::mx(), out);
+}
+
+/// [`latents`] at an explicit group geometry: the shared scale S is the
+/// geometry's encoded-then-decoded scale byte (E8M0 power of two for
+/// MX, E4M3 for NVFP4), so the latent matches what the quantizer of
+/// that geometry actually divides by. An all-zero group (E4M3 scale 0)
+/// has latent 0 everywhere.
+pub fn latents_geom(
+    w: &[f32],
+    cols: usize,
+    fmt: &Fp4Format,
+    scaling: Scaling,
+    geom: GroupGeom,
+    out: &mut Vec<f32>,
+) {
     out.clear();
     out.reserve(w.len());
     for row in w.chunks_exact(cols) {
-        for g in row.chunks(GROUP) {
+        for g in row.chunks(geom.group_size()) {
             let max_abs = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-            let inv = 1.0 / exp2i(scale_exponent(max_abs, fmt, scaling));
+            let scale = geom.decode_scale(geom.encode_scale(max_abs, fmt, scaling));
+            let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
             for &v in g {
                 out.push((v * inv).clamp(fmt.qn(), fmt.qp()));
             }
@@ -40,13 +56,27 @@ pub fn quant_confidence(
     scaling: Scaling,
     out: &mut Vec<f32>,
 ) {
+    quant_confidence_geom(w, cols, fmt, scaling, GroupGeom::mx(), out);
+}
+
+/// [`quant_confidence`] at an explicit group geometry (see
+/// [`latents_geom`] for the scale convention).
+pub fn quant_confidence_geom(
+    w: &[f32],
+    cols: usize,
+    fmt: &Fp4Format,
+    scaling: Scaling,
+    geom: GroupGeom,
+    out: &mut Vec<f32>,
+) {
     out.clear();
     out.reserve(w.len());
     let nb = fmt.boundaries.len();
     for row in w.chunks_exact(cols) {
-        for g in row.chunks(GROUP) {
+        for g in row.chunks(geom.group_size()) {
             let max_abs = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-            let inv = 1.0 / exp2i(scale_exponent(max_abs, fmt, scaling));
+            let scale = geom.decode_scale(geom.encode_scale(max_abs, fmt, scaling));
+            let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
             for &v in g {
                 let y = (v * inv).clamp(fmt.qn(), fmt.qp());
                 let j = fmt.level_index(y); // level y rounds to
@@ -106,6 +136,31 @@ mod tests {
         // floor scaling of the same block truncates to Qp.
         latents(&w, 32, fmt, Scaling::Floor, &mut l);
         assert_eq!(l[0], 6.0); // 31/4 = 7.75 clamped to 6
+    }
+
+    #[test]
+    fn geom_variants_match_legacy_at_mx_and_stay_bounded_at_nvfp4() {
+        let fmt = e2m1();
+        let w: Vec<f32> = (0..192).map(|i| ((i * 29) % 97) as f32 / 13.0 - 3.5).collect();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        // MX geometry reproduces the legacy functions bit-for-bit.
+        latents(&w, 48, fmt, Scaling::TruncationFree, &mut a);
+        latents_geom(&w, 48, fmt, Scaling::TruncationFree, GroupGeom::mx(), &mut b);
+        assert_eq!(a, b);
+        quant_confidence(&w, 48, fmt, Scaling::TruncationFree, &mut a);
+        quant_confidence_geom(&w, 48, fmt, Scaling::TruncationFree, GroupGeom::mx(), &mut b);
+        assert_eq!(a, b);
+        // NVFP4 geometry: latents clamped to the grid range, confidence
+        // still in [0, 1].
+        latents_geom(&w, 48, fmt, Scaling::TruncationFree, GroupGeom::nvfp4(), &mut a);
+        assert_eq!(a.len(), w.len());
+        assert!(a.iter().all(|&l| (fmt.qn()..=fmt.qp()).contains(&l)));
+        quant_confidence_geom(&w, 48, fmt, Scaling::TruncationFree, GroupGeom::nvfp4(), &mut b);
+        assert!(b.iter().all(|&c| (0.0..=1.0).contains(&c)));
+        // All-zero group at E4M3 scale 0 maps to latent 0, not NaN.
+        let z = vec![0.0f32; 16];
+        latents_geom(&z, 16, fmt, Scaling::TruncationFree, GroupGeom::nvfp4(), &mut a);
+        assert!(a.iter().all(|&l| l == 0.0));
     }
 
     #[test]

@@ -19,6 +19,6 @@ pub mod confidence;
 pub mod oscillation;
 pub mod rate;
 
-pub use confidence::{latents, quant_confidence};
+pub use confidence::{latents, latents_geom, quant_confidence, quant_confidence_geom};
 pub use oscillation::{OscTracker, OscWindow, PackedOscTracker};
 pub use rate::RateTracker;

@@ -394,6 +394,46 @@ mod tests {
         }
 
         #[test]
+        fn matches_f32_tracker_at_nvfp4_geometry() {
+            // Same parity harness, but the packed mirror is NVFP4:
+            // 16-element groups with E4M3 scale bytes. The tracker is
+            // geometry-agnostic because it only speaks for_each_group /
+            // group_flips.
+            use crate::quant::NvQuantizer;
+            let q = NvQuantizer::nvfp4();
+            let cols = 24; // ragged at group size 16 (16 + 8)
+            let pack = |w: &[f32]| {
+                let mut p = PackedMx::default();
+                q.quantize_packed(w, cols, &mut p);
+                p
+            };
+            let fake = |w: &[f32]| {
+                let mut out = vec![0.0; w.len()];
+                q.quantize_f32(w, cols, &mut out);
+                out
+            };
+            let mut traj = Vec::new();
+            for t in 0..8 {
+                let mut w: Vec<f32> = (0..cols * 2).map(|i| (i as f32 * 0.13).sin()).collect();
+                w[0] = if t % 2 == 0 { 0.749 } else { 0.751 };
+                w[1] = 0.1 * t as f32;
+                w[5] = 6.0;
+                traj.push(w);
+            }
+            let mut tf = OscTracker::new(&traj[0], &fake(&traj[0]));
+            let mut tp = PackedOscTracker::new(&traj[0], &[pack(&traj[0])]);
+            for w in &traj[1..] {
+                tf.observe(w, &fake(w));
+                tp.observe(w, &[pack(w)]);
+            }
+            let (mut ff, mut fp) = (Vec::new(), Vec::new());
+            tf.flip_freq_into(&mut ff);
+            tp.flip_freq_into(&mut fp);
+            assert_eq!(ff, fp, "flip frequencies diverge at nvfp4 geometry");
+            assert_eq!(tf.ratios(), tp.ratios(), "ratios diverge at nvfp4 geometry");
+        }
+
+        #[test]
         fn static_packed_window_counts_nothing() {
             let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
             let w: Vec<f32> = (0..32).map(|i| i as f32 * 0.1).collect();

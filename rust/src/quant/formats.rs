@@ -1,9 +1,17 @@
-//! FP4 format tables + exact binary helpers (mirror of formats.py).
+//! FP4 format tables + exact binary helpers (mirror of formats.py),
+//! plus the group geometry ([`GroupGeom`]) the packed substrate is
+//! parameterized over: MX (32-element groups, E8M0 power-of-two scale
+//! bytes) and NVFP4 (16-element groups, E4M3 scale bytes).
 
 use std::sync::OnceLock;
 
-/// MX group size (1x32 / 32x1).
+use anyhow::{bail, Result};
+
+/// MX group size (1x32 / 32x1) — the default [`GroupGeom`].
 pub const GROUP: usize = 32;
+
+/// NVFP4 group size (TetraJet-v2 recipe).
+pub const NVFP4_GROUP: usize = 16;
 
 pub const SCALE_EXP_MIN: i32 = -127;
 pub const SCALE_EXP_MAX: i32 = 127;
@@ -133,6 +141,188 @@ pub fn exp2i(s: i32) -> f32 {
     } else {
         // Subnormal result.
         f32::from_bits(1u32 << (s + 149) as u32)
+    }
+}
+
+/// Exact decode of an E4M3 (FP8, bias 7) byte. Subnormals (`exp == 0`)
+/// decode as `m/8 * 2^-6`; the all-ones mantissa at `exp == 15` is NaN
+/// (no infinities in this encoding), everything else is a normal
+/// `(1 + m/8) * 2^(exp - 7)` up to the 448 maximum. Every finite E4M3
+/// value is exactly representable in f32, so this is the E4M3 analogue
+/// of [`exp2i`] for scale-byte decoding.
+#[inline]
+pub fn e4m3_decode(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((b >> 3) & 0x0F) as i32;
+    let m = (b & 0x07) as f32;
+    if e == 15 && m == 7.0 {
+        return f32::NAN;
+    }
+    let mag = if e == 0 { m * exp2i(-9) } else { (1.0 + m / 8.0) * exp2i(e - 7) };
+    sign * mag
+}
+
+/// Largest finite E4M3 byte (448.0); `0x7F` is the NaN encoding.
+pub const E4M3_MAX_BYTE: u8 = 0x7E;
+
+/// Smallest non-negative E4M3 byte whose decoded value is `>= v`
+/// (truncation-free "ceiling" encode for group scales: the encoded
+/// scale never undershoots `max/Qp`, so the group max never clips).
+/// Saturates at the 448 maximum; exact zero encodes as byte 0.
+#[inline]
+pub fn e4m3_encode_ceil(v: f32) -> u8 {
+    debug_assert!(v >= 0.0 && v.is_finite(), "e4m3_encode_ceil({v})");
+    if v <= 0.0 {
+        return 0;
+    }
+    if v >= e4m3_decode(E4M3_MAX_BYTE) {
+        return E4M3_MAX_BYTE;
+    }
+    // Non-negative E4M3 bytes decode monotonically, so the smallest
+    // byte with decode >= v is a partition point.
+    let (mut lo, mut hi) = (0u8, E4M3_MAX_BYTE);
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if e4m3_decode(mid) >= v {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    lo
+}
+
+/// Scale-byte encoding of a group geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleEnc {
+    /// OCP MX E8M0: `byte = scale_exponent + 127`, power-of-two scales,
+    /// byte 255 reserved (NaN).
+    E8m0,
+    /// FP8 E4M3 scale bytes (NVFP4): non-power-of-two magnitudes up to
+    /// 448; sign bit and the NaN encoding are invalid for scales.
+    E4m3,
+}
+
+impl ScaleEnc {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ScaleEnc::E8m0 => "e8m0",
+            ScaleEnc::E4m3 => "e4m3",
+        }
+    }
+}
+
+/// Group geometry of a packed tensor: how many elements share one scale
+/// byte, and how that byte is encoded. Construction validates
+/// `group_size >= 1`, so downstream `groups_per_row` arithmetic can
+/// divide by the group size without re-guarding (the old hardcoded
+/// `GROUP.max(1)` guard sat uselessly on a constant divisor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupGeom {
+    group_size: usize,
+    scale_enc: ScaleEnc,
+}
+
+impl Default for GroupGeom {
+    fn default() -> GroupGeom {
+        GroupGeom::mx()
+    }
+}
+
+impl GroupGeom {
+    /// The source paper's MXFP4 geometry: 32-element groups, E8M0.
+    pub const fn mx() -> GroupGeom {
+        GroupGeom { group_size: GROUP, scale_enc: ScaleEnc::E8m0 }
+    }
+
+    /// TetraJet-v2's NVFP4 geometry: 16-element groups, E4M3.
+    pub const fn nvfp4() -> GroupGeom {
+        GroupGeom { group_size: NVFP4_GROUP, scale_enc: ScaleEnc::E4m3 }
+    }
+
+    /// Arbitrary geometry with the `group_size >= 1` invariant checked
+    /// here, once, instead of guarded at every division site.
+    pub fn new(group_size: usize, scale_enc: ScaleEnc) -> Result<GroupGeom> {
+        if group_size == 0 {
+            bail!("group geometry needs group_size >= 1");
+        }
+        Ok(GroupGeom { group_size, scale_enc })
+    }
+
+    #[inline]
+    pub fn group_size(&self) -> usize {
+        self.group_size
+    }
+
+    #[inline]
+    pub fn scale_enc(&self) -> ScaleEnc {
+        self.scale_enc
+    }
+
+    /// Groups per row of a `cols`-wide matrix, ragged tail included.
+    /// `group_size >= 1` is a construction invariant, so the division
+    /// needs no runtime guard.
+    #[inline]
+    pub fn groups_per_row(&self, cols: usize) -> usize {
+        (cols + self.group_size - 1) / self.group_size
+    }
+
+    /// Whether `b` is a valid scale byte under this encoding: E8M0
+    /// reserves 255 (NaN); E4M3 scales must be non-negative and finite
+    /// (no sign bit, not the NaN encoding).
+    #[inline]
+    pub fn scale_byte_valid(&self, b: u8) -> bool {
+        match self.scale_enc {
+            ScaleEnc::E8m0 => b != 255,
+            ScaleEnc::E4m3 => b <= E4M3_MAX_BYTE,
+        }
+    }
+
+    /// Decode a (valid) scale byte to its exact f32 scale.
+    #[inline]
+    pub fn decode_scale(&self, b: u8) -> f32 {
+        match self.scale_enc {
+            ScaleEnc::E8m0 => exp2i(b as i32 - 127),
+            ScaleEnc::E4m3 => e4m3_decode(b),
+        }
+    }
+
+    /// Scale byte for a group with max-abs `amax`: E8M0 delegates to the
+    /// paper's [`scale_exponent`] rule; E4M3 ceiling-encodes `amax/Qp`
+    /// (truncation-free by construction; zero groups encode byte 0).
+    #[inline]
+    pub fn encode_scale(&self, amax: f32, fmt: &Fp4Format, scaling: Scaling) -> u8 {
+        match self.scale_enc {
+            ScaleEnc::E8m0 => (scale_exponent(amax, fmt, scaling) + 127) as u8,
+            ScaleEnc::E4m3 => {
+                if amax == 0.0 {
+                    0
+                } else {
+                    e4m3_encode_ceil(amax / fmt.qp())
+                }
+            }
+        }
+    }
+
+    /// Stable on-disk identifier for the checkpoint geometry byte
+    /// (TJCKPT02 packed sections). Only registered geometries serialize.
+    pub fn id(&self) -> Option<u8> {
+        if *self == GroupGeom::mx() {
+            Some(0)
+        } else if *self == GroupGeom::nvfp4() {
+            Some(1)
+        } else {
+            None
+        }
+    }
+
+    /// Inverse of [`GroupGeom::id`].
+    pub fn from_id(id: u8) -> Option<GroupGeom> {
+        match id {
+            0 => Some(GroupGeom::mx()),
+            1 => Some(GroupGeom::nvfp4()),
+            _ => None,
+        }
     }
 }
 
@@ -269,6 +459,96 @@ mod tests {
                 assert_eq!((q1, q2), (w1, w2), "y={y} fmt={}", fmt.name);
             }
         }
+    }
+
+    #[test]
+    fn e4m3_decode_spot_values() {
+        assert_eq!(e4m3_decode(0x00), 0.0);
+        assert_eq!(e4m3_decode(0x01), 0.001953125); // smallest subnormal 2^-9
+        assert_eq!(e4m3_decode(0x07), 7.0 * 0.001953125); // largest subnormal
+        assert_eq!(e4m3_decode(0x08), 0.015625); // smallest normal 2^-6
+        assert_eq!(e4m3_decode(0x38), 1.0); // exp 7 (bias) mantissa 0
+        assert_eq!(e4m3_decode(0x39), 1.125);
+        assert_eq!(e4m3_decode(E4M3_MAX_BYTE), 448.0);
+        assert!(e4m3_decode(0x7F).is_nan(), "S.1111.111 is NaN");
+        assert_eq!(e4m3_decode(0xB8), -1.0, "sign bit negates");
+    }
+
+    #[test]
+    fn e4m3_positive_bytes_decode_monotonically() {
+        for b in 0..E4M3_MAX_BYTE {
+            assert!(
+                e4m3_decode(b) < e4m3_decode(b + 1),
+                "byte {b} not strictly below byte {}",
+                b + 1
+            );
+        }
+    }
+
+    #[test]
+    fn e4m3_encode_ceil_is_smallest_not_below() {
+        // Every grid value encodes to itself...
+        for b in 0..=E4M3_MAX_BYTE {
+            assert_eq!(e4m3_encode_ceil(e4m3_decode(b)), b);
+        }
+        // ...and off-grid values round up, never down (truncation-free).
+        for b in 0..E4M3_MAX_BYTE {
+            let mid = (e4m3_decode(b) + e4m3_decode(b + 1)) / 2.0;
+            let got = e4m3_encode_ceil(mid);
+            assert_eq!(got, b + 1, "midpoint {mid} must encode upward");
+            assert!(e4m3_decode(got) >= mid);
+        }
+        // Saturation at the max finite value.
+        assert_eq!(e4m3_encode_ceil(1e6), E4M3_MAX_BYTE);
+        assert_eq!(e4m3_encode_ceil(0.0), 0);
+        // Positive inputs never encode to the zero byte.
+        assert_eq!(e4m3_decode(e4m3_encode_ceil(1e-9)), 0.001953125);
+    }
+
+    #[test]
+    fn group_geom_construction_and_ids() {
+        assert_eq!(GroupGeom::default(), GroupGeom::mx());
+        assert_eq!(GroupGeom::mx().group_size(), 32);
+        assert_eq!(GroupGeom::nvfp4().group_size(), 16);
+        assert_eq!(GroupGeom::nvfp4().scale_enc(), ScaleEnc::E4m3);
+        assert!(GroupGeom::new(0, ScaleEnc::E8m0).is_err(), "group_size 0 rejected");
+        let g8 = GroupGeom::new(8, ScaleEnc::E8m0).unwrap();
+        assert_eq!(g8.groups_per_row(20), 3);
+        assert_eq!(g8.id(), None, "unregistered geometry has no checkpoint id");
+        for id in [0u8, 1] {
+            assert_eq!(GroupGeom::from_id(id).unwrap().id(), Some(id));
+        }
+        assert!(GroupGeom::from_id(7).is_none());
+    }
+
+    #[test]
+    fn group_geom_scale_byte_validity() {
+        let mx = GroupGeom::mx();
+        assert!(mx.scale_byte_valid(0) && mx.scale_byte_valid(254));
+        assert!(!mx.scale_byte_valid(255), "E8M0 NaN byte rejected");
+        let nv = GroupGeom::nvfp4();
+        assert!(nv.scale_byte_valid(0) && nv.scale_byte_valid(E4M3_MAX_BYTE));
+        assert!(!nv.scale_byte_valid(0x7F), "E4M3 NaN byte rejected");
+        assert!(!nv.scale_byte_valid(0x80), "negative E4M3 scale rejected");
+    }
+
+    #[test]
+    fn group_geom_encode_decode_roundtrip() {
+        let mx = GroupGeom::mx();
+        // E8M0 matches the legacy scale_exponent + exp2i pipeline.
+        let b = mx.encode_scale(31.0, e2m1(), Scaling::TruncationFree);
+        assert_eq!(b as i32 - 127, 3);
+        assert_eq!(mx.decode_scale(b), 8.0);
+        // E4M3 never undershoots amax/Qp (no truncation of the max).
+        let nv = GroupGeom::nvfp4();
+        for amax in [0.001f32, 0.3, 1.0, 5.7, 31.0, 2000.0] {
+            let b = nv.encode_scale(amax, e2m1(), Scaling::TruncationFree);
+            let s = nv.decode_scale(b);
+            if amax / 6.0 <= 448.0 {
+                assert!(s >= amax / 6.0, "amax={amax}: scale {s} truncates");
+            }
+        }
+        assert_eq!(nv.encode_scale(0.0, e2m1(), Scaling::TruncationFree), 0);
     }
 
     #[test]

@@ -17,20 +17,27 @@
 //!   byte per 1x32 group (~7.5x smaller than the f32 fake-quant
 //!   mirror). `dequantize(quantize_packed(x))` is bit-exact to the
 //!   fake-quant output, so every consumer can pick codes or floats.
-//! * [`mx`] / [`qema`] / [`int4`] — the concrete quantizers, each
-//!   offering free functions (allocating + `_into`) and a `Quantizer`
-//!   impl ([`MxQuantizer`], [`QemaQuantizer`], [`Int4Quantizer`]); all
-//!   grouped variants share one group loop (`mx::for_each_group`).
+//! * [`mx`] / [`qema`] / [`int4`] / [`nvfp4`] — the concrete
+//!   quantizers, each offering free functions (allocating + `_into`)
+//!   and a `Quantizer` impl ([`MxQuantizer`], [`QemaQuantizer`],
+//!   [`Int4Quantizer`], [`NvQuantizer`]); all grouped variants share
+//!   one group loop built on `packed::group_ranges`.
+//!
+//! Group geometry (group size + scale-byte encoding) is a runtime
+//! parameter, [`GroupGeom`]: MX (1x32, E8M0) is the default; NVFP4
+//! (1x16, E4M3, outlier clamp) rides the same substrate.
 
 pub mod formats;
 pub mod int4;
 pub mod mx;
+pub mod nvfp4;
 pub mod packed;
 pub mod qema;
 
 pub use formats::{
-    bracket, e2m1, e3m0, fp4_format, round_det, scale_exponent, Fp4Format,
-    Scaling, GROUP,
+    bracket, e2m1, e3m0, e4m3_decode, e4m3_encode_ceil, fp4_format, round_det,
+    scale_exponent, Fp4Format, GroupGeom, ScaleEnc, Scaling, E4M3_MAX_BYTE,
+    GROUP, NVFP4_GROUP,
 };
 pub use int4::{int4_quantize, int4_quantize_into, Int4Quantizer};
 pub use mx::{
@@ -38,7 +45,9 @@ pub use mx::{
     mx_quantize_cols_with_scales, mx_quantize_stoch_cols,
     mx_quantize_stoch_cols_into, mx_scale_bytes, MxQuantizer,
 };
+pub use nvfp4::{nvfp4_quantize_cols, NvQuantizer, NVFP4_CLAMP_K};
 pub use packed::{
-    level_table_from_id, level_table_id, PackedMx, Quantizer, E8M0_BIAS,
+    group_ranges, level_table_from_id, level_table_id, PackedMx, Quantizer,
+    E8M0_BIAS,
 };
 pub use qema::{qema_quantize_cols, qema_quantize_cols_into, QemaQuantizer};

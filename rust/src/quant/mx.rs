@@ -12,7 +12,7 @@
 //! [`MxQuantizer`] is the [`Quantizer`](super::packed::Quantizer)-trait
 //! face of the deterministic path.
 
-use super::formats::{bracket, exp2i, round_det, scale_exponent, Fp4Format, Scaling};
+use super::formats::{bracket, exp2i, round_det, scale_exponent, Fp4Format, Scaling, GROUP};
 use super::packed::{PackedMx, Quantizer, E8M0_BIAS};
 
 /// Iterate the 1x32 groups of a row-major `(rows, cols)` matrix,
@@ -31,7 +31,7 @@ pub(crate) fn for_each_group<F>(
     F: FnMut(std::ops::Range<usize>, i32, f32),
 {
     assert_eq!(x.len() % cols.max(1), 0);
-    super::packed::group_ranges(x.len(), cols, |_g, a, b| {
+    super::packed::group_ranges(x.len(), cols, GROUP, |_g, a, b| {
         let max_abs = x[a..b].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         let s = scale_exponent(max_abs, fmt, scaling);
         f(a..b, s, exp2i(s));
@@ -141,7 +141,7 @@ pub fn mx_quantize_cols_with_scales(
 ) {
     assert_eq!(out.len(), x.len());
     let mut g = 0usize;
-    super::packed::group_ranges(x.len(), cols, |_gi, a, b| {
+    super::packed::group_ranges(x.len(), cols, GROUP, |_gi, a, b| {
         let scale = exp2i(scales[g] as i32 - E8M0_BIAS);
         g += 1;
         let inv = 1.0 / scale;

@@ -1,0 +1,291 @@
+//! NVFP4 fake-quantization: the TetraJet-v2 recipe transplanted onto
+//! the shared packed substrate.
+//!
+//! NVFP4 keeps the E2M1 element grid but swaps the group geometry:
+//! 16-element groups with an E4M3 scale byte per group (vs MX's
+//! 32-element groups with E8M0 power-of-two bytes), preceded by a
+//! per-tensor outlier clamp at `NVFP4_CLAMP_K * RMS` that stops a
+//! single outlier from washing out its group's resolution. Scale bytes
+//! are chosen truncation-free: the smallest E4M3 value `>= amax / Qp`,
+//! so the group max is always representable (the paper's M=31
+//! argument, carried to a non-power-of-two scale grid).
+//!
+//! [`NvQuantizer`] is geometry-parameterized: at the MX geometry with
+//! the clamp disabled it reproduces [`MxQuantizer`](super::mx::MxQuantizer)
+//! bit-exactly (property-tested), which pins the two pipelines
+//! together. `dequantize(quantize_packed(x)) == quantize_f32(x)` holds
+//! at every geometry by the same argument as the MX path: `round_det`
+//! lands exactly on a level, and the code indexes that same level.
+
+use super::formats::{e2m1, round_det, Fp4Format, GroupGeom, Scaling};
+use super::packed::{group_ranges, PackedMx, Quantizer};
+
+/// Outlier-clamp multiplier of the NVFP4 recipe: values are clamped to
+/// `+-NVFP4_CLAMP_K * RMS(x)` before scales are computed. TetraJet-v2
+/// reports the recipe is insensitive in 8..16; 12 is the midpoint.
+pub const NVFP4_CLAMP_K: f32 = 12.0;
+
+/// NVFP4 (and generally geometry-parameterized) fake quantizer.
+#[derive(Debug, Clone, Copy)]
+pub struct NvQuantizer {
+    pub fmt: &'static Fp4Format,
+    /// Used only by E8M0 geometries (power-of-two scale selection);
+    /// E4M3 scale bytes are always truncation-free.
+    pub scaling: Scaling,
+    pub geom: GroupGeom,
+    /// Clamp multiplier; `f32::INFINITY` disables the outlier clamp.
+    pub clamp_k: f32,
+}
+
+impl NvQuantizer {
+    /// The NVFP4 recipe: E2M1 elements, 16-element groups, E4M3
+    /// scales, outlier clamp at [`NVFP4_CLAMP_K`] * RMS.
+    pub fn nvfp4() -> NvQuantizer {
+        NvQuantizer {
+            fmt: e2m1(),
+            scaling: Scaling::TruncationFree,
+            geom: GroupGeom::nvfp4(),
+            clamp_k: NVFP4_CLAMP_K,
+        }
+    }
+
+    /// Arbitrary-geometry instance with the clamp disabled; at
+    /// `GroupGeom::mx()` this is bit-exact to `MxQuantizer`.
+    pub fn with_geom(fmt: &'static Fp4Format, scaling: Scaling, geom: GroupGeom) -> NvQuantizer {
+        NvQuantizer { fmt, scaling, geom, clamp_k: f32::INFINITY }
+    }
+
+    /// Per-tensor clamp threshold: `clamp_k * RMS(x)`, or infinity when
+    /// the clamp is disabled or the tensor is all-zero (clamping at 0
+    /// would erase the tensor).
+    pub fn clamp_threshold(&self, x: &[f32]) -> f32 {
+        if !self.clamp_k.is_finite() || x.is_empty() {
+            return f32::INFINITY;
+        }
+        let ss: f64 = x.iter().map(|&v| v as f64 * v as f64).sum();
+        let rms = (ss / x.len() as f64).sqrt() as f32;
+        if rms > 0.0 && rms.is_finite() {
+            self.clamp_k * rms
+        } else {
+            f32::INFINITY
+        }
+    }
+
+    /// Shared group loop: clamp, per-group amax, scale byte, then the
+    /// per-element clamp/round closure. The scale byte is encoded then
+    /// decoded so both faces round against the *representable* scale
+    /// (an E4M3 byte is not the real-valued `amax / Qp`).
+    fn for_each_group_nv<F>(&self, x: &[f32], cols: usize, mut f: F)
+    where
+        F: FnMut(std::ops::Range<usize>, u8, f32, f32),
+    {
+        assert_eq!(x.len() % cols.max(1), 0);
+        let t = self.clamp_threshold(x);
+        group_ranges(x.len(), cols, self.geom.group_size(), |_g, a, b| {
+            let amax = x[a..b].iter().fold(0.0f32, |m, &v| m.max(v.clamp(-t, t).abs()));
+            let byte = self.geom.encode_scale(amax, self.fmt, self.scaling);
+            let scale = self.geom.decode_scale(byte);
+            f(a..b, byte, scale, t);
+        });
+    }
+}
+
+impl Quantizer for NvQuantizer {
+    fn name(&self) -> &'static str {
+        "nvfp4"
+    }
+
+    fn quantize_f32(&self, x: &[f32], cols: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), x.len());
+        let fmt = self.fmt;
+        self.for_each_group_nv(x, cols, |rng, _byte, scale, t| {
+            // scale == 0 only for an all-zero group (E4M3 byte 0): map
+            // everything to exact zero instead of dividing by zero.
+            let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+            for i in rng {
+                let y = (x[i].clamp(-t, t) * inv).clamp(fmt.qn(), fmt.qp());
+                out[i] = round_det(y, fmt) * scale;
+            }
+        });
+    }
+
+    fn quantize_packed(&self, x: &[f32], cols: usize, out: &mut PackedMx) {
+        let fmt = self.fmt;
+        out.begin_grouped_geom(x.len(), cols, &fmt.levels, self.geom);
+        self.for_each_group_nv(x, cols, |rng, byte, scale, t| {
+            out.push_group_scale_byte(byte);
+            let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+            for i in rng {
+                let y = (x[i].clamp(-t, t) * inv).clamp(fmt.qn(), fmt.qp());
+                // round_det lands exactly on a level, so the code
+                // recovers the identical value on dequant.
+                out.set_code(i, fmt.level_index(round_det(y, fmt)) as u8);
+            }
+        });
+    }
+}
+
+/// Allocating NVFP4 fake-quantization at the default recipe.
+pub fn nvfp4_quantize_cols(x: &[f32], cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0; x.len()];
+    NvQuantizer::nvfp4().quantize_f32(x, cols, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::formats::{e3m0, e4m3_decode, E4M3_MAX_BYTE};
+    use crate::quant::mx::MxQuantizer;
+
+    fn sample(n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i * 37) % 113) as f32 / 9.0 - 6.0).collect()
+    }
+
+    #[test]
+    fn packed_dequant_matches_fake_quant() {
+        let q = NvQuantizer::nvfp4();
+        // 16-aligned, ragged-tail, and sub-group col counts.
+        for cols in [16usize, 24, 48, 7] {
+            let x = sample(cols * 4);
+            let mut want = vec![0.0; x.len()];
+            q.quantize_f32(&x, cols, &mut want);
+            let mut p = PackedMx::default();
+            q.quantize_packed(&x, cols, &mut p);
+            assert_eq!(p.geom(), GroupGeom::nvfp4());
+            let got = p.dequantize();
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(g.to_bits() == w.to_bits(), "cols={cols} i={i}: {g:?} != {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn mx_geometry_with_clamp_off_equals_mx_quantizer_bit_exact() {
+        let x = sample(192);
+        for fmt in [e2m1(), e3m0()] {
+            for scaling in [Scaling::TruncationFree, Scaling::Floor] {
+                for cols in [32usize, 48] {
+                    let nv = NvQuantizer::with_geom(fmt, scaling, GroupGeom::mx());
+                    let mx = MxQuantizer { fmt, scaling };
+                    let (mut a, mut b) = (vec![0.0; x.len()], vec![0.0; x.len()]);
+                    nv.quantize_f32(&x, cols, &mut a);
+                    mx.quantize_f32(&x, cols, &mut b);
+                    let same = a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits());
+                    assert!(same, "fmt={} scaling={scaling:?} cols={cols}", fmt.name);
+                    let (mut pa, mut pb) = (PackedMx::default(), PackedMx::default());
+                    nv.quantize_packed(&x, cols, &mut pa);
+                    mx.quantize_packed(&x, cols, &mut pb);
+                    assert_eq!(pa.codes(), pb.codes());
+                    assert_eq!(pa.scale_bytes(), pb.scale_bytes());
+                    assert_eq!(pa.geom(), pb.geom());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scale_bytes_are_truncation_free_e4m3() {
+        let q = NvQuantizer::nvfp4();
+        let x = sample(160);
+        let mut p = PackedMx::default();
+        q.quantize_packed(&x, 32, &mut p);
+        let t = q.clamp_threshold(&x);
+        p.for_each_group(|g, a, b| {
+            let amax = x[a..b].iter().fold(0.0f32, |m, &v| m.max(v.clamp(-t, t).abs()));
+            let byte = p.scale_byte(g);
+            assert!(byte <= E4M3_MAX_BYTE);
+            let scale = e4m3_decode(byte);
+            assert_eq!(scale, p.group_scale(g));
+            if amax > 0.0 {
+                assert!(
+                    scale >= amax / q.fmt.qp(),
+                    "group {g}: scale {scale} truncates amax {amax}"
+                );
+            } else {
+                assert_eq!(byte, 0, "all-zero group gets the zero scale byte");
+            }
+        });
+    }
+
+    #[test]
+    fn all_zero_group_and_tensor_roundtrip() {
+        let q = NvQuantizer::nvfp4();
+        let mut x = vec![0.0f32; 32];
+        x[20] = 3.0; // second 16-group non-zero, first all-zero
+        let mut p = PackedMx::default();
+        q.quantize_packed(&x, 32, &mut p);
+        assert_eq!(p.scale_byte(0), 0);
+        let d = p.dequantize();
+        assert!(d[..16].iter().all(|&v| v == 0.0));
+        assert!(d[16..].iter().any(|&v| v != 0.0));
+        // All-zero tensor: rms 0 disables the clamp, everything stays 0.
+        let z = vec![0.0f32; 48];
+        assert_eq!(nvfp4_quantize_cols(&z, 16), z);
+    }
+
+    #[test]
+    fn outlier_clamp_preserves_group_resolution() {
+        // One outlier in a tensor of small values. The clamp threshold
+        // is 12 * RMS over the whole tensor, so the tensor must be
+        // large enough for the RMS to sit well below the outlier:
+        // here RMS ~= 0.90, threshold ~= 10.8 < 24.
+        let mut x = vec![0.5f32; 1024];
+        x[0] = 24.0;
+        let t = NvQuantizer::nvfp4().clamp_threshold(&x);
+        assert!(t < 24.0, "clamp must bite the outlier (t = {t})");
+        let clamped = nvfp4_quantize_cols(&x, 1024);
+        assert!(
+            clamped[1..16].iter().all(|&v| v != 0.0),
+            "clamped recipe keeps small-value resolution: {:?}",
+            &clamped[..4]
+        );
+        // Without the clamp the outlier's group scale (>= 24/6 = 4)
+        // puts 0.5 below the rounding threshold and flushes it.
+        let q = NvQuantizer { clamp_k: f32::INFINITY, ..NvQuantizer::nvfp4() };
+        let mut unclamped = vec![0.0; x.len()];
+        q.quantize_f32(&x, 1024, &mut unclamped);
+        assert!(
+            unclamped[1..16].iter().all(|&v| v == 0.0),
+            "without the clamp the outlier flushes its group"
+        );
+        // The outlier itself lands near the clamp threshold, not its
+        // raw value.
+        assert!(clamped[0] <= t * 1.5 && clamped[0] < 24.0);
+        // An outlier-free group is untouched by the clamp.
+        assert_eq!(&clamped[16..32], &nvfp4_quantize_cols(&vec![0.5f32; 16], 16)[..]);
+    }
+
+    #[test]
+    fn packed_parts_roundtrip_keeps_geometry() {
+        // Serialize-shaped roundtrip: rebuilding from raw parts at the
+        // NVFP4 geometry (the TJCKPT02 path) reproduces the tensor.
+        let x = sample(96);
+        let q = NvQuantizer::nvfp4();
+        let mut p = PackedMx::default();
+        q.quantize_packed(&x, 48, &mut p);
+        let back = PackedMx::from_parts_geom(
+            p.geom(),
+            p.len(),
+            p.cols(),
+            p.codes().to_vec(),
+            p.scale_bytes().to_vec(),
+            p.tensor_scale(),
+            &q.fmt.levels,
+        )
+        .unwrap();
+        assert_eq!(back.dequantize(), p.dequantize());
+        assert_eq!(back.flip_count(&p), 0);
+        // The same bytes misread at MX geometry must be rejected (3
+        // groups/row at gs16 vs 2 at gs32 -> scale-count mismatch).
+        assert!(PackedMx::from_parts(
+            p.len(),
+            p.cols(),
+            p.codes().to_vec(),
+            p.scale_bytes().to_vec(),
+            p.tensor_scale(),
+            &q.fmt.levels,
+        )
+        .is_err());
+    }
+}

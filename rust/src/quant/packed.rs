@@ -5,8 +5,11 @@
 //! round-tripping every weight through f32, which costs 4 bytes of
 //! state per element and an f32 compare per flip test. `PackedMx`
 //! instead stores the *codes*: two 4-bit level indices per byte plus
-//! one E8M0 scale byte per 32-element group (~0.53 bytes/element, 7.5x
-//! smaller). Flip detection degenerates to byte compares, and the f32
+//! one scale byte per group (~0.53 bytes/element at MX geometry, 7.5x
+//! smaller). The group layout and scale encoding are carried by a
+//! [`GroupGeom`]: MX (32-element groups, E8M0 power-of-two bytes) or
+//! NVFP4 (16-element groups, E4M3 bytes) — see `quant/formats.rs`.
+//! Flip detection degenerates to byte compares, and the f32
 //! view is recovered bit-exactly on demand via [`PackedMx::dequantize_into`]
 //! — `dequantize(quantize_packed(x))` equals the fake-quant output
 //! exactly (property-tested in `tests/properties.rs` and golden-pinned
@@ -17,7 +20,7 @@
 
 use anyhow::{bail, Result};
 
-use super::formats::{e2m1, e3m0, exp2i, GROUP};
+use super::formats::{e2m1, e3m0, GroupGeom, ScaleEnc};
 
 /// Stable on-disk identifiers for the `'static` level-decode tables a
 /// [`PackedMx`] can carry (TJCKPT02 packed-checkpoint interchange).
@@ -45,19 +48,30 @@ pub fn level_table_from_id(id: u8) -> Option<&'static [f32]> {
     }
 }
 
-/// Iterate `(group_index, flat_start, flat_end)` of the row-major 1x32
-/// group layout of a `(len/cols, cols)` matrix, ragged tails included.
+/// Iterate `(group_index, flat_start, flat_end)` of the row-major
+/// 1x`group` layout of a `(len/cols, cols)` matrix, ragged tails
+/// included. Groups never cross rows at any group size, which is what
+/// keeps [`PackedMx::slice_rows`] valid for every geometry.
 /// This is THE definition of the group order: the encode side
 /// (`mx::for_each_group`, which drives `push_group_scale`) and the
 /// decode side ([`PackedMx::for_each_group`], which drives scale-byte
 /// consumption) both delegate here, so they cannot desynchronize.
 #[inline]
-pub(crate) fn group_ranges<F: FnMut(usize, usize, usize)>(len: usize, cols: usize, mut f: F) {
+pub fn group_ranges<F: FnMut(usize, usize, usize)>(
+    len: usize,
+    cols: usize,
+    group: usize,
+    mut f: F,
+) {
+    // GroupGeom::new enforces group_size >= 1; the .max(1) keeps a
+    // hand-rolled 0 from panicking step_by in release builds.
+    debug_assert!(group >= 1, "group_ranges with group size 0");
+    let group = group.max(1);
     let cols = cols.max(1);
     let mut g = 0;
     for r0 in (0..len).step_by(cols) {
-        for g0 in (0..cols).step_by(GROUP) {
-            f(g, r0 + g0, r0 + (g0 + GROUP).min(cols));
+        for g0 in (0..cols).step_by(group) {
+            f(g, r0 + g0, r0 + (g0 + group).min(cols));
             g += 1;
         }
     }
@@ -96,19 +110,23 @@ pub trait Quantizer {
 }
 
 /// Packed 4-bit quantized tensor: level codes (two per byte, low nibble
-/// = even flat index) plus either one E8M0 scale byte per 1x32 group
-/// (MX formats) or a single per-tensor f32 scale (INT4). Carries its
-/// decode table, so it dequantizes without knowing which quantizer
+/// = even flat index) plus either one scale byte per group (grouped
+/// formats) or a single per-tensor f32 scale (INT4). Carries its
+/// decode table and its [`GroupGeom`] (group size + scale-byte
+/// encoding), so it dequantizes without knowing which quantizer
 /// produced it.
 #[derive(Debug, Clone, Default)]
 pub struct PackedMx {
     codes: Vec<u8>,
-    /// E8M0 scale byte per group, row-major; empty for per-tensor mode.
+    /// Scale byte per group, row-major; empty for per-tensor mode.
+    /// Decoded per `geom.scale_enc()` (E8M0 or E4M3).
     scales: Vec<u8>,
     /// Per-tensor scale (INT4); 1.0 and unused in grouped mode.
     tensor_scale: f32,
     /// Level-decode table: `value(i) = levels[code(i)] * scale`.
     levels: &'static [f32],
+    /// Group size + scale-byte encoding; defaults to MX (1x32, E8M0).
+    geom: GroupGeom,
     len: usize,
     cols: usize,
 }
@@ -131,16 +149,25 @@ impl PackedMx {
         self.cols
     }
 
-    /// Number of 1x32 groups (0 in per-tensor mode).
+    /// Number of scale groups (0 in per-tensor mode).
     #[inline]
     pub fn num_groups(&self) -> usize {
         self.scales.len()
     }
 
-    /// Groups per row, including a ragged tail group.
+    /// Group size + scale encoding of this tensor.
+    #[inline]
+    pub fn geom(&self) -> GroupGeom {
+        self.geom
+    }
+
+    /// Groups per row, including a ragged tail group. Division is safe:
+    /// `GroupGeom::new` rejects `group_size == 0` at construction (the
+    /// former `(cols + GROUP - 1) / GROUP.max(1)` guarded only the
+    /// divisor, leaving the `+ GROUP - 1` numerator to underflow).
     #[inline]
     pub fn groups_per_row(&self) -> usize {
-        (self.cols + GROUP - 1) / GROUP.max(1)
+        self.geom.groups_per_row(self.cols)
     }
 
     /// Packed state footprint in bytes (codes + scales).
@@ -162,8 +189,8 @@ impl PackedMx {
         &self.codes
     }
 
-    /// Raw E8M0 scale bytes, one per 1x32 group in storage order
-    /// (empty in per-tensor mode).
+    /// Raw scale bytes, one per group in storage order (empty in
+    /// per-tensor mode). Encoding per [`Self::geom`].
     #[inline]
     pub fn scale_bytes(&self) -> &[u8] {
         &self.scales
@@ -175,10 +202,27 @@ impl PackedMx {
         self.tensor_scale
     }
 
-    /// Reassemble a packed tensor from serialized parts (TJCKPT02
-    /// load path). Validates the byte counts against the geometry so a
-    /// corrupt checkpoint fails here, not deep inside a serving kernel.
+    /// Reassemble a packed tensor from serialized parts at the default
+    /// MX geometry (TJCKPT02 load path for sections without a geometry
+    /// byte). See [`Self::from_parts_geom`].
     pub fn from_parts(
+        len: usize,
+        cols: usize,
+        codes: Vec<u8>,
+        scales: Vec<u8>,
+        tensor_scale: f32,
+        levels: &'static [f32],
+    ) -> Result<PackedMx> {
+        PackedMx::from_parts_geom(GroupGeom::mx(), len, cols, codes, scales, tensor_scale, levels)
+    }
+
+    /// Reassemble a packed tensor from serialized parts (TJCKPT02
+    /// load path). Validates the byte counts against the geometry and
+    /// every scale byte against the geometry's encoding (the E8M0 NaN
+    /// byte 255 and non-finite/negative E4M3 bytes are rejected) so a
+    /// corrupt checkpoint fails here, not deep inside a serving kernel.
+    pub fn from_parts_geom(
+        geom: GroupGeom,
         len: usize,
         cols: usize,
         codes: Vec<u8>,
@@ -199,9 +243,17 @@ impl PackedMx {
             if len == 0 {
                 bail!("packed scales: {} bytes for an empty tensor", scales.len());
             }
-            let groups = (len / cols) * ((cols + GROUP - 1) / GROUP);
+            let groups = (len / cols) * geom.groups_per_row(cols);
             if scales.len() != groups {
                 bail!("packed scales: {} bytes for {groups} groups", scales.len());
+            }
+            for (g, &b) in scales.iter().enumerate() {
+                if !geom.scale_byte_valid(b) {
+                    bail!(
+                        "packed scale byte {b:#04x} of group {g} is not a valid {} scale",
+                        geom.scale_enc().as_str()
+                    );
+                }
             }
         }
         if !tensor_scale.is_finite() {
@@ -221,7 +273,7 @@ impl PackedMx {
                 }
             }
         }
-        Ok(PackedMx { codes, scales, tensor_scale, levels, len, cols })
+        Ok(PackedMx { codes, scales, tensor_scale, levels, geom, len, cols })
     }
 
     /// A standalone packed tensor holding rows `[row0, row0 + nrows)`
@@ -229,8 +281,8 @@ impl PackedMx {
     /// bytes are carried over bit-for-bit — every sliced element
     /// dequantizes to exactly the value it has in the full tensor —
     /// which is what makes the row-sharded serve fleet bit-exact to the
-    /// single-engine path. Scale bytes slice directly because 1x32
-    /// groups never cross rows; codes byte-slice when the start index
+    /// single-engine path. Scale bytes slice directly because groups
+    /// never cross rows at any group size; codes byte-slice when the start index
     /// is even and are repacked nibble-by-nibble otherwise (odd
     /// `row0 * cols`). Per-tensor (INT4) mode carries the tensor scale.
     pub fn slice_rows(&self, row0: usize, nrows: usize) -> Result<PackedMx> {
@@ -258,7 +310,15 @@ impl PackedMx {
             let gpr = self.groups_per_row();
             self.scales[row0 * gpr..(row0 + nrows) * gpr].to_vec()
         };
-        PackedMx::from_parts(len, self.cols, codes, scales, self.tensor_scale, self.levels)
+        PackedMx::from_parts_geom(
+            self.geom,
+            len,
+            self.cols,
+            codes,
+            scales,
+            self.tensor_scale,
+            self.levels,
+        )
     }
 
     /// The 4-bit level code of flat element `i`.
@@ -273,25 +333,29 @@ impl PackedMx {
         self.levels[code as usize]
     }
 
-    /// Raw E8M0 byte of group `g`.
+    /// Raw scale byte of group `g` (encoding per [`Self::geom`]).
     #[inline]
     pub fn scale_byte(&self, g: usize) -> u8 {
         self.scales[g]
     }
 
-    /// Shared-scale exponent of group `g`.
+    /// Shared-scale exponent of group `g`. Only meaningful for E8M0
+    /// geometries (the SIMD fused kernel reads it); E4M3 scales are not
+    /// powers of two.
     #[inline]
     pub fn group_scale_exp(&self, g: usize) -> i32 {
+        debug_assert_eq!(self.geom.scale_enc(), ScaleEnc::E8m0);
         self.scales[g] as i32 - E8M0_BIAS
     }
 
-    /// Shared scale of group `g` (or the per-tensor scale).
+    /// Shared scale of group `g` (or the per-tensor scale), decoded per
+    /// the geometry's scale encoding.
     #[inline]
     pub fn group_scale(&self, g: usize) -> f32 {
         if self.scales.is_empty() {
             self.tensor_scale
         } else {
-            exp2i(self.group_scale_exp(g))
+            self.geom.decode_scale(self.scales[g])
         }
     }
 
@@ -303,7 +367,7 @@ impl PackedMx {
         }
         let row = i / self.cols;
         let col = i % self.cols;
-        row * self.groups_per_row() + col / GROUP
+        row * self.groups_per_row() + col / self.geom.group_size()
     }
 
     /// Dequantized value of flat element `i` (random access; use
@@ -322,10 +386,23 @@ impl PackedMx {
         &self.codes[a / 2..(b + 1) / 2]
     }
 
-    /// Start a grouped (MX) tensor: zeroed codes, scales to be pushed
-    /// row-major via [`push_group_scale`](Self::push_group_scale).
+    /// Start a grouped MX-geometry tensor: zeroed codes, scales to be
+    /// pushed row-major via [`push_group_scale`](Self::push_group_scale).
     pub(crate) fn begin_grouped(&mut self, len: usize, cols: usize, levels: &'static [f32]) {
-        self.reset(len, cols, levels);
+        self.reset(len, cols, levels, GroupGeom::mx());
+    }
+
+    /// Start a grouped tensor at an explicit geometry (NVFP4 etc.);
+    /// scales are pushed row-major via
+    /// [`push_group_scale_byte`](Self::push_group_scale_byte).
+    pub(crate) fn begin_grouped_geom(
+        &mut self,
+        len: usize,
+        cols: usize,
+        levels: &'static [f32],
+        geom: GroupGeom,
+    ) {
+        self.reset(len, cols, levels, geom);
     }
 
     /// Start a per-tensor-scaled (INT4) tensor.
@@ -336,23 +413,33 @@ impl PackedMx {
         levels: &'static [f32],
         scale: f32,
     ) {
-        self.reset(len, cols, levels);
+        self.reset(len, cols, levels, GroupGeom::mx());
         self.tensor_scale = scale;
     }
 
-    fn reset(&mut self, len: usize, cols: usize, levels: &'static [f32]) {
+    fn reset(&mut self, len: usize, cols: usize, levels: &'static [f32], geom: GroupGeom) {
         self.codes.clear();
         self.codes.resize((len + 1) / 2, 0);
         self.scales.clear();
         self.tensor_scale = 1.0;
         self.levels = levels;
+        self.geom = geom;
         self.len = len;
         self.cols = cols;
     }
 
+    /// Push an E8M0 scale exponent (MX encode path).
     pub(crate) fn push_group_scale(&mut self, s: i32) {
+        debug_assert_eq!(self.geom.scale_enc(), ScaleEnc::E8m0);
         debug_assert!((-E8M0_BIAS..=E8M0_BIAS).contains(&s));
         self.scales.push((s + E8M0_BIAS) as u8);
+    }
+
+    /// Push an already-encoded scale byte (geometry-generic encode
+    /// path, e.g. NVFP4's E4M3 bytes).
+    pub(crate) fn push_group_scale_byte(&mut self, b: u8) {
+        debug_assert!(self.geom.scale_byte_valid(b), "scale byte {b:#04x}");
+        self.scales.push(b);
     }
 
     #[inline]
@@ -367,11 +454,11 @@ impl PackedMx {
     }
 
     /// Iterate `(group_index, flat_start, flat_end)` over this tensor's
-    /// 1x32 groups in storage order (delegates to the shared
-    /// [`group_ranges`] layout definition).
+    /// groups in storage order (delegates to the shared
+    /// [`group_ranges`] layout definition at this tensor's group size).
     #[inline]
     pub fn for_each_group<F: FnMut(usize, usize, usize)>(&self, f: F) {
-        group_ranges(self.len, self.cols, f);
+        group_ranges(self.len, self.cols, self.geom.group_size(), f);
     }
 
     /// Bulk decode into a caller-owned buffer; bit-exact to the
@@ -408,6 +495,7 @@ impl PackedMx {
     pub fn flip_count(&self, prev: &PackedMx) -> usize {
         assert_eq!(self.len, prev.len);
         assert_eq!(self.cols, prev.cols);
+        assert_eq!(self.geom, prev.geom, "flip_count across geometries");
         let mut flips = 0usize;
         if self.scales.is_empty() || prev.scales.is_empty() {
             for i in 0..self.len {
@@ -438,7 +526,15 @@ impl PackedMx {
         mut on_flip: F,
     ) -> usize {
         let sb = self.scale_byte(g);
-        let exact_codes = sb == prev.scale_byte(g) && sb <= CODE_CMP_MAX_SCALE_BYTE;
+        // Equal scale bytes make code equality equivalent to value
+        // equality only when `level * scale` cannot overflow: E8M0
+        // scales reach 2^127, so cap the byte; E4M3 tops out at 448,
+        // where no finite level can overflow, so equality always holds.
+        let exact_codes = sb == prev.scale_byte(g)
+            && match self.geom.scale_enc() {
+                ScaleEnc::E8m0 => sb <= CODE_CMP_MAX_SCALE_BYTE,
+                ScaleEnc::E4m3 => true,
+            };
         if exact_codes && self.code_bytes(a, b) == prev.code_bytes(a, b) {
             return 0;
         }
@@ -629,6 +725,118 @@ mod tests {
             .is_ok());
         assert!(PackedMx::from_parts(4, 4, vec![0xFF, 0xFF], Vec::new(), 1.0, &e2m1().levels)
             .is_err());
+    }
+
+    #[test]
+    fn from_parts_rejects_invalid_scale_bytes() {
+        let lv = &e2m1().levels[..];
+        // E8M0: byte 255 is the NaN encoding — the SIMD path already
+        // treats it as ineligible; loading it must fail, not serve
+        // NaN-scaled garbage.
+        assert!(PackedMx::from_parts(32, 32, vec![0; 16], vec![255], 1.0, lv).is_err());
+        assert!(PackedMx::from_parts(32, 32, vec![0; 16], vec![254], 1.0, lv).is_ok());
+        // E4M3 (NVFP4 geometry): NaN byte 0x7F and sign-bit bytes are
+        // invalid scales.
+        let nv = GroupGeom::nvfp4();
+        for bad in [0x7Fu8, 0x80, 0xFF] {
+            assert!(
+                PackedMx::from_parts_geom(nv, 16, 16, vec![0; 8], vec![bad], 1.0, lv).is_err(),
+                "E4M3 scale byte {bad:#04x} accepted"
+            );
+        }
+        assert!(PackedMx::from_parts_geom(nv, 16, 16, vec![0; 8], vec![0x7E], 1.0, lv).is_ok());
+    }
+
+    #[test]
+    fn from_parts_geom_roundtrips_nvfp4_geometry() {
+        // 3 rows x 24 cols at group size 16 -> 2 groups/row (16 + 8
+        // ragged tail), 6 scale bytes.
+        let nv = GroupGeom::nvfp4();
+        let codes: Vec<u8> = (0..36).map(|i| ((i * 7) % 15) as u8 | ((((i * 11) % 15) as u8) << 4)).collect();
+        let scales: Vec<u8> = (0..6).map(|g| 0x30 + g as u8).collect();
+        let p = PackedMx::from_parts_geom(nv, 72, 24, codes, scales, 1.0, &e2m1().levels)
+            .unwrap();
+        assert_eq!(p.geom(), nv);
+        assert_eq!(p.groups_per_row(), 2);
+        assert_eq!(p.num_groups(), 6);
+        // group_of honors the 16-element group size.
+        assert_eq!(p.group_of(0), 0);
+        assert_eq!(p.group_of(15), 0);
+        assert_eq!(p.group_of(16), 1);
+        assert_eq!(p.group_of(24), 2, "second row starts a new group");
+        // Scales decode through E4M3, not E8M0.
+        use crate::quant::formats::e4m3_decode;
+        for g in 0..6 {
+            assert_eq!(p.group_scale(g), e4m3_decode(p.scale_byte(g)));
+        }
+        // Dequant agrees with the random-access view everywhere.
+        let d = p.dequantize();
+        for i in 0..p.len() {
+            assert_eq!(d[i], p.value(i));
+        }
+        // Wrong scale count for the geometry is rejected (6 groups at
+        // gs16, but only 3 at gs32).
+        assert!(PackedMx::from_parts_geom(
+            nv,
+            72,
+            24,
+            vec![0; 36],
+            vec![0x30; 3],
+            1.0,
+            &e2m1().levels
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn slice_rows_nvfp4_odd_nibble_and_ragged_tail() {
+        // Group size 16 doubles odd-offset incidence: cols 21 makes
+        // every odd row0 start mid-byte, and each row carries a ragged
+        // 5-element tail group (21 = 16 + 5).
+        let nv = GroupGeom::nvfp4();
+        let (rows, cols) = (5usize, 21usize);
+        let len = rows * cols;
+        let codes: Vec<u8> =
+            (0..(len + 1) / 2).map(|i| ((i * 3) % 15) as u8 | ((((i * 5) % 15) as u8) << 4)).collect();
+        let gpr = nv.groups_per_row(cols);
+        assert_eq!(gpr, 2);
+        let scales: Vec<u8> = (0..rows * gpr).map(|g| 0x20 + (g as u8) * 3).collect();
+        let p =
+            PackedMx::from_parts_geom(nv, len, cols, codes, scales, 1.0, &e2m1().levels).unwrap();
+        let full = p.dequantize();
+        for (r0, nr) in [(0usize, 2usize), (1, 3), (2, 2), (3, 1), (4, 1), (0, 5), (2, 0)] {
+            let s = p.slice_rows(r0, nr).unwrap();
+            assert_eq!(s.geom(), nv, "slice keeps the geometry");
+            assert_eq!(s.groups_per_row(), gpr);
+            assert_eq!(
+                s.dequantize(),
+                full[r0 * cols..(r0 + nr) * cols].to_vec(),
+                "r0={r0} nr={nr}"
+            );
+            // Scale bytes of the slice are the original rows' bytes.
+            assert_eq!(s.scale_bytes(), &p.scale_bytes()[r0 * gpr..(r0 + nr) * gpr]);
+        }
+        assert!(p.slice_rows(4, 2).is_err());
+    }
+
+    #[test]
+    fn e4m3_flip_fast_path_is_exact_at_max_scale() {
+        // At the E4M3 max scale (448) equal codes always mean equal
+        // values — no overflow collapse like E8M0's 2^127 scales — so
+        // the memcmp fast path must report zero flips.
+        let nv = GroupGeom::nvfp4();
+        let codes = vec![0x21u8; 8];
+        let p = PackedMx::from_parts_geom(nv, 16, 16, codes.clone(), vec![0x7E], 1.0, &e2m1().levels)
+            .unwrap();
+        let q = PackedMx::from_parts_geom(nv, 16, 16, codes, vec![0x7E], 1.0, &e2m1().levels)
+            .unwrap();
+        assert_eq!(p.flip_count(&q), 0);
+        // And a genuinely different code at the same scale is counted.
+        let mut codes2 = vec![0x21u8; 8];
+        codes2[3] = 0x25;
+        let r = PackedMx::from_parts_geom(nv, 16, 16, codes2, vec![0x7E], 1.0, &e2m1().levels)
+            .unwrap();
+        assert_eq!(r.flip_count(&p), 1);
     }
 
     #[test]

@@ -26,7 +26,9 @@
 //! per-tensor pass. `ActQuant::None` bypasses the cache entirely.
 
 use crate::obs::{Counter, MetricsRegistry};
-use crate::quant::{int4_quantize, mx_quantize_cols_with_scales, mx_scale_bytes};
+use crate::quant::{
+    int4_quantize, mx_quantize_cols_with_scales, mx_scale_bytes, nvfp4_quantize_cols,
+};
 use crate::serve::model::ActQuant;
 
 /// One memoized Q1 site: the raw input it was computed from, the
@@ -108,6 +110,10 @@ impl ActQuantCache {
                 mx_quantize_cols_with_scales(&raw, cols, fmt, &scale_bytes, x);
             }
             ActQuant::Int4 => *x = int4_quantize(&raw, None),
+            // NVFP4's outlier clamp is a whole-tensor pre-pass, so the
+            // split scale-bytes-then-values form doesn't apply; memoize
+            // the full pass like INT4 (scale_bytes stays empty).
+            ActQuant::Nvfp4 => *x = nvfp4_quantize_cols(&raw, cols),
         }
         self.slots[slot] = Some(Slot { raw, q: x.clone(), scale_bytes });
     }
@@ -175,6 +181,23 @@ mod tests {
         assert_eq!(c.stats(), (1, 1));
         assert_eq!(x, want);
         assert!(c.scale_bytes(0).is_empty());
+    }
+
+    #[test]
+    fn nvfp4_sites_memoize_full_pass() {
+        let mut c = ActQuantCache::new(1);
+        let x0: Vec<f32> = (0..96).map(|i| (i as f32 * 0.9).cos() * 3.0).collect();
+        let want = nvfp4_quantize_cols(&x0, 48);
+        let mut x = x0.clone();
+        c.quantize(0, &ActQuant::Nvfp4, &mut x, 48);
+        assert_eq!(x, want);
+        assert_eq!(c.stats(), (0, 1));
+        assert!(c.scale_bytes(0).is_empty());
+        let mut x = x0;
+        c.quantize(0, &ActQuant::Nvfp4, &mut x, 48);
+        assert_eq!(c.stats(), (1, 1));
+        let same = x.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "cached nvfp4 result must be bit-identical");
     }
 
     #[test]

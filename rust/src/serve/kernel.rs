@@ -50,7 +50,7 @@
 //! adding the bias once reproduces this kernel's output exactly
 //! (`serve/fleet.rs`).
 
-use crate::quant::{PackedMx, GROUP};
+use crate::quant::PackedMx;
 use crate::serve::simd::{self, NibbleTable, SimdLevel};
 use crate::util::parallel::parallel_for_each_mut;
 
@@ -288,6 +288,41 @@ mod tests {
         assert_eq!(p.num_groups(), 0, "per-tensor mode");
         let want = matmul_ref(&x, n, d, &p.dequantize(), rows, None);
         assert_eq!(fused_matmul(&x, n, &p, 0, rows, None, 3), want);
+    }
+
+    #[test]
+    fn fused_matches_dequant_matmul_at_nvfp4_geometry() {
+        use crate::quant::NvQuantizer;
+        let q = NvQuantizer::nvfp4();
+        let mut rng = Rng::new(17);
+        // d = 24 has a ragged 8-tail per 16-group; d = 57 adds odd-row
+        // nibble offsets; d = 64 is fully 16-aligned.
+        for (n, d, rows) in [(3usize, 24usize, 5usize), (2, 57, 4), (4, 64, 6)] {
+            let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+            let w: Vec<f32> = (0..rows * d).map(|_| rng.normal() * 0.2).collect();
+            let mut p = PackedMx::default();
+            q.quantize_packed(&w, d, &mut p);
+            let want = matmul_ref(&x, n, d, &p.dequantize(), rows, None);
+            for workers in [1, 3] {
+                assert_eq!(
+                    fused_matmul(&x, n, &p, 0, rows, None, workers),
+                    want,
+                    "n={n} d={d} rows={rows} workers={workers}"
+                );
+            }
+            // Every dispatch level agrees (NVFP4 groups take the
+            // scalar decode inside the SIMD-dispatched kernel).
+            let base = fused_matmul_at(SimdLevel::Off, &x, n, &p, 0, rows, None, 1);
+            for level in [SimdLevel::Ssse3, SimdLevel::Avx2] {
+                if crate::serve::simd::available(level) {
+                    assert_eq!(
+                        fused_matmul_at(level, &x, n, &p, 0, rows, None, 2),
+                        base,
+                        "level {level:?} d {d}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -29,8 +29,9 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::PackedSeg;
 use crate::obs::KernelMetrics;
 use crate::quant::{
-    fp4_format, int4_quantize, mx_quantize_cols, Fp4Format, Int4Quantizer,
-    MxQuantizer, PackedMx, QemaQuantizer, Quantizer, Scaling,
+    fp4_format, int4_quantize, mx_quantize_cols, nvfp4_quantize_cols, Fp4Format,
+    GroupGeom, Int4Quantizer, MxQuantizer, NvQuantizer, PackedMx, QemaQuantizer,
+    Quantizer, Scaling,
 };
 use crate::runtime::Manifest;
 use crate::serve::act::ActQuantCache;
@@ -205,6 +206,9 @@ pub enum WeightQuant {
     Mx { fmt: &'static Fp4Format, scaling: Scaling },
     Qema { fmt: &'static Fp4Format, scaling: Scaling },
     Int4,
+    /// NVFP4 recipe (TetraJet-v2): E2M1 elements, 16-element groups,
+    /// E4M3 scale bytes, outlier clamp — [`NvQuantizer::nvfp4`].
+    Nvfp4,
 }
 
 /// Activation quantizer Q^(1) applied to every quantized linear's input.
@@ -213,6 +217,8 @@ pub enum ActQuant {
     None,
     Mx { fmt: &'static Fp4Format, scaling: Scaling },
     Int4,
+    /// NVFP4 recipe, same geometry as the weight side.
+    Nvfp4,
 }
 
 /// Map a manifest variant to its forward quantization recipe (mirror of
@@ -228,6 +234,12 @@ pub fn variant_quant(man: &Manifest) -> (WeightQuant, ActQuant) {
         return (
             if q2_on { WeightQuant::Int4 } else { WeightQuant::Dense },
             if q1_on { ActQuant::Int4 } else { ActQuant::None },
+        );
+    }
+    if v.kind == "nvfp4" {
+        return (
+            if q2_on { WeightQuant::Nvfp4 } else { WeightQuant::Dense },
+            if q1_on { ActQuant::Nvfp4 } else { ActQuant::None },
         );
     }
     let fmt = fp4_format(&v.fwd_fmt).unwrap_or_else(crate::quant::e2m1);
@@ -529,6 +541,11 @@ impl PackedVit {
                     Int4Quantizer.quantize_packed(w, cols, &mut p);
                     Store::Packed(p)
                 }
+                WeightQuant::Nvfp4 => {
+                    let mut p = PackedMx::default();
+                    NvQuantizer::nvfp4().quantize_packed(w, cols, &mut p);
+                    Store::Packed(p)
+                }
             };
             stores.push(store);
         }
@@ -572,6 +589,14 @@ impl PackedVit {
             ),
             WeightQuant::Mx { fmt, .. } | WeightQuant::Qema { fmt, .. } => &fmt.levels[..],
             WeightQuant::Int4 => &crate::quant::int4::INT4_LEVELS[..],
+            WeightQuant::Nvfp4 => &NvQuantizer::nvfp4().fmt.levels[..],
+        };
+        // Likewise the group geometry: an NVFP4 checkpoint's 16-element
+        // E4M3 groups decode to garbage under MX's 32-element E8M0
+        // layout (and vice versa), so the geometry must match too.
+        let want_geom = match wq {
+            WeightQuant::Nvfp4 => GroupGeom::nvfp4(),
+            _ => GroupGeom::mx(),
         };
         for ps in packed {
             if ps.packed.levels() != want_levels {
@@ -581,6 +606,16 @@ impl PackedVit {
                      checkpoint",
                     ps.name,
                     man.variant.name
+                );
+            }
+            if ps.packed.geom() != want_geom {
+                bail!(
+                    "packed segment {:?} has group geometry {:?} but variant \
+                     {:?} expects {:?} — wrong --variant for this checkpoint",
+                    ps.name,
+                    ps.packed.geom(),
+                    man.variant.name,
+                    want_geom
                 );
             }
         }
@@ -713,6 +748,7 @@ impl PackedVit {
             ActQuant::None => {}
             ActQuant::Mx { fmt, scaling } => *x = mx_quantize_cols(x, cols, fmt, scaling),
             ActQuant::Int4 => *x = int4_quantize(x, None),
+            ActQuant::Nvfp4 => *x = nvfp4_quantize_cols(x, cols),
         }
     }
 
@@ -1235,6 +1271,56 @@ mod tests {
         // proj/fc2 have depth*dim = 64 rows in the tiny geometry.
         assert!(build().into_shards(65).is_err());
         assert!(build().into_shards(64).is_ok());
+    }
+
+    #[test]
+    fn nvfp4_fused_forward_matches_dense_mirror_bit_exact() {
+        let geom = tiny_geom();
+        let params = random_params(&geom, 31);
+        let packed =
+            PackedVit::build(geom.clone(), &params, None, WeightQuant::Nvfp4, ActQuant::Nvfp4)
+                .unwrap();
+        assert!(packed.is_fully_packed());
+        for s in &packed.stores {
+            if let Store::Packed(p) = s {
+                assert_eq!(p.geom(), GroupGeom::nvfp4());
+            }
+        }
+        // 16-element groups: one scale byte per 16 elements.
+        let qw = geom.qw_total();
+        assert_eq!(packed.quantized_weight_bytes(), qw / 2 + qw / 16);
+        let mirror = packed.to_dense();
+        let mut rng = Rng::new(33);
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * geom.img * geom.img * 3).map(|_| rng.normal()).collect();
+        let a = packed.forward(&x, batch, 1);
+        let b = mirror.forward(&x, batch, 4);
+        assert_eq!(a, b, "nvfp4 fused and dequant-mirror forwards must agree bit-for-bit");
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn nvfp4_sharded_forward_is_bit_exact_including_ragged_splits() {
+        let geom = tiny_geom();
+        let params = random_params(&geom, 37);
+        let vit =
+            PackedVit::build(geom.clone(), &params, None, WeightQuant::Nvfp4, ActQuant::Nvfp4)
+                .unwrap();
+        let mut rng = Rng::new(41);
+        let batch = 2;
+        let x: Vec<f32> = (0..batch * geom.img * geom.img * 3).map(|_| rng.normal()).collect();
+        let want = vit.forward(&x, batch, 1);
+        let qw_bytes = vit.quantized_weight_bytes();
+        for engines in [1usize, 2, 3, 5] {
+            let (trunk, shards) = vit.clone().into_shards(engines).unwrap();
+            assert_eq!(
+                shards.iter().map(VitShard::bytes).sum::<usize>(),
+                qw_bytes,
+                "nvfp4 shards must hold exactly the original code/scale bytes"
+            );
+            let got = trunk.forward_with(&x, batch, &GatherExec { shards: &shards });
+            assert_eq!(got, want, "{engines}-way nvfp4 sharded logits must be bit-exact");
+        }
     }
 
     #[test]

@@ -250,7 +250,14 @@ impl Scheduler {
             if front.taken == 0 {
                 if let Some(d) = front.deadline_ms {
                     if now_ms > d {
-                        let p = self.queue.pop_front().unwrap();
+                        // front_mut just matched, so the pop cannot
+                        // miss; if that invariant ever breaks, skip
+                        // batch formation instead of panicking the
+                        // serve loop.
+                        let Some(p) = self.queue.pop_front() else {
+                            debug_assert!(false, "queue emptied under next_batch");
+                            break;
+                        };
                         self.queued_images -= p.n;
                         expired.push(Expired { id: p.id, deadline_ms: d });
                         continue;
@@ -324,22 +331,28 @@ impl Completions {
         self.rec.record_batch(plan.m, compute_ms, done_ms);
         for span in &plan.spans {
             let chunk = &logits[span.offset * self.classes..(span.offset + span.n) * self.classes];
-            let acc = self.partial.entry(span.id).or_default();
-            acc.extend_from_slice(chunk);
-            if span.final_chunk {
-                let lg = self.partial.remove(&span.id).unwrap();
-                let latency_ms = done_ms - span.arrival_ms;
-                self.rec.record_latency(latency_ms);
-                self.done.insert(
-                    span.id,
-                    Outcome::Done(Response {
-                        id: span.id,
-                        preds: argmax_rows(&lg, self.classes),
-                        logits: lg,
-                        latency_ms,
-                    }),
-                );
+            if !span.final_chunk {
+                self.partial.entry(span.id).or_default().extend_from_slice(chunk);
+                continue;
             }
+            // Final chunk: drain the accumulated prefix, if any. A
+            // single-chunk request (the common case) never touches the
+            // partial map, so there is legitimately nothing to remove —
+            // the old `remove().unwrap()` here conflated that with the
+            // corrupt-plan case and panicked the completion loop.
+            let mut lg = self.partial.remove(&span.id).unwrap_or_default();
+            lg.extend_from_slice(chunk);
+            let latency_ms = done_ms - span.arrival_ms;
+            self.rec.record_latency(latency_ms);
+            self.done.insert(
+                span.id,
+                Outcome::Done(Response {
+                    id: span.id,
+                    preds: argmax_rows(&lg, self.classes),
+                    logits: lg,
+                    latency_ms,
+                }),
+            );
         }
     }
 
@@ -448,6 +461,57 @@ mod tests {
         assert_eq!(reg.counter("sched.rejects").get(), 1);
         assert_eq!(reg.counter("sched.expiries").get(), 1);
         assert_eq!(reg.gauge("sched.queue_depth").get_opt(), Some(0.0));
+    }
+
+    #[test]
+    fn single_chunk_requests_never_touch_partial_map() {
+        // Regression: the final-chunk path used to insert into the
+        // partial map and immediately `remove().unwrap()` — single-chunk
+        // requests must complete without the map round-trip (and without
+        // any panic opportunity on the completion loop).
+        let classes = 2;
+        let mut s = Scheduler::new(PX, 64);
+        let mut c = Completions::new(classes);
+        let t = s.try_admit(imgs(2, 1.0), 2, None, 0.0).unwrap();
+        let (_, plan) = s.next_batch(4, 1.0);
+        let plan = plan.unwrap();
+        assert!(plan.spans[0].final_chunk);
+        c.on_batch(&plan, &[1.0, 0.0, 0.0, 1.0], 2.0, 1.0);
+        assert_eq!(c.in_flight(), 0, "single-chunk span must not linger in partial");
+        let Some(Outcome::Done(r)) = c.take(t) else { panic!("should be done") };
+        assert_eq!(r.preds, vec![0, 1]);
+    }
+
+    #[test]
+    fn multi_chunk_partials_drain_exactly_on_final_chunk() {
+        // Regression for the partial-map removal path: a request split
+        // across three micro-batches accumulates, then drains exactly
+        // when its final chunk lands.
+        let classes = 1;
+        let mut s = Scheduler::new(PX, 64);
+        let mut c = Completions::new(classes);
+        let t = s.try_admit(imgs(3, 1.0), 3, None, 0.0).unwrap();
+        for step in 0..3 {
+            let (_, plan) = s.next_batch(1, step as f64 + 1.0);
+            c.on_batch(&plan.unwrap(), &[step as f32], step as f64 + 2.0, 0.5);
+            let expect_in_flight = if step < 2 { 1 } else { 0 };
+            assert_eq!(c.in_flight(), expect_in_flight, "after chunk {step}");
+        }
+        let Some(Outcome::Done(r)) = c.take(t) else { panic!("should be done") };
+        assert_eq!(r.logits, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn consecutive_expiries_drain_in_one_next_batch_pass() {
+        let mut s = Scheduler::new(PX, 64);
+        s.try_admit(imgs(1, 1.0), 1, Some(1.0), 0.0).unwrap();
+        s.try_admit(imgs(1, 2.0), 1, Some(1.5), 0.0).unwrap();
+        s.try_admit(imgs(1, 3.0), 1, None, 0.0).unwrap();
+        let (exp, plan) = s.next_batch(4, 10.0);
+        assert_eq!(exp.iter().map(|e| e.id).collect::<Vec<_>>(), vec![0, 1]);
+        let plan = plan.unwrap();
+        assert_eq!(plan.spans[0].id, 2);
+        assert_eq!(s.pending_images(), 0);
     }
 
     #[test]

@@ -31,7 +31,7 @@
 //! benches can pin a path regardless of the global state.
 
 use crate::quant::formats::exp2i;
-use crate::quant::{PackedMx, GROUP};
+use crate::quant::{GroupGeom, PackedMx, GROUP};
 
 #[cfg(target_arch = "x86_64")]
 mod x86;
@@ -296,11 +296,14 @@ impl NibbleTable {
 
 /// Decode one full weight row of `w` (row `r`, `w.cols()` elements)
 /// into `out`, bit-identical to `w.level(w.code(j)) * scale` per
-/// element. SIMD decode is used per 1x32 group when the group is
-/// full, starts on an even flat index (whole bytes), and its scale is
-/// an in-range power of two; every other group (ragged tails, rows at
-/// odd nibble offsets, E8M0 byte 255, non-power-of-two per-tensor
-/// scales) falls back to the scalar decode of exactly that group.
+/// element, at the tensor's own group geometry. SIMD decode is used
+/// per group when the geometry is MX (1x32, E8M0 — `NibbleTable`
+/// folds the scale back as a power of two, which E4M3 scales are
+/// not), the group is full, starts on an even flat index (whole
+/// bytes), and its scale is an in-range power of two; every other
+/// group (NVFP4 geometry, ragged tails, rows at odd nibble offsets,
+/// E8M0 byte 255, non-power-of-two per-tensor scales) falls back to
+/// the scalar decode of exactly that group.
 pub fn decode_row(
     level: SimdLevel,
     table: Option<&NibbleTable>,
@@ -312,20 +315,29 @@ pub fn decode_row(
     let d = w.cols();
     debug_assert_eq!(out.len(), d);
     let gpr = w.groups_per_row();
+    let gs = w.geom().group_size();
+    let mx_geom = w.geom() == GroupGeom::mx();
     let grouped = w.num_groups() > 0;
     let row0 = r * d;
     for k in 0..gpr {
-        let a = row0 + k * GROUP;
-        let b = row0 + ((k + 1) * GROUP).min(d);
+        let a = row0 + k * gs;
+        let b = row0 + ((k + 1) * gs).min(d);
         let glen = b - a;
         let (scale, simd_scale) = if grouped {
-            let e = w.group_scale_exp(r * gpr + k);
-            let ss = table.and_then(|t| (e <= 127).then(|| exp2i(e - t.k)));
-            (w.group_scale(r * gpr + k), ss)
+            let g = r * gpr + k;
+            // group_scale_exp is E8M0-only; E4M3 geometries always
+            // take the scalar path.
+            let ss = if mx_geom {
+                let e = w.group_scale_exp(g);
+                table.and_then(|t| (e <= 127).then(|| exp2i(e - t.k)))
+            } else {
+                None
+            };
+            (w.group_scale(g), ss)
         } else {
             (w.tensor_scale(), pt_simd_scale)
         };
-        let dst = &mut out[k * GROUP..k * GROUP + glen];
+        let dst = &mut out[k * gs..k * gs + glen];
         #[cfg(target_arch = "x86_64")]
         if level != SimdLevel::Off && glen == GROUP && a % 2 == 0 {
             if let (Some(t), Some(ss)) = (table, simd_scale) {

@@ -5,6 +5,7 @@
 //! and a shrunk-ish description (the failing case index is re-derivable
 //! from the seed, so failures are exactly reproducible).
 
+use crate::quant::{GroupGeom, ScaleEnc};
 use crate::util::rng::Rng;
 
 /// Run a property over `cases` generated inputs; panics with the seed
@@ -27,6 +28,22 @@ where
             );
         }
     }
+}
+
+/// The group geometries property tests sweep over. Always includes the
+/// two shipped geometries (MX 1x32/E8M0, NVFP4 1x16/E4M3); with
+/// `TJ_GEOM_SWEEP=1` in the environment (the `make tier1` second test
+/// pass) it adds off-registry combinations — small E8M0 groups and
+/// E4M3 at MX group size — to exercise the parameterization itself,
+/// not just the two products built on it.
+pub fn geom_sweep() -> Vec<GroupGeom> {
+    let mut geoms = vec![GroupGeom::mx(), GroupGeom::nvfp4()];
+    if std::env::var("TJ_GEOM_SWEEP").map_or(false, |v| v == "1") {
+        for (gs, enc) in [(8, ScaleEnc::E8m0), (16, ScaleEnc::E8m0), (32, ScaleEnc::E4m3)] {
+            geoms.push(GroupGeom::new(gs, enc).expect("sweep geometry"));
+        }
+    }
+    geoms
 }
 
 /// Generate a random f32 vector with interesting magnitude spread:

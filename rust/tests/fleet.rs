@@ -15,20 +15,33 @@ fn tiny_geom() -> ServeGeom {
     ServeGeom::new(8, 4, 32, 2, 4, 3, 4)
 }
 
-fn tiny_vit(seed: u64, int4: bool) -> PackedVit {
+#[derive(Debug, Clone, Copy)]
+enum Variant {
+    Mx,
+    Int4,
+    Nvfp4,
+}
+
+fn tiny_vit_variant(seed: u64, variant: Variant) -> PackedVit {
     let geom = tiny_geom();
     let mut rng = Rng::new(seed);
     let params: Vec<f32> = (0..geom.total_params()).map(|_| rng.normal() * 0.05).collect();
-    let (wq, aq) = if int4 {
-        (WeightQuant::Int4, ActQuant::Int4)
-    } else {
-        let fmt = e2m1();
-        (
-            WeightQuant::Mx { fmt, scaling: Scaling::TruncationFree },
-            ActQuant::Mx { fmt, scaling: Scaling::TruncationFree },
-        )
+    let (wq, aq) = match variant {
+        Variant::Int4 => (WeightQuant::Int4, ActQuant::Int4),
+        Variant::Nvfp4 => (WeightQuant::Nvfp4, ActQuant::Nvfp4),
+        Variant::Mx => {
+            let fmt = e2m1();
+            (
+                WeightQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+                ActQuant::Mx { fmt, scaling: Scaling::TruncationFree },
+            )
+        }
     };
     PackedVit::build(geom, &params, None, wq, aq).unwrap()
+}
+
+fn tiny_vit(seed: u64, int4: bool) -> PackedVit {
+    tiny_vit_variant(seed, if int4 { Variant::Int4 } else { Variant::Mx })
 }
 
 fn cfg(engines: usize, micro: usize, depth: usize) -> ServeConfig {
@@ -50,9 +63,10 @@ fn px() -> usize {
 fn prop_fleet_logits_bit_exact_across_engine_counts_and_variants() {
     // The tiny geometry's stores have 192/64/128/64 rows, so 3 and 4
     // engines exercise ragged row splits (and odd-offset nibble
-    // repacks) on every store.
-    for int4 in [false, true] {
-        let vit = tiny_vit(11 + int4 as u64, int4);
+    // repacks) on every store — at group size 32 (MX), per-tensor
+    // (INT4), and group size 16 with E4M3 scales (NVFP4).
+    for (i, variant) in [Variant::Mx, Variant::Int4, Variant::Nvfp4].into_iter().enumerate() {
+        let vit = tiny_vit_variant(11 + i as u64, variant);
         let mut rng = Rng::new(33);
         let n = 5;
         let x: Vec<f32> = (0..n * px()).map(|_| rng.normal()).collect();
@@ -61,7 +75,7 @@ fn prop_fleet_logits_bit_exact_across_engine_counts_and_variants() {
             let mut fleet = ServeFleet::new(vit.clone(), cfg(engines, 8, 32)).unwrap();
             assert_eq!(fleet.engines(), engines);
             let got = fleet.infer_logits(x.clone(), n).unwrap();
-            assert_eq!(got, want, "fleet must be bit-exact (engines={engines}, int4={int4})");
+            assert_eq!(got, want, "fleet must be bit-exact (engines={engines}, {variant:?})");
         }
     }
 }

@@ -4,10 +4,12 @@
 
 use tetrajet::metrics::{quant_confidence, OscTracker, PackedOscTracker};
 use tetrajet::quant::{
-    bracket, e2m1, e3m0, mx_quantize_cols, qema_quantize_cols, round_det,
-    MxQuantizer, PackedMx, QemaQuantizer, Quantizer, Scaling,
+    bracket, e2m1, e3m0, e4m3_decode, e4m3_encode_ceil, group_ranges,
+    mx_quantize_cols, nvfp4_quantize_cols, qema_quantize_cols, round_det,
+    GroupGeom, MxQuantizer, NvQuantizer, PackedMx, QemaQuantizer, Quantizer,
+    Scaling, E4M3_MAX_BYTE,
 };
-use tetrajet::testing::{check, gen_f32_vec};
+use tetrajet::testing::{check, gen_f32_vec, geom_sweep};
 
 #[test]
 fn prop_round_det_is_nearest_or_tie_up() {
@@ -244,6 +246,171 @@ fn prop_packed_flip_counts_match_f32_tracker() {
                 q.quantize_packed(&w[..LEN_A], COLS_A, &mut pa);
                 q.quantize_packed(&w[LEN_A..], COLS_B, &mut pb);
                 vec![pa, pb]
+            };
+            let mut tf = OscTracker::new(&traj[0], &fake(&traj[0]));
+            let mut tp = PackedOscTracker::new(&traj[0], &pack(&traj[0]));
+            for w in &traj[1..] {
+                tf.observe(w, &fake(w));
+                tp.observe(w, &pack(w));
+            }
+            let (mut ff, mut fp) = (Vec::new(), Vec::new());
+            tf.flip_freq_into(&mut ff);
+            tp.flip_freq_into(&mut fp);
+            if ff != fp || tf.ratios() != tp.ratios() {
+                return false;
+            }
+            [0.0f32, 1.0, 16.0]
+                .iter()
+                .all(|&th| tf.oscillating_count(th) == tp.oscillating_count(th))
+        },
+    );
+}
+
+#[test]
+fn prop_group_ranges_tile_rows_at_every_geometry() {
+    // For every geometry in the sweep (MX, NVFP4, and with
+    // TJ_GEOM_SWEEP=1 the off-registry combinations), the 1xG layout
+    // tiles each row contiguously, never crosses a row boundary, and
+    // produces exactly rows * groups_per_row sequentially-indexed
+    // groups.
+    for geom in geom_sweep() {
+        check(
+            "group_ranges tiling",
+            300,
+            |r| {
+                let cols = 1 + r.below(70) as usize;
+                let rows = 1 + r.below(5) as usize;
+                (rows * cols, cols)
+            },
+            |&(len, cols)| {
+                let gs = geom.group_size();
+                let mut next_g = 0usize;
+                let mut next_start = 0usize;
+                let mut ok = true;
+                group_ranges(len, cols, gs, |g, a, b| {
+                    ok &= g == next_g && a == next_start && b > a && b - a <= gs;
+                    // Groups stay inside one row.
+                    ok &= a / cols == (b - 1) / cols;
+                    // Only a group at the row end may be short.
+                    ok &= b - a == gs || b % cols == 0;
+                    next_g += 1;
+                    next_start = b;
+                });
+                ok && next_start == len
+                    && next_g == (len / cols) * geom.groups_per_row(cols)
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_e4m3_encode_ceil_is_truncation_free() {
+    check(
+        "e4m3 ceil encode",
+        3000,
+        |r| (r.normal() * 50.0).abs().min(500.0),
+        |&v| {
+            let b = e4m3_encode_ceil(v);
+            if b > E4M3_MAX_BYTE {
+                return false;
+            }
+            let d = e4m3_decode(b);
+            if v <= 0.0 {
+                return b == 0;
+            }
+            if v > 448.0 {
+                return b == E4M3_MAX_BYTE;
+            }
+            // decode(b) is the smallest representable value >= v.
+            d >= v && (b == 0 || e4m3_decode(b - 1) < v)
+        },
+    );
+}
+
+#[test]
+fn prop_nvfp4_packed_roundtrip_is_bit_exact() {
+    // Packed dequant == fake-quant reference at the NVFP4 geometry,
+    // including ragged tails (cols % 16 != 0).
+    for cols in [16usize, 24, 7] {
+        check(
+            "nvfp4 packed roundtrip",
+            120,
+            |r| gen_f32_vec(r, cols * 3, 2.0),
+            |x| {
+                let q = NvQuantizer::nvfp4();
+                let mut p = PackedMx::default();
+                q.quantize_packed(x, cols, &mut p);
+                if p.geom() != GroupGeom::nvfp4() {
+                    return false;
+                }
+                let mut deq = vec![0.0; x.len()];
+                q.dequantize(&p, &mut deq);
+                deq == nvfp4_quantize_cols(x, cols)
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_nv_quantizer_at_mx_geometry_matches_mx_quantizer() {
+    // With MX geometry and the outlier clamp disabled, the generalized
+    // quantizer IS the MX quantizer, bit for bit — fake-quant output,
+    // codes and scale bytes alike.
+    check(
+        "nv==mx at mx geometry",
+        150,
+        |r| gen_f32_vec(r, 96, 2.0),
+        |x| {
+            for fmt in [e2m1(), e3m0()] {
+                for scaling in [Scaling::TruncationFree, Scaling::Floor] {
+                    let nv = NvQuantizer::with_geom(fmt, scaling, GroupGeom::mx());
+                    let mx = MxQuantizer { fmt, scaling };
+                    let (mut pn, mut pm) = (PackedMx::default(), PackedMx::default());
+                    nv.quantize_packed(x, 48, &mut pn);
+                    mx.quantize_packed(x, 48, &mut pm);
+                    if pn.codes() != pm.codes() || pn.scale_bytes() != pm.scale_bytes() {
+                        return false;
+                    }
+                    let mut a = vec![0.0; x.len()];
+                    let mut b = vec![0.0; x.len()];
+                    nv.quantize_f32(x, 48, &mut a);
+                    mx.quantize_f32(x, 48, &mut b);
+                    if a != b {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_packed_flip_counts_match_f32_tracker_at_nvfp4() {
+    // Flip parity at the NVFP4 geometry (code compare vs f32 compare),
+    // ragged 16-element groups included.
+    const COLS: usize = 21;
+    const LEN: usize = 63;
+    const STEPS: usize = 6;
+    check(
+        "nvfp4 flip parity",
+        40,
+        |r| {
+            let mut traj = vec![gen_f32_vec(r, LEN, 1.0)];
+            for _ in 0..STEPS {
+                let last = traj.last().unwrap().clone();
+                let next: Vec<f32> = last.iter().map(|&v| v + r.normal() * 0.05).collect();
+                traj.push(next);
+            }
+            traj
+        },
+        |traj| {
+            let q = NvQuantizer::nvfp4();
+            let fake = |w: &[f32]| nvfp4_quantize_cols(w, COLS);
+            let pack = |w: &[f32]| {
+                let mut p = PackedMx::default();
+                q.quantize_packed(w, COLS, &mut p);
+                vec![p]
             };
             let mut tf = OscTracker::new(&traj[0], &fake(&traj[0]));
             let mut tp = PackedOscTracker::new(&traj[0], &pack(&traj[0]));

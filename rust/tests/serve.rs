@@ -6,7 +6,9 @@
 
 use tetrajet::coordinator::{PackedSeg, TrainState};
 use tetrajet::data::{EvalSet, SynthVision};
-use tetrajet::quant::{e2m1, e3m0, Int4Quantizer, MxQuantizer, PackedMx, Quantizer, Scaling};
+use tetrajet::quant::{
+    e2m1, e3m0, GroupGeom, Int4Quantizer, MxQuantizer, NvQuantizer, PackedMx, Quantizer, Scaling,
+};
 use tetrajet::runtime::Manifest;
 use tetrajet::serve::{
     dense_matmul_at, fused_matmul, fused_matmul_at, matmul_ref, simd, PackedVit, ServeConfig,
@@ -193,8 +195,11 @@ fn geom_roundtrips_through_manifest() {
 
 /// Quantize a parameter vector's quantized prefix the way the trainer
 /// mirror does: one PackedMx per stacked weight segment.
-fn trainer_style_packed(geom: &ServeGeom, params: &[f32]) -> Vec<PackedSeg> {
-    let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+fn trainer_style_packed_with(
+    geom: &ServeGeom,
+    params: &[f32],
+    q: &dyn Quantizer,
+) -> Vec<PackedSeg> {
     geom.param_spec()
         .iter()
         .filter(|s| s.quantized)
@@ -204,6 +209,11 @@ fn trainer_style_packed(geom: &ServeGeom, params: &[f32]) -> Vec<PackedSeg> {
             PackedSeg { name: s.name.to_string(), offset: s.offset, packed: p }
         })
         .collect()
+}
+
+fn trainer_style_packed(geom: &ServeGeom, params: &[f32]) -> Vec<PackedSeg> {
+    let q = MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree };
+    trainer_style_packed_with(geom, params, &q)
 }
 
 #[test]
@@ -331,6 +341,61 @@ fn qema_and_int4_variants_serve() {
     let vit = PackedVit::from_checkpoint(&man, &params, None, &[]).unwrap();
     assert!(!vit.is_fully_packed(), "fp32 variant has no packed form");
     assert!(vit.forward(&x, 1, 1).iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn nvfp4_variant_serves_end_to_end() {
+    // The full NVFP4 path: trainer-style 16-element/E4M3 packed mirror
+    // -> TJCKPT02 (with geometry byte) -> from_checkpoint -> engine,
+    // bit-exact to re-quantizing from f32 and to the dense mirror.
+    let geom = tiny_geom();
+    let man = manifest_for(&geom, "nvfp4", false);
+    let params = random_params(&geom, 11);
+    let packed = trainer_style_packed_with(&geom, &params, &NvQuantizer::nvfp4());
+    assert!(packed.iter().all(|s| s.packed.geom() == GroupGeom::nvfp4()));
+
+    let mut state = TrainState::new(params.clone(), geom.qw_total());
+    state.step = 321;
+    let dir = std::env::temp_dir().join("tj_serve_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("nv_e2e.ckpt");
+    state.save_packed(&path, &packed).unwrap();
+
+    let (loaded, segs) = TrainState::load_with_packed(&path).unwrap();
+    assert_eq!(segs.len(), 4);
+    assert!(segs.iter().all(|s| s.packed.geom() == GroupGeom::nvfp4()));
+    let from_codes =
+        PackedVit::from_checkpoint(&man, &loaded.params, None, &segs).unwrap();
+    assert!(from_codes.is_fully_packed());
+    // 16-element groups: 0.5 B/element codes + 1 B per 16 elements.
+    let qw = geom.qw_total();
+    assert_eq!(from_codes.quantized_weight_bytes(), qw / 2 + qw / 16);
+
+    let from_params = PackedVit::from_checkpoint(&man, &params, None, &[]).unwrap();
+    let mut rng = Rng::new(13);
+    let x: Vec<f32> = (0..2 * geom.img * geom.img * 3).map(|_| rng.normal()).collect();
+    let logits = from_codes.forward(&x, 2, 2);
+    assert_eq!(logits, from_params.forward(&x, 2, 1));
+    assert_eq!(logits, from_codes.to_dense().forward(&x, 2, 2));
+    assert!(logits.iter().all(|v| v.is_finite()));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn nvfp4_group_geometry_mismatch_is_rejected() {
+    // Same e2m1 level table on both sides — only the group geometry
+    // differs — so this exercises the geometry check specifically.
+    let geom = tiny_geom();
+    let params = random_params(&geom, 12);
+    let mx_packed = trainer_style_packed(&geom, &params);
+    let nv_packed = trainer_style_packed_with(&geom, &params, &NvQuantizer::nvfp4());
+    let man_nv = manifest_for(&geom, "nvfp4", false);
+    let man_mx = manifest_for(&geom, "mx", false);
+    assert!(PackedVit::from_checkpoint(&man_nv, &params, None, &mx_packed).is_err());
+    assert!(PackedVit::from_checkpoint(&man_mx, &params, None, &nv_packed).is_err());
+    // Matching pairs both load.
+    assert!(PackedVit::from_checkpoint(&man_nv, &params, None, &nv_packed).is_ok());
+    assert!(PackedVit::from_checkpoint(&man_mx, &params, None, &mx_packed).is_ok());
 }
 
 #[test]
