@@ -3,7 +3,7 @@
 
 RUST_DIR := rust
 
-.PHONY: tier1 build test fmt fmt-check bench loadtest-smoke obs-smoke artifacts
+.PHONY: tier1 build test fmt fmt-check bench loadtest-smoke obs-smoke report-smoke artifacts
 
 # `cargo bench --no-run` keeps the bench code compiling without paying
 # for a full measurement sweep. The second test run forces the scalar
@@ -16,6 +16,7 @@ tier1:
 	cd $(RUST_DIR) && TJ_SIMD=off TJ_GEOM_SWEEP=1 cargo test -q
 	$(MAKE) loadtest-smoke
 	$(MAKE) obs-smoke
+	$(MAKE) report-smoke
 
 # 2-engine continuous-batching smoke: ~200 virtual-pace Poisson
 # requests against a seeded synthetic model (no artifacts needed),
@@ -39,6 +40,32 @@ obs-smoke:
 	cd $(RUST_DIR) && cargo run --release --quiet -- obs-validate \
 	  --trace results/obs_smoke_trace.jsonl \
 	  --snapshot results/obs_smoke_metrics.json
+
+# Oscillation-observatory smoke (no artifacts needed): two identical
+# tiny synthetic train runs must produce byte-identical OSCLOG01 files
+# (the digest-stability gate), an NVFP4 run exercises the second group
+# geometry, `report` replays the artifact offline, and obs-validate
+# schema-checks both the OSCLOG and the OSCREPORT01 json.
+report-smoke:
+	cd $(RUST_DIR) && cargo run --release --quiet -- train --synthetic tiny \
+	  --variant mx --steps 60 --osc-window 10 --seed 0 \
+	  --osc-out results/report_smoke_a.osclog \
+	  --trace-out results/report_smoke_trace.jsonl
+	cd $(RUST_DIR) && cargo run --release --quiet -- train --synthetic tiny \
+	  --variant mx --steps 60 --osc-window 10 --seed 0 \
+	  --osc-out results/report_smoke_b.osclog
+	cmp $(RUST_DIR)/results/report_smoke_a.osclog $(RUST_DIR)/results/report_smoke_b.osclog
+	cd $(RUST_DIR) && cargo run --release --quiet -- train --synthetic tiny \
+	  --variant nvfp4 --steps 60 --osc-window 10 --seed 0 \
+	  --osc-out results/report_smoke_nvfp4.osclog
+	cd $(RUST_DIR) && cargo run --release --quiet -- report \
+	  --osclog results/report_smoke_a.osclog \
+	  --compare results/report_smoke_nvfp4.osclog \
+	  --top 5 --json results/report_smoke.json > results/report_smoke.md
+	cd $(RUST_DIR) && cargo run --release --quiet -- obs-validate \
+	  --osclog results/report_smoke_a.osclog \
+	  --report results/report_smoke.json \
+	  --trace results/report_smoke_trace.jsonl
 
 build:
 	cd $(RUST_DIR) && cargo build --release

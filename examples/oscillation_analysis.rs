@@ -8,6 +8,8 @@
 //! cargo run --release --example oscillation_analysis -- --steps 200
 //! # or skip training and inspect/serve an existing packed checkpoint:
 //! cargo run --release --example oscillation_analysis -- --ckpt results/oscillation.ckpt
+//! # or run without HLO artifacts at all (synthetic random walk):
+//! cargo run --release --example oscillation_analysis -- --synthetic tiny
 //! ```
 //!
 //! With `--ckpt` pointing at a TJCKPT02 file (written below, or by
@@ -15,15 +17,60 @@
 //! the packed serving path — codes + E8M0 scales straight into the
 //! fused dequant-matmul engine, no HLO artifacts and no f32 weight
 //! mirror — and reports serving accuracy/latency.
+//!
+//! Every mode records per-segment telemetry through the oscillation
+//! observatory into `results/oscillation.osclog` and then *replays the
+//! artifact* with [`tetrajet::report`] — the printed per-layer tables
+//! come from the OSCLOG bytes, not from trainer internals, so the
+//! example and `tetrajet report` agree by construction (the replayed
+//! oscillating fraction is asserted bit-equal to the live
+//! `train.osc.ratio` gauge).
 
 use anyhow::Result;
 use tetrajet::config::{MetricsCfg, TrainConfig};
-use tetrajet::coordinator::{Trainer, TrainState};
+use tetrajet::coordinator::{SynthTrainer, Trainer, TrainState};
 use tetrajet::data::{EvalSet, SynthVision};
+use tetrajet::obs::osclog::OscLogWriter;
+use tetrajet::report;
 use tetrajet::runtime::{artifacts, cpu_client, Manifest, ModelArtifacts};
 use tetrajet::serve::{PackedVit, ServeConfig, ServeEngine};
 use tetrajet::util::cli::Args;
 use tetrajet::util::stats::Histogram;
+
+const OSCLOG_PATH: &str = "results/oscillation.osclog";
+
+/// Replay the OSCLOG artifact offline and print the per-layer report;
+/// when a window closed, the replayed fraction must equal the live
+/// `train.osc.ratio` gauge bit-exactly.
+fn replay_osclog(live_ratio: Option<f64>) -> Result<()> {
+    let log = report::load_osclog(std::path::Path::new(OSCLOG_PATH))?;
+    let rep = report::analyze(&log, 5);
+    println!();
+    print!("{}", rep.to_markdown());
+    if let (Some(live), true) = (live_ratio, rep.windows > 0) {
+        assert_eq!(
+            rep.osc_fraction, live,
+            "offline replay must recover the live gauge bit-exactly"
+        );
+        println!("replayed osc fraction == live train.osc.ratio gauge ({live})");
+    }
+    Ok(())
+}
+
+/// No-artifacts mode: the synthetic random-walk trainer drives the
+/// identical quantize/track/record machinery.
+fn synthetic_observatory(model: &str, seed: u64, steps: usize) -> Result<()> {
+    let mut m = MetricsCfg::standard();
+    m.osc_window = 10;
+    let mut t = SynthTrainer::new(model, "mx", seed, m)?;
+    t.attach_osclog(OscLogWriter::to_file(std::path::Path::new(OSCLOG_PATH))?);
+    let rep = t.run(steps)?;
+    let (lines, digest) = rep.osclog.expect("osclog was attached");
+    println!("synthetic[{model}]: {steps} steps, OSCLOG lines={lines} digest={digest}");
+    let live = (!rep.windows.is_empty())
+        .then(|| t.registry().gauge("train.osc.ratio").get());
+    replay_osclog(live)
+}
 
 /// Serve a packed checkpoint: the demonstration of the TJCKPT02 ->
 /// PackedVit -> ServeEngine API from example code. `variant` must be
@@ -80,6 +127,10 @@ fn main() -> Result<()> {
             args.get_or("variant", "tetrajet"),
         );
     }
+    if let Some(name) = args.get("synthetic") {
+        let name = name.to_string();
+        return synthetic_observatory(&name, args.get_u64("seed", 0)?, args.get_usize("steps", 60)?);
+    }
     let steps = args.get_usize("steps", 200)?;
     let root = artifacts::default_root();
     let client = cpu_client()?;
@@ -94,7 +145,9 @@ fn main() -> Result<()> {
     m.conf_every = (steps / 4).max(1);
     cfg.metrics = m;
     let params = artifacts::run_init(&client, &root, "vit-micro", cfg.init_seed)?;
+    let seed = cfg.init_seed as u64;
     let mut tr = Trainer::new(&arts, cfg, params)?;
+    tr.make_observatory(OscLogWriter::to_file(std::path::Path::new(OSCLOG_PATH))?, seed)?;
 
     println!("training {steps} steps with full oscillation metrics on...");
     for _ in 0..steps {
@@ -155,6 +208,19 @@ fn main() -> Result<()> {
     }
     tr.rec.save_json(std::path::Path::new("results/oscillation_analysis.json"))?;
     println!("\nfull series saved to results/oscillation_analysis.json");
+
+    // Flush the observatory and replay its artifact through the same
+    // analyzer `tetrajet report` uses.
+    let (lines, digest) = match tr.observatory_mut() {
+        Some(ob) => {
+            ob.finish()?;
+            (ob.lines(), ob.digest())
+        }
+        None => unreachable!("observatory attached above"),
+    };
+    println!("OSCLOG lines={lines} digest={digest} ({OSCLOG_PATH})");
+    let live = tr.registry().gauge("train.osc.ratio").get();
+    replay_osclog(Some(live))?;
 
     // Export the packed mirror as a TJCKPT02 checkpoint and round-trip
     // it through the serving subsystem.

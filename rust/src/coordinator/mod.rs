@@ -17,13 +17,17 @@
 //! only routes `ema_beta` and the EMA state.
 
 pub mod freeze;
+pub mod observatory;
 pub mod qramping;
 pub mod recorder;
 pub mod state;
+pub mod synthtrain;
 pub mod trainer;
 
 pub use freeze::FreezeController;
+pub use observatory::OscObservatory;
 pub use qramping::QRampingController;
 pub use recorder::Recorder;
 pub use state::{PackedSeg, TrainState};
+pub use synthtrain::{SynthTrainReport, SynthTrainer};
 pub use trainer::{EvalResult, Trainer};

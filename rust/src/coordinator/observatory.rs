@@ -1,0 +1,184 @@
+//! The oscillation observatory: per-segment training telemetry
+//! streamed to an `OSCLOG01` artifact (`train --osc-out`).
+//!
+//! The trainer already tracks per-element flip counts and R_w
+//! accumulators ([`OscWindow`]) over the whole quantized prefix; the
+//! observatory projects that window onto the manifest's segment
+//! structure — one slice per depth of each quantized tensor
+//! ([`split_segments`]) — and records, per step and per slice:
+//!
+//! * `flips`  — quantized-value flips this step (delta of the window's
+//!   cumulative per-element counts, summed over the slice),
+//! * `conf`   — mean quantization confidence of the master weights
+//!   under the active mirror's group geometry,
+//! * `wdist`  — mean |W − W_q| distance to the dequantized mirror.
+//!
+//! At each window close it records per-slice oscillating-element
+//! counts via [`OscWindow::oscillating_count_in`]; because the slices
+//! tile the prefix exactly, their sum equals the trainer's global
+//! `oscillating_count` *bit-exactly* — `tetrajet report` recovers
+//! `train.osc.ratio` from the artifact without rounding drift.
+//!
+//! Everything is serial, allocation is O(segments × window), and each
+//! line folds into the writer's FNV-1a digest, so a fixed (seed,
+//! config) run yields a byte-identical artifact.
+
+use crate::metrics::{quant_confidence_geom, OscWindow};
+use crate::obs::osclog::{OscLogWriter, OscSegment, OSCLOG_FORMAT};
+use crate::quant::{Fp4Format, GroupGeom, Scaling};
+use crate::util::json::{num, s, Json};
+
+pub struct OscObservatory {
+    segs: Vec<OscSegment>,
+    fmt: &'static Fp4Format,
+    scaling: Scaling,
+    geom: GroupGeom,
+    threshold: f32,
+    window: usize,
+    /// Cumulative window flips per slice at the previous step, so each
+    /// step line carries deltas (flips *this* step).
+    prev_flips: Vec<u64>,
+    writer: OscLogWriter,
+    scratch: Vec<f32>,
+}
+
+impl OscObservatory {
+    /// Build an observatory over `segs` (which must tile `total`
+    /// elements contiguously from offset 0) and write the OSCLOG01
+    /// header. `meta` carries run identity (variant, mirror, seed) into
+    /// the header verbatim.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        segs: Vec<OscSegment>,
+        total: usize,
+        fmt: &'static Fp4Format,
+        scaling: Scaling,
+        geom: GroupGeom,
+        threshold: f32,
+        window: usize,
+        meta: Vec<(String, Json)>,
+        mut writer: OscLogWriter,
+    ) -> OscObservatory {
+        let mut covered = 0usize;
+        for seg in &segs {
+            assert_eq!(seg.offset, covered, "observatory slices must tile contiguously");
+            covered += seg.size;
+        }
+        assert_eq!(covered, total, "observatory slices must cover the quantized prefix");
+        let mut fields = vec![("format".to_string(), s(OSCLOG_FORMAT))];
+        fields.extend(meta);
+        fields.push(("group_size".to_string(), num(geom.group_size() as f64)));
+        fields.push(("scale_enc".to_string(), s(geom.scale_enc().as_str())));
+        fields.push(("threshold".to_string(), num(threshold as f64)));
+        fields.push(("osc_window".to_string(), num(window as f64)));
+        fields.push(("total".to_string(), num(total as f64)));
+        fields.push((
+            "segments".to_string(),
+            Json::Arr(segs.iter().map(|g| g.to_json()).collect()),
+        ));
+        writer.line(&Json::Obj(fields));
+        let n = segs.len();
+        OscObservatory {
+            segs,
+            fmt,
+            scaling,
+            geom,
+            threshold,
+            window,
+            prev_flips: vec![0; n],
+            writer,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// The slices being observed, in artifact order.
+    pub fn segments(&self) -> &[OscSegment] {
+        &self.segs
+    }
+
+    /// Record one post-observe step: `w` is the master quantized
+    /// prefix, `wq` its dequantized mirror view, `win` the tracker
+    /// window *after* this step's observe. Returns the global flip
+    /// count of this step (for the `train.osc.step_flips` ring).
+    pub fn record_step(&mut self, step: usize, w: &[f32], wq: &[f32], win: &OscWindow) -> u64 {
+        let flips = win.flips();
+        let mut flip_arr = Vec::with_capacity(self.segs.len());
+        let mut conf_arr = Vec::with_capacity(self.segs.len());
+        let mut dist_arr = Vec::with_capacity(self.segs.len());
+        let mut step_total = 0u64;
+        for (i, seg) in self.segs.iter().enumerate() {
+            let r = seg.offset..seg.offset + seg.size;
+            let cum: u64 = flips[r.clone()].iter().map(|&f| u64::from(f)).sum();
+            let delta = cum - self.prev_flips[i];
+            self.prev_flips[i] = cum;
+            step_total += delta;
+            flip_arr.push(num(delta as f64));
+
+            quant_confidence_geom(
+                &w[r.clone()],
+                seg.cols,
+                self.fmt,
+                self.scaling,
+                self.geom,
+                &mut self.scratch,
+            );
+            let conf: f64 =
+                self.scratch.iter().map(|&c| c as f64).sum::<f64>() / seg.size.max(1) as f64;
+            conf_arr.push(num(conf));
+
+            let dist: f64 = w[r.clone()]
+                .iter()
+                .zip(&wq[r])
+                .map(|(&a, &b)| (a as f64 - b as f64).abs())
+                .sum::<f64>()
+                / seg.size.max(1) as f64;
+            dist_arr.push(num(dist));
+        }
+        self.writer.line(&Json::Obj(vec![
+            ("t".to_string(), num(step as f64)),
+            ("flips".to_string(), Json::Arr(flip_arr)),
+            ("conf".to_string(), Json::Arr(conf_arr)),
+            ("wdist".to_string(), Json::Arr(dist_arr)),
+        ]));
+        step_total
+    }
+
+    /// Record a window close (call *before* the tracker resets).
+    /// Returns the summed oscillating-element count, which equals the
+    /// tracker's global `oscillating_count(threshold)` exactly.
+    pub fn record_window_end(&mut self, step: usize, win: &OscWindow) -> usize {
+        let mut osc_arr = Vec::with_capacity(self.segs.len());
+        let mut total = 0usize;
+        for seg in &self.segs {
+            let k = win.oscillating_count_in(self.threshold, seg.offset, seg.offset + seg.size);
+            total += k;
+            osc_arr.push(num(k as f64));
+        }
+        self.writer.line(&Json::Obj(vec![
+            ("window_end".to_string(), num(step as f64)),
+            ("len".to_string(), num(self.window as f64)),
+            ("osc".to_string(), Json::Arr(osc_arr)),
+            ("osc_total".to_string(), num(total as f64)),
+        ]));
+        total
+    }
+
+    /// Tell the observatory the tracker window was reset: the
+    /// cumulative flip baseline restarts at zero.
+    pub fn note_reset(&mut self) {
+        self.prev_flips.iter_mut().for_each(|f| *f = 0);
+    }
+
+    pub fn lines(&self) -> u64 {
+        self.writer.lines()
+    }
+
+    pub fn digest(&self) -> String {
+        self.writer.digest()
+    }
+
+    /// Flush the artifact (call once training ends).
+    pub fn finish(&mut self) -> anyhow::Result<()> {
+        self.writer.finish()
+    }
+}

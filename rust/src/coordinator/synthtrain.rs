@@ -1,0 +1,342 @@
+//! Synthetic no-HLO training driver for the oscillation observatory
+//! (`train --synthetic tiny|micro`).
+//!
+//! The real trainer needs AOT HLO artifacts; this driver replaces the
+//! optimizer step with a seeded random walk over the quantized weight
+//! prefix of a [`ServeGeom`] layout and runs the *identical* metric
+//! machinery — packed quantize mirror, [`PackedOscTracker`] code
+//! compare, [`OscObservatory`] per-segment recording, the
+//! `train.osc.*` gauge arithmetic — so OSCLOG artifacts, `tetrajet
+//! report`, and the digest-stability gate (`make report-smoke`) are
+//! exercisable on machines with no artifacts at all.
+//!
+//! Everything is a pure function of (model, variant, seed, steps,
+//! window): weights evolve as `w += 0.02 · N(0,1)` from a per-step
+//! `fold_in` stream, quantization is serial per segment, and the
+//! observatory means are serial f64 sums — two runs with the same
+//! inputs produce byte-identical OSCLOG files.
+
+use anyhow::{bail, Result};
+
+use crate::config::MetricsCfg;
+use crate::coordinator::observatory::OscObservatory;
+use crate::coordinator::trainer::{TrainerObs, TRAIN_PHASES, TRAIN_TRACE_TID};
+use crate::metrics::PackedOscTracker;
+use crate::obs::osclog::{split_segments, OscLogWriter, OscSegment};
+use crate::obs::{MetricsRegistry, TraceSink};
+use crate::quant::{e2m1, GroupGeom, MxQuantizer, NvQuantizer, PackedMx, Quantizer, Scaling};
+use crate::serve::ServeGeom;
+use crate::util::json::{num, s};
+use crate::util::rng::Rng;
+
+/// Synthetic geometry by name — the same pair `serve --synthetic` uses.
+pub fn synth_geom(name: &str) -> Option<ServeGeom> {
+    match name {
+        "tiny" => Some(ServeGeom::new(16, 4, 32, 2, 4, 10, 4)),
+        "micro" => Some(ServeGeom::new(32, 4, 64, 4, 4, 10, 4)),
+        _ => None,
+    }
+}
+
+/// Which packed mirror the synthetic walk quantizes through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SynthMirror {
+    Mx,
+    Nvfp4,
+}
+
+/// End-of-run summary: window closes plus artifact witnesses.
+#[derive(Debug, Clone)]
+pub struct SynthTrainReport {
+    pub steps: usize,
+    pub qw_total: usize,
+    pub segments: usize,
+    /// `(step, oscillating_count)` at each window close.
+    pub windows: Vec<(usize, usize)>,
+    /// `(lines, digest)` of the OSCLOG artifact, when one was attached.
+    pub osclog: Option<(u64, String)>,
+    /// `(events, digest)` of the trace, when one was attached.
+    pub trace: Option<(u64, String)>,
+}
+
+/// Seeded random-walk trainer over a synthetic quantized layout.
+pub struct SynthTrainer {
+    mirror: SynthMirror,
+    /// Quantized entries of the layout: (name, shape, offset, size, cols).
+    qsegs: Vec<(&'static str, Vec<usize>, usize, usize, usize)>,
+    w: Vec<f32>,
+    packed: Vec<PackedMx>,
+    wq: Vec<f32>,
+    tracker: Option<PackedOscTracker>,
+    observatory: Option<OscObservatory>,
+    trace: Option<TraceSink>,
+    obs: TrainerObs,
+    base_rng: Rng,
+    step: usize,
+    metrics: MetricsCfg,
+    windows: Vec<(usize, usize)>,
+    model: String,
+    seed: u64,
+}
+
+impl SynthTrainer {
+    /// `variant` selects the mirror recipe: `mx` (default training
+    /// recipe) or `nvfp4`. `metrics.osc_window` must be > 0.
+    pub fn new(model: &str, variant: &str, seed: u64, metrics: MetricsCfg) -> Result<SynthTrainer> {
+        let Some(geom) = synth_geom(model) else {
+            bail!("unknown synthetic geometry {model:?} (tiny | micro)");
+        };
+        if metrics.osc_window == 0 {
+            bail!("synthetic training requires metrics.osc_window > 0");
+        }
+        let mirror = match variant {
+            "mx" | "" => SynthMirror::Mx,
+            "nvfp4" => SynthMirror::Nvfp4,
+            other => bail!("unknown synthetic variant {other:?} (mx | nvfp4)"),
+        };
+        let qsegs: Vec<_> = geom
+            .param_spec()
+            .into_iter()
+            .filter(|sp| sp.quantized)
+            .map(|sp| {
+                let (cols, size) = (sp.cols(), sp.size);
+                (sp.name, sp.shape, sp.offset, size, cols)
+            })
+            .collect();
+        let qw_total = geom.qw_total();
+        // Same init stream as `serve --synthetic` ("MOD"), so the
+        // synthetic trainer walks the model serving smoke-tests load.
+        let mut rng = Rng::new(seed).fold_in(0x4d4f44);
+        let w: Vec<f32> = (0..qw_total).map(|_| rng.normal() * 0.05).collect();
+        let n = qsegs.len();
+        Ok(SynthTrainer {
+            mirror,
+            qsegs,
+            w,
+            packed: vec![PackedMx::default(); n],
+            wq: vec![0.0; qw_total],
+            tracker: None,
+            observatory: None,
+            trace: None,
+            obs: TrainerObs::new(),
+            base_rng: Rng::new(seed).fold_in(0x535445), // "STE"
+            step: 0,
+            metrics,
+            windows: Vec::new(),
+            model: model.to_string(),
+            seed,
+        })
+    }
+
+    /// The registry behind `train.*` (shared shape with the real
+    /// trainer's).
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.obs.reg
+    }
+
+    fn geom_q(&self) -> GroupGeom {
+        match self.mirror {
+            SynthMirror::Mx => GroupGeom::mx(),
+            SynthMirror::Nvfp4 => GroupGeom::nvfp4(),
+        }
+    }
+
+    fn mirror_name(&self) -> &'static str {
+        match self.mirror {
+            SynthMirror::Mx => "mx",
+            SynthMirror::Nvfp4 => "nvfp4",
+        }
+    }
+
+    /// Observatory slices of the synthetic layout, in artifact order.
+    pub fn slices(&self) -> Vec<OscSegment> {
+        let mut segs = Vec::new();
+        for (name, shape, offset, _, _) in &self.qsegs {
+            segs.extend(split_segments(name, shape, *offset));
+        }
+        segs
+    }
+
+    /// Attach an OSCLOG01 observatory writing to `writer`.
+    pub fn attach_osclog(&mut self, writer: OscLogWriter) {
+        let meta = vec![
+            ("variant".to_string(), s(&format!("synthetic-{}", self.model))),
+            ("mirror".to_string(), s(self.mirror_name())),
+            ("seed".to_string(), num(self.seed as f64)),
+        ];
+        self.observatory = Some(OscObservatory::new(
+            self.slices(),
+            self.w.len(),
+            e2m1(),
+            Scaling::TruncationFree,
+            self.geom_q(),
+            self.metrics.rw_threshold,
+            self.metrics.osc_window,
+            meta,
+            writer,
+        ));
+    }
+
+    /// Attach a Chrome trace sink (same `train.<phase>` spans / tid as
+    /// the real trainer; the synthetic timeline is always simulated).
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = Some(sink);
+    }
+
+    fn mirror_wq(&mut self) {
+        for ((_, _, offset, size, cols), p) in self.qsegs.iter().zip(&mut self.packed) {
+            let seg = &self.w[*offset..*offset + *size];
+            match self.mirror {
+                SynthMirror::Mx => MxQuantizer { fmt: e2m1(), scaling: Scaling::TruncationFree }
+                    .quantize_packed(seg, *cols, p),
+                SynthMirror::Nvfp4 => NvQuantizer::nvfp4().quantize_packed(seg, *cols, p),
+            }
+        }
+        let mut base = 0usize;
+        for p in &self.packed {
+            p.dequantize_into(&mut self.wq[base..base + p.len()]);
+            base += p.len();
+        }
+    }
+
+    /// One synthetic step: random-walk the weights, refresh the packed
+    /// mirror, feed tracker + observatory, close windows.
+    pub fn step(&mut self) {
+        let step = self.step;
+        let mut rng = self.base_rng.fold_in(step as u64);
+        for v in &mut self.w {
+            *v += 0.02 * rng.normal();
+        }
+        self.mirror_wq();
+        match &mut self.tracker {
+            None => {
+                self.tracker = Some(PackedOscTracker::new(&self.w, &self.packed));
+            }
+            Some(t) => {
+                t.observe(&self.w, &self.packed);
+                if let Some(ob) = &mut self.observatory {
+                    let flips = ob.record_step(step + 1, &self.w, &self.wq, t.window());
+                    self.obs.step_flips.push(flips as f64);
+                }
+                if t.steps() >= self.metrics.osc_window {
+                    let count = t.oscillating_count(self.metrics.rw_threshold);
+                    if let Some(ob) = &mut self.observatory {
+                        let total = ob.record_window_end(step + 1, t.window());
+                        debug_assert_eq!(total, count);
+                    }
+                    self.obs.osc_flips.set(count as f64);
+                    // Identical arithmetic to Trainer::after_step, so
+                    // `report` can match `train.osc.ratio` bit-exactly.
+                    self.obs.osc_ratio.set(count as f64 / self.wq.len().max(1) as f64);
+                    self.windows.push((step + 1, count));
+                    t.reset_window();
+                    if let Some(ob) = &mut self.observatory {
+                        ob.note_reset();
+                    }
+                }
+            }
+        }
+        if let Some(tr) = &mut self.trace {
+            let base = step as f64 * TRAIN_PHASES.len() as f64;
+            for (i, name) in TRAIN_PHASES.iter().enumerate() {
+                tr.duration(
+                    &format!("train.{name}"),
+                    base + i as f64,
+                    1.0,
+                    TRAIN_TRACE_TID,
+                    vec![("step", num(step as f64))],
+                );
+            }
+        }
+        self.step += 1;
+        self.obs.steps.inc();
+    }
+
+    /// Run `steps` steps and flush the artifacts.
+    pub fn run(&mut self, steps: usize) -> Result<SynthTrainReport> {
+        for _ in 0..steps {
+            self.step();
+        }
+        let osclog = match &mut self.observatory {
+            Some(ob) => {
+                ob.finish()?;
+                Some((ob.lines(), ob.digest()))
+            }
+            None => None,
+        };
+        let trace = match &mut self.trace {
+            Some(tr) => {
+                tr.finish()?;
+                Some((tr.events(), tr.digest()))
+            }
+            None => None,
+        };
+        Ok(SynthTrainReport {
+            steps: self.step,
+            qw_total: self.w.len(),
+            segments: self.slices().len(),
+            windows: self.windows.clone(),
+            osclog,
+            trace,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(window: usize) -> MetricsCfg {
+        MetricsCfg {
+            rate_window: 0,
+            probe_every: 0,
+            osc_window: window,
+            rw_threshold: 16.0,
+            conf_every: 0,
+        }
+    }
+
+    fn digest_of(model: &str, variant: &str, seed: u64, steps: usize) -> (u64, String) {
+        let mut t = SynthTrainer::new(model, variant, seed, metrics(10)).unwrap();
+        t.attach_osclog(OscLogWriter::in_memory());
+        t.run(steps).unwrap().osclog.unwrap()
+    }
+
+    #[test]
+    fn osclog_digest_is_a_pure_function_of_seed_and_config() {
+        for variant in ["mx", "nvfp4"] {
+            let (l1, d1) = digest_of("tiny", variant, 7, 25);
+            let (l2, d2) = digest_of("tiny", variant, 7, 25);
+            assert_eq!((l1, &d1), (l2, &d2), "{variant} reruns must be byte-identical");
+            let (_, d3) = digest_of("tiny", variant, 8, 25);
+            assert_ne!(d1, d3, "{variant} seed must move the digest");
+        }
+        // The two mirrors see different flip patterns.
+        assert_ne!(digest_of("tiny", "mx", 7, 25).1, digest_of("tiny", "nvfp4", 7, 25).1);
+    }
+
+    #[test]
+    fn window_ratio_matches_gauge_arithmetic() {
+        let mut t = SynthTrainer::new("tiny", "mx", 3, metrics(8)).unwrap();
+        t.attach_osclog(OscLogWriter::in_memory());
+        let rep = t.run(20).unwrap();
+        assert!(!rep.windows.is_empty(), "20 steps at window 8 must close a window");
+        let (_, count) = *rep.windows.last().unwrap();
+        let gauge = t.registry().gauge("train.osc.ratio").get();
+        assert_eq!(gauge, count as f64 / rep.qw_total.max(1) as f64, "bit-exact ratio");
+    }
+
+    #[test]
+    fn trace_spans_are_deterministic() {
+        let run = || {
+            let mut t = SynthTrainer::new("tiny", "mx", 1, metrics(10)).unwrap();
+            t.set_trace(TraceSink::in_memory(true));
+            let rep = t.run(6).unwrap();
+            rep.trace.unwrap()
+        };
+        let (e1, d1) = run();
+        let (e2, d2) = run();
+        assert_eq!(e1, 6 * TRAIN_PHASES.len() as u64);
+        assert_eq!((e1, d1), (e2, d2));
+    }
+}

@@ -11,14 +11,17 @@ use anyhow::{bail, Result};
 
 use crate::config::{Policy, TrainConfig};
 use crate::coordinator::freeze::FreezeController;
+use crate::coordinator::observatory::OscObservatory;
 use crate::coordinator::qramping::QRampingController;
 use crate::coordinator::recorder::Recorder;
 use crate::coordinator::state::{PackedSeg, TrainState};
 use crate::data::{Batcher, EvalSet, SynthVision};
 use crate::metrics::{
-    latents_geom, quant_confidence_geom, OscTracker, PackedOscTracker, RateTracker,
+    latents_geom, quant_confidence_geom, OscTracker, OscWindow, PackedOscTracker, RateTracker,
 };
-use crate::obs::{Counter, FCounter, Gauge, MetricsRegistry};
+use crate::obs::osclog::{split_segments, OscLogWriter};
+use crate::obs::{Counter, FCounter, Gauge, MetricsRegistry, TraceSink, TsRing};
+use crate::util::json::{num, s};
 use crate::quant::{
     fp4_format, Fp4Format, GroupGeom, Int4Quantizer, MxQuantizer, NvQuantizer,
     PackedMx, QemaQuantizer, Quantizer, Scaling,
@@ -86,28 +89,50 @@ impl OscState {
             OscState::Packed(t) => t.reset_window(),
         }
     }
+
+    fn window(&self) -> &OscWindow {
+        match self {
+            OscState::F32(t) => t.window(),
+            OscState::Packed(t) => t.window(),
+        }
+    }
 }
+
+/// Per-step phase names, in emission order, shared by the phase
+/// fcounters and the trainer's Chrome trace spans (`train.<phase>`).
+pub(crate) const TRAIN_PHASES: [&str; 5] = ["hlo", "mirror", "controllers", "metrics", "eval"];
+
+/// Trace `tid` for trainer spans (serve uses 0 = scheduler, 1 = fleet).
+pub(crate) const TRAIN_TRACE_TID: u64 = 2;
+
+/// Retained window of the trainer's per-step rings.
+pub(crate) const TRAIN_RING_CAP: usize = 256;
 
 /// Trainer instrumentation: per-step phase timing plus the oscillation
 /// flip-rate / rate-of-change metrics re-exported as registry gauges so
-/// one snapshot surface covers serving and training alike.
-struct TrainerObs {
-    reg: MetricsRegistry,
-    steps: Counter,
-    hlo_ms: FCounter,
-    mirror_ms: FCounter,
-    controllers_ms: FCounter,
-    metrics_ms: FCounter,
-    eval_ms: FCounter,
-    osc_flips: Gauge,
-    osc_ratio: Gauge,
-    rate_w: Gauge,
-    rate_wq: Gauge,
-    rate_y: Gauge,
+/// one snapshot surface covers serving and training alike. Shared with
+/// the synthetic (no-HLO) trainer so both populate identical names.
+pub(crate) struct TrainerObs {
+    pub(crate) reg: MetricsRegistry,
+    pub(crate) steps: Counter,
+    pub(crate) hlo_ms: FCounter,
+    pub(crate) mirror_ms: FCounter,
+    pub(crate) controllers_ms: FCounter,
+    pub(crate) metrics_ms: FCounter,
+    pub(crate) eval_ms: FCounter,
+    pub(crate) osc_flips: Gauge,
+    pub(crate) osc_ratio: Gauge,
+    pub(crate) rate_w: Gauge,
+    pub(crate) rate_wq: Gauge,
+    pub(crate) rate_y: Gauge,
+    /// Rolling wall-clock per step (`train.step_ms`).
+    pub(crate) step_ms: TsRing,
+    /// Rolling global flip count per step (`train.osc.step_flips`).
+    pub(crate) step_flips: TsRing,
 }
 
 impl TrainerObs {
-    fn new() -> TrainerObs {
+    pub(crate) fn new() -> TrainerObs {
         let reg = MetricsRegistry::new();
         TrainerObs {
             steps: reg.counter("train.steps"),
@@ -121,6 +146,8 @@ impl TrainerObs {
             rate_w: reg.gauge("train.rate.w"),
             rate_wq: reg.gauge("train.rate.wq"),
             rate_y: reg.gauge("train.rate.y"),
+            step_ms: reg.ring("train.step_ms", TRAIN_RING_CAP),
+            step_flips: reg.ring("train.osc.step_flips", TRAIN_RING_CAP),
             reg,
         }
     }
@@ -153,6 +180,10 @@ pub struct Trainer<'a> {
     scratch_conf: Vec<f32>,
     scratch_lat: Vec<f32>,
     obs: TrainerObs,
+    observatory: Option<OscObservatory>,
+    trace: Option<TraceSink>,
+    /// Running virtual/wall timeline for non-deterministic trace spans.
+    trace_clock: f64,
 }
 
 impl<'a> Trainer<'a> {
@@ -247,7 +278,76 @@ impl<'a> Trainer<'a> {
             scratch_conf: Vec::new(),
             scratch_lat: Vec::new(),
             obs: TrainerObs::new(),
+            observatory: None,
+            trace: None,
+            trace_clock: 0.0,
         })
+    }
+
+    /// Short name of the active forward-quantizer mirror.
+    pub fn mirror_name(&self) -> &'static str {
+        match self.mirror {
+            WqMirror::Identity => "identity",
+            WqMirror::Mx => "mx",
+            WqMirror::Qema => "qema",
+            WqMirror::Int4 => "int4",
+            WqMirror::Nvfp4 => "nvfp4",
+        }
+    }
+
+    /// Attach an oscillation observatory writing OSCLOG01 telemetry to
+    /// `writer`: one slice per depth of each quantized manifest segment,
+    /// recorded every step under the active mirror's group geometry.
+    /// Requires an oscillation window (`metrics.osc_window > 0`).
+    pub fn make_observatory(&mut self, writer: OscLogWriter, seed: u64) -> Result<()> {
+        if self.cfg.metrics.osc_window == 0 {
+            bail!("observatory requires metrics.osc_window > 0");
+        }
+        let man = &self.arts.manifest;
+        let mut segs = Vec::new();
+        for seg in man.quantized_segments() {
+            segs.extend(split_segments(&seg.name, &seg.shape, seg.offset));
+        }
+        let meta = vec![
+            ("variant".to_string(), s(&self.cfg.variant)),
+            ("mirror".to_string(), s(self.mirror_name())),
+            ("seed".to_string(), num(seed as f64)),
+        ];
+        self.observatory = Some(OscObservatory::new(
+            segs,
+            man.qw_total,
+            self.fmt,
+            self.scaling,
+            self.metric_geom(),
+            self.cfg.metrics.rw_threshold,
+            self.cfg.metrics.osc_window,
+            meta,
+            writer,
+        ));
+        Ok(())
+    }
+
+    /// The attached observatory, if any.
+    pub fn observatory(&self) -> Option<&OscObservatory> {
+        self.observatory.as_ref()
+    }
+
+    /// Mutable access (flush/finish at end of run).
+    pub fn observatory_mut(&mut self) -> Option<&mut OscObservatory> {
+        self.observatory.as_mut()
+    }
+
+    /// Attach a Chrome trace sink: every step emits one `train.<phase>`
+    /// span per phase ([`TRAIN_PHASES`]) at tid 2. A deterministic sink
+    /// gets a simulated timeline (1 ms per phase) instead of wall time,
+    /// so fixed (seed, config) runs produce byte-identical traces.
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = Some(sink);
+    }
+
+    /// The attached trace sink, if any.
+    pub fn trace_mut(&mut self) -> Option<&mut TraceSink> {
+        self.trace.as_mut()
     }
 
     /// The trainer's metrics registry: `train.steps`,
@@ -384,9 +484,54 @@ impl<'a> Trainer<'a> {
         (lat, conf)
     }
 
+    /// Cumulative per-phase milliseconds, in [`TRAIN_PHASES`] order.
+    fn phase_totals(&self) -> [f64; 5] {
+        [
+            self.obs.hlo_ms.get(),
+            self.obs.mirror_ms.get(),
+            self.obs.controllers_ms.get(),
+            self.obs.metrics_ms.get(),
+            self.obs.eval_ms.get(),
+        ]
+    }
+
+    /// Emit this step's phase spans from the fcounter deltas. The
+    /// deterministic timeline is simulated (1 ms per phase, 5 ms per
+    /// step); otherwise measured deltas advance a running clock.
+    fn emit_step_trace(&mut self, step: usize, before: [f64; 5]) {
+        let after = self.phase_totals();
+        let Some(tr) = &mut self.trace else { return };
+        if tr.deterministic() {
+            let base = step as f64 * TRAIN_PHASES.len() as f64;
+            for (i, name) in TRAIN_PHASES.iter().enumerate() {
+                tr.duration(
+                    &format!("train.{name}"),
+                    base + i as f64,
+                    1.0,
+                    TRAIN_TRACE_TID,
+                    vec![("step", num(step as f64))],
+                );
+            }
+        } else {
+            for (i, name) in TRAIN_PHASES.iter().enumerate() {
+                let d = (after[i] - before[i]).max(0.0);
+                tr.duration(
+                    &format!("train.{name}"),
+                    self.trace_clock,
+                    d,
+                    TRAIN_TRACE_TID,
+                    vec![("step", num(step as f64))],
+                );
+                self.trace_clock += d;
+            }
+        }
+    }
+
     /// Run one optimization step; returns (train loss, batch accuracy).
     pub fn step(&mut self) -> Result<(f32, f32)> {
         let step = self.state.step;
+        let t_step = std::time::Instant::now();
+        let phases_before = self.trace.is_some().then(|| self.phase_totals());
         // Policy inputs for this step.
         if let Some(q) = &self.qramp {
             self.state.nw = q.nw_for_step(step);
@@ -429,6 +574,10 @@ impl<'a> Trainer<'a> {
         self.obs.steps.inc();
 
         self.after_step(step, loss, acc)?;
+        self.obs.step_ms.push(t_step.elapsed().as_secs_f64() * 1e3);
+        if let Some(before) = phases_before {
+            self.emit_step_trace(step, before);
+        }
         Ok((loss, acc))
     }
 
@@ -438,11 +587,13 @@ impl<'a> Trainer<'a> {
 
         let need_wq = self.qramp.is_some() || self.freeze.is_some() || self.metrics_enabled();
         if need_wq {
-            // The osc tracker reads packed codes directly; only the
-            // controllers and the rate tracker consume the f32 view.
+            // The osc tracker reads packed codes directly; the
+            // controllers, the rate tracker and the observatory's
+            // W−Wq distance consume the f32 view.
             let need_view = self.qramp.is_some()
                 || self.freeze.is_some()
-                || self.cfg.metrics.rate_window > 0;
+                || self.cfg.metrics.rate_window > 0
+                || self.observatory.is_some();
             let t_mirror = std::time::Instant::now();
             self.mirror_wq_inner(need_view);
             self.obs.mirror_ms.add(t_mirror.elapsed().as_secs_f64() * 1e3);
@@ -495,14 +646,29 @@ impl<'a> Trainer<'a> {
                         OscState::F32(t) => t.observe(self.state.qw(), &self.wq_buf),
                         OscState::Packed(t) => t.observe(self.state.qw(), &self.packed),
                     }
+                    if let Some(ob) = &mut self.observatory {
+                        let flips =
+                            ob.record_step(step + 1, self.state.qw(), &self.wq_buf, t.window());
+                        self.obs.step_flips.push(flips as f64);
+                    }
                     if t.steps() >= m.osc_window {
                         let count = t.oscillating_count(m.rw_threshold);
+                        if let Some(ob) = &mut self.observatory {
+                            let total = ob.record_window_end(step + 1, t.window());
+                            debug_assert_eq!(
+                                total, count,
+                                "per-segment partition must sum to the global count"
+                            );
+                        }
                         self.obs.osc_flips.set(count as f64);
                         self.obs
                             .osc_ratio
                             .set(count as f64 / self.wq_buf.len().max(1) as f64);
                         self.rec.osc_series.push((step + 1, count, m.osc_window));
                         t.reset_window();
+                        if let Some(ob) = &mut self.observatory {
+                            ob.note_reset();
+                        }
                     }
                 }
             }

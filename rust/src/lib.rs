@@ -41,6 +41,7 @@ pub mod experiments;
 pub mod metrics;
 pub mod obs;
 pub mod quant;
+pub mod report;
 pub mod runtime;
 pub mod serve;
 pub mod testing;

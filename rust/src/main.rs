@@ -18,7 +18,9 @@ subcommands:
   train          train one configuration
   eval           evaluate a checkpoint
   serve          packed-native inference over a checkpoint (no XLA)
+  report         analyze an OSCLOG01 artifact offline (markdown + json)
   obs-validate   validate a --trace-out JSONL / --metrics-out snapshot
+                 / --osc-out OSCLOG / report json
   exp <id>       run an experiment harness (table1..table7, fig2..fig6, all)
   list-variants  print all known method variants
   help           this text
@@ -45,6 +47,19 @@ train options:
   --metrics LEVEL   off | standard | full (default off)
   --metrics-out PATH  write the trainer's metrics-registry snapshot
                     (phase timings, oscillation gauges) as json
+  --osc-out PATH    stream per-segment oscillation telemetry (flips,
+                    confidence, |W-Wq|, window counts) as an OSCLOG01
+                    JSONL artifact (input of `report`); enables an
+                    oscillation window (default 50) if none is set
+  --osc-window N    override the oscillation-window length
+  --trace-out PATH  write a Chrome trace-event JSONL of per-step phase
+                    spans (hlo/mirror/controllers/metrics/eval) — the
+                    same format `serve --trace-out` emits
+  --synthetic NAME  no-artifacts observatory run: a seeded random walk
+                    over a synthetic layout (tiny | micro) through the
+                    identical quantize/track/record machinery; variant
+                    selects the mirror (mx | nvfp4). Deterministic —
+                    the `make report-smoke` path
 
 eval options:
   --variant NAME    method variant artifact to evaluate with
@@ -100,11 +115,22 @@ serve options:
   --metrics-addr A  serve the live registry as text over TCP on A
                     (e.g. 127.0.0.1:9464; port 0 picks a free one)
 
+report options:
+  --osclog PATH     OSCLOG01 artifact produced by train --osc-out
+  --compare PATH    second artifact; appends a controller-effect table
+                    (flip-rate deltas per segment, fraction shift)
+  --top N           top-K oscillating segments to list (default 10)
+  --json PATH       also write the report as OSCREPORT01 json
+
 obs-validate options:
   --trace PATH      check a --trace-out JSONL: parseable lines, trace
                     schema, nonnegative ts/dur; reprints the digest
   --snapshot PATH   check a --metrics-out snapshot carries the stable
                     scheduler/fleet/kernel/latency metric names
+  --osclog PATH     check an OSCLOG01 artifact: header schema, segment
+                    tiling, monotone step ids, window counts bounded by
+                    segment sizes; reprints the recomputed digest
+  --report PATH     check an OSCREPORT01 json carries the stable keys
 
 exp options:
   --quick           reduced steps/eval for smoke runs
@@ -153,6 +179,7 @@ fn run() -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "report" => cmd_report(&args),
         "obs-validate" => cmd_obs_validate(&args),
         "exp" => cmd_exp(&args),
         other => bail!("unknown subcommand {other:?}\n{USAGE}"),
@@ -169,7 +196,85 @@ fn base_paths(args: &Args) -> (std::path::PathBuf, String, usize) {
     (root, model, batch)
 }
 
+fn parse_metrics(args: &Args, default_level: &str) -> Result<MetricsCfg> {
+    Ok(match args.get_or("metrics", default_level) {
+        "off" => MetricsCfg::off(),
+        "standard" => MetricsCfg::standard(),
+        "full" => MetricsCfg::full(),
+        other => bail!("unknown metrics level {other:?}"),
+    })
+}
+
+/// Write a registry snapshot json (shared by train/serve paths).
+fn write_snapshot(reg: &tetrajet::obs::MetricsRegistry, p: &str) -> Result<()> {
+    let path = std::path::Path::new(p);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, reg.snapshot_json().to_string() + "\n")?;
+    Ok(())
+}
+
+/// `train --synthetic NAME`: the no-artifacts observatory path — a
+/// seeded random walk through the identical quantize/track/record
+/// machinery, producing byte-stable OSCLOG01 + trace artifacts
+/// (`make report-smoke` gates on the digests).
+fn cmd_train_synthetic(args: &Args, model: &str) -> Result<()> {
+    use tetrajet::coordinator::SynthTrainer;
+    use tetrajet::obs::osclog::OscLogWriter;
+
+    let variant = args.get_or("variant", "mx").to_string();
+    let steps = args.get_usize("steps", 60)?;
+    let seed = args.get_u64("seed", 0)?;
+    let mut metrics = parse_metrics(args, "standard")?;
+    if metrics.osc_window == 0 {
+        metrics.osc_window = MetricsCfg::standard().osc_window;
+    }
+    metrics.osc_window = args.get_usize("osc-window", metrics.osc_window)?;
+    let mut tr = SynthTrainer::new(model, &variant, seed, metrics)?;
+    if let Some(p) = args.get("osc-out") {
+        tr.attach_osclog(OscLogWriter::to_file(std::path::Path::new(p))?);
+        loginfo!("oscillation observatory -> {p}");
+    }
+    if let Some(p) = args.get("trace-out") {
+        tr.set_trace(tetrajet::obs::TraceSink::to_file(std::path::Path::new(p), true)?);
+        loginfo!("tracing to {p} (deterministic=true)");
+    }
+    let rep = tr.run(steps)?;
+    println!(
+        "synthetic[{model}/{variant}]: {} steps over {} quantized weights \
+         in {} slices, {} windows closed",
+        rep.steps,
+        rep.qw_total,
+        rep.segments,
+        rep.windows.len()
+    );
+    if let Some((step, count)) = rep.windows.last() {
+        println!(
+            "window[{step}]: {count} oscillating ({:.6} of the quantized prefix)",
+            *count as f64 / rep.qw_total.max(1) as f64
+        );
+    }
+    if let Some((lines, digest)) = &rep.osclog {
+        println!("OSCLOG lines={lines} digest={digest}");
+    }
+    if let Some((events, digest)) = &rep.trace {
+        println!("TRACE events={events} digest={digest}");
+    }
+    if let Some(p) = args.get("metrics-out") {
+        write_snapshot(tr.registry(), p)?;
+        loginfo!("trainer metrics snapshot written to {p}");
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
+    if let Some(name) = args.get("synthetic") {
+        let name = name.to_string();
+        return cmd_train_synthetic(args, &name);
+    }
     let (root, model, batch) = base_paths(args);
     let variant = args.get_or("variant", "tetrajet").to_string();
     let client = tetrajet::runtime::cpu_client()?;
@@ -187,12 +292,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.eval_samples = args.get_usize("eval-samples", cfg.eval_samples)?;
     cfg.init_seed = args.get_usize("seed", 0)? as i32;
     cfg.policy = parse_policy(args)?;
-    cfg.metrics = match args.get_or("metrics", "off") {
-        "off" => MetricsCfg::off(),
-        "standard" => MetricsCfg::standard(),
-        "full" => MetricsCfg::full(),
-        other => bail!("unknown metrics level {other:?}"),
-    };
+    cfg.metrics = parse_metrics(args, "off")?;
+    if let Some(w) = args.get("osc-window") {
+        cfg.metrics.osc_window = w.parse()?;
+    }
+    let osc_out = args.get("osc-out").map(std::path::PathBuf::from);
+    if osc_out.is_some() && cfg.metrics.osc_window == 0 {
+        // --osc-out implies oscillation tracking.
+        cfg.metrics.osc_window = MetricsCfg::standard().osc_window;
+    }
     loginfo!("config: {}", cfg.to_json().to_string());
 
     let params = artifacts::run_init(&client, &root, &model, cfg.init_seed)?;
@@ -200,12 +308,30 @@ fn cmd_train(args: &Args) -> Result<()> {
     if args.has_flag("ckpt-packed") && ckpt_out.is_none() {
         bail!("--ckpt-packed requires --ckpt-out PATH");
     }
+    let seed = args.get_u64("seed", 0)?;
     let mut tr = Trainer::new(&arts, cfg, params)?;
+    if let Some(p) = &osc_out {
+        tr.make_observatory(tetrajet::obs::osclog::OscLogWriter::to_file(p)?, seed)?;
+        loginfo!("oscillation observatory -> {}", p.display());
+    }
+    if let Some(p) = args.get("trace-out") {
+        tr.set_trace(tetrajet::obs::TraceSink::to_file(std::path::Path::new(p), false)?);
+        loginfo!("tracing to {p} (deterministic=false)");
+    }
     let ev = tr.run()?;
     println!(
         "final: top-1 {:.2}%  val-loss {:.4}  ({} samples)",
         ev.acc_pct, ev.mean_loss, ev.samples
     );
+    if let Some(ob) = tr.observatory_mut() {
+        ob.finish()?;
+        println!("OSCLOG lines={} digest={}", ob.lines(), ob.digest());
+    }
+    if let Some(t) = tr.trace_mut() {
+        let (events, digest) = (t.events(), t.digest());
+        t.finish()?;
+        println!("TRACE events={events} digest={digest}");
+    }
     if let Some(p) = ckpt_out {
         if args.has_flag("ckpt-packed") {
             tr.save_packed_checkpoint(&p)?;
@@ -216,13 +342,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
     }
     if let Some(p) = args.get("metrics-out") {
-        let path = std::path::Path::new(p);
-        if let Some(parent) = path.parent() {
-            if !parent.as_os_str().is_empty() {
-                std::fs::create_dir_all(parent)?;
-            }
-        }
-        std::fs::write(path, tr.registry().snapshot_json().to_string() + "\n")?;
+        write_snapshot(tr.registry(), p)?;
         loginfo!("trainer metrics snapshot written to {p}");
     }
     Ok(())
@@ -667,10 +787,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Validate observability artifacts written by `serve`: a Chrome
-/// trace-event JSONL (`--trace`) and/or a metrics snapshot json
-/// (`--snapshot`). Exits nonzero on any schema violation, which is
-/// what `make obs-smoke` gates on.
+/// `tetrajet report`: replay an OSCLOG01 artifact offline into the
+/// paper's per-layer oscillation diagnostics. Pure function of the
+/// artifact bytes — markdown to stdout, optional OSCREPORT01 json.
+fn cmd_report(args: &Args) -> Result<()> {
+    use tetrajet::report;
+    let Some(p) = args.get("osclog") else { bail!("report needs --osclog PATH") };
+    let top = args.get_usize("top", 10)?;
+    let log = report::load_osclog(std::path::Path::new(p))?;
+    let rep = report::analyze(&log, top);
+    let mut md = rep.to_markdown();
+    if let Some(p2) = args.get("compare") {
+        let other = report::analyze(&report::load_osclog(std::path::Path::new(p2))?, top);
+        md.push('\n');
+        md.push_str(&report::compare_markdown(&rep, &other));
+    }
+    print!("{md}");
+    if let Some(out) = args.get("json") {
+        let path = std::path::Path::new(out);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        // No loginfo here: stdout is the markdown report (often
+        // redirected to a file), so nothing else may land on it.
+        std::fs::write(path, rep.to_json().to_string() + "\n")?;
+    }
+    Ok(())
+}
+
+/// Validate observability artifacts written by `serve`/`train`: a
+/// Chrome trace-event JSONL (`--trace`), a metrics snapshot json
+/// (`--snapshot`), an OSCLOG01 telemetry artifact (`--osclog`) and/or
+/// an OSCREPORT01 json (`--report`). Exits nonzero on any schema
+/// violation, which is what `make obs-smoke`/`report-smoke` gate on.
 fn cmd_obs_validate(args: &Args) -> Result<()> {
     use tetrajet::util::json::Json;
 
@@ -723,7 +874,7 @@ fn cmd_obs_validate(args: &Args) -> Result<()> {
     if let Some(p) = args.get("snapshot") {
         checked = true;
         let doc = Json::parse(&std::fs::read_to_string(p)?)?;
-        for section in ["counters", "gauges", "hists", "series"] {
+        for section in ["counters", "gauges", "hists", "series", "rings"] {
             if doc.get(section).is_none() {
                 bail!("{p}: snapshot missing section {section:?}");
             }
@@ -756,8 +907,65 @@ fn cmd_obs_validate(args: &Args) -> Result<()> {
         require("series", "serve.latency_ms")?;
         println!("obs-validate[snapshot]: schema ok ({p})");
     }
+    if let Some(p) = args.get("osclog") {
+        checked = true;
+        // The loader already enforces header schema, contiguous segment
+        // tiling, per-record array lengths and osc-sum consistency.
+        let log = tetrajet::report::load_osclog(std::path::Path::new(p))?;
+        let mut prev: Option<usize> = None;
+        for st in &log.steps {
+            if prev.is_some_and(|q| st.t <= q) {
+                bail!("{p}: step ids not strictly increasing at t={}", st.t);
+            }
+            prev = Some(st.t);
+        }
+        let mut prev_w: Option<usize> = None;
+        for w in &log.windows {
+            if prev_w.is_some_and(|q| w.step <= q) {
+                bail!("{p}: window_end not strictly increasing at {}", w.step);
+            }
+            prev_w = Some(w.step);
+            for (k, seg) in w.osc.iter().zip(&log.segments) {
+                if *k as usize > seg.size {
+                    bail!("{p}: window at {} counts {k} oscillating in {:?} (size {})",
+                        w.step, seg.name, seg.size);
+                }
+            }
+        }
+        println!(
+            "obs-validate[osclog]: {} segments, {} steps, {} windows, digest {}",
+            log.segments.len(),
+            log.steps.len(),
+            log.windows.len(),
+            log.digest
+        );
+    }
+    if let Some(p) = args.get("report") {
+        checked = true;
+        let doc = Json::parse(&std::fs::read_to_string(p)?)?;
+        let fmt = doc.req("format")?.as_str()?;
+        if fmt != tetrajet::report::REPORT_FORMAT {
+            bail!("{p}: unknown report format {fmt:?}");
+        }
+        for key in [
+            "log_digest",
+            "osc_fraction",
+            "osc_count",
+            "steps",
+            "windows",
+            "top",
+            "by_depth",
+            "by_kind",
+            "segments",
+        ] {
+            if doc.get(key).is_none() {
+                bail!("{p}: report missing {key:?}");
+            }
+        }
+        println!("obs-validate[report]: schema ok ({p})");
+    }
     if !checked {
-        bail!("obs-validate needs --trace PATH and/or --snapshot PATH");
+        bail!("obs-validate needs --trace / --snapshot / --osclog / --report PATH");
     }
     Ok(())
 }

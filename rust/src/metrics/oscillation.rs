@@ -74,9 +74,17 @@ impl OscWindow {
 
     /// Count of elements with R_w > threshold (paper uses 16, Fig. 6).
     pub fn oscillating_count(&self, threshold: f32) -> usize {
-        self.dist_w
+        self.oscillating_count_in(threshold, 0, self.dist_w.len())
+    }
+
+    /// [`Self::oscillating_count`] restricted to elements `lo..hi` —
+    /// the same per-element predicate, so partition sums over disjoint
+    /// ranges equal the global count exactly (the observatory relies on
+    /// this for bit-exact per-segment / aggregate agreement).
+    pub fn oscillating_count_in(&self, threshold: f32, lo: usize, hi: usize) -> usize {
+        self.dist_w[lo..hi]
             .iter()
-            .zip(&self.dist_q)
+            .zip(&self.dist_q[lo..hi])
             .filter(|(&dw, &dq)| {
                 if dw > 0.0 {
                     dq / dw > threshold
@@ -85,6 +93,11 @@ impl OscWindow {
                 }
             })
             .count()
+    }
+
+    /// Cumulative per-element flip counts for the current window.
+    pub fn flips(&self) -> &[u32] {
+        &self.flips
     }
 
     /// Flipping frequency f per element (flips per window step).
@@ -166,6 +179,11 @@ impl OscTracker {
         &self.run_avg
     }
 
+    /// The shared window accumulators (read-only).
+    pub fn window(&self) -> &OscWindow {
+        &self.win
+    }
+
     /// Start a new window from the current snapshots.
     pub fn reset_window(&mut self) {
         self.win.reset();
@@ -235,6 +253,11 @@ impl PackedOscTracker {
 
     pub fn flip_freq_into(&self, out: &mut Vec<f32>) {
         self.win.flip_freq_into(out);
+    }
+
+    /// The shared window accumulators (read-only).
+    pub fn window(&self) -> &OscWindow {
+        &self.win
     }
 
     /// Start a new window from the current snapshots.

@@ -71,4 +71,86 @@ mod tests {
         reg.counter("serve.images").add(8);
         assert!(fetch().contains("serve.images 50"));
     }
+
+    fn scrape(addr: SocketAddr) -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut text = String::new();
+        stream.read_to_string(&mut text).unwrap();
+        text
+    }
+
+    /// `name value` lines of the body, keyed verbatim (histogram bucket
+    /// keys keep their `{le="..."}` suffix).
+    fn parse_exposition(resp: &str) -> std::collections::HashMap<String, f64> {
+        let body = resp.split("\r\n\r\n").nth(1).expect("response has a body");
+        body.lines()
+            .filter(|l| !l.is_empty())
+            .map(|l| {
+                let (k, v) = l.rsplit_once(' ').expect("line is `name value`");
+                (k.to_string(), v.parse::<f64>().expect("value parses as a number"))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn scrape_round_trips_every_metric_kind_over_a_real_socket() {
+        let reg = MetricsRegistry::new();
+        reg.counter("sched.admits").add(3);
+        reg.fcounter("serve.busy_ms").add(2.5);
+        reg.gauge("sched.queue_depth").set(7.0);
+        let h = reg.histogram("fleet.batch_images", &[1.0, 2.0, 4.0]);
+        for v in [1.0, 3.0, 5.0] {
+            h.observe(v);
+        }
+        let s = reg.series_with_capacity("serve.latency_ms", 2);
+        for v in [10.0, 20.0, 30.0] {
+            s.record(v);
+        }
+        let r = reg.ring("fleet.engine0.busy_ratio", 2);
+        for v in [1.0, 2.0, 3.0] {
+            r.push(v);
+        }
+
+        let addr = spawn_metrics_endpoint("127.0.0.1:0", reg.clone()).unwrap();
+        let resp = scrape(addr);
+        assert!(resp.starts_with("HTTP/1.0 200 OK"), "{resp}");
+        // The declared Content-Length frames the body exactly.
+        let body = resp.split("\r\n\r\n").nth(1).unwrap();
+        let clen: usize = resp
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert_eq!(clen, body.len());
+
+        let m = parse_exposition(&resp);
+        assert_eq!(m["sched.admits"], 3.0);
+        assert_eq!(m["serve.busy_ms"], 2.5);
+        assert_eq!(m["sched.queue_depth"], 7.0);
+        // Histogram: cumulative buckets + count + sum.
+        assert_eq!(m["fleet.batch_images_bucket{le=\"1\"}"], 1.0);
+        assert_eq!(m["fleet.batch_images_bucket{le=\"2\"}"], 1.0);
+        assert_eq!(m["fleet.batch_images_bucket{le=\"4\"}"], 2.0);
+        assert_eq!(m["fleet.batch_images_bucket{le=\"+Inf\"}"], 3.0);
+        assert_eq!(m["fleet.batch_images_count"], 3.0);
+        assert_eq!(m["fleet.batch_images_sum"], 9.0);
+        // Series: total count survives ring eviction (cap 2, 3 recorded);
+        // percentiles run over the retained window [20, 30].
+        assert_eq!(m["serve.latency_ms_count"], 3.0);
+        assert_eq!(m["serve.latency_ms_max"], 30.0);
+        assert!(m["serve.latency_ms_p50"] >= 20.0);
+        // Ring: total count + window aggregates over [2, 3].
+        assert_eq!(m["fleet.engine0.busy_ratio_count"], 3.0);
+        assert_eq!(m["fleet.engine0.busy_ratio_min"], 2.0);
+        assert_eq!(m["fleet.engine0.busy_ratio_mean"], 2.5);
+        assert_eq!(m["fleet.engine0.busy_ratio_max"], 3.0);
+        assert_eq!(m["fleet.engine0.busy_ratio_last"], 3.0);
+
+        // A second scrape after a live update sees the new totals.
+        reg.counter("sched.admits").add(1);
+        assert_eq!(parse_exposition(&scrape(addr))["sched.admits"], 4.0);
+    }
 }

@@ -1,6 +1,6 @@
 //! Global-free metrics registry: named counters, gauges, fixed-bucket
-//! histograms and raw-sample series, handed out as cheap atomic
-//! handles.
+//! histograms, raw-sample series and windowed time-series rings,
+//! handed out as cheap atomic handles.
 //!
 //! There are deliberately no statics: a [`MetricsRegistry`] is owned by
 //! whoever runs the loop being measured (a `ServeFleet`, a
@@ -12,8 +12,8 @@
 //! atomics) and safe to bump from engine worker threads.
 //!
 //! Snapshots come in two stable shapes: [`MetricsRegistry::snapshot_json`]
-//! (one JSON object with `counters` / `gauges` / `hists` / `series`
-//! sections, names sorted) and [`MetricsRegistry::text_exposition`]
+//! (one JSON object with `counters` / `gauges` / `hists` / `series` /
+//! `rings` sections, names sorted) and [`MetricsRegistry::text_exposition`]
 //! (one `name value` line per scalar, Prometheus-flavoured histogram
 //! lines), served over TCP by [`crate::obs::spawn_metrics_endpoint`].
 
@@ -170,39 +170,221 @@ impl Histo {
     }
 }
 
+/// Shared ring storage: the newest `cap` samples in push order, plus a
+/// monotonic total of everything ever pushed. Backs both [`Series`]
+/// (percentile store) and [`TsRing`] (windowed aggregates).
+#[derive(Debug, Clone)]
+struct RingBuf {
+    buf: Vec<f64>,
+    cap: usize,
+    /// Overwrite cursor, meaningful once `buf.len() == cap`.
+    next: usize,
+    total: u64,
+}
+
+impl RingBuf {
+    fn new(cap: usize) -> RingBuf {
+        assert!(cap >= 1, "ring capacity must be >= 1");
+        RingBuf { buf: Vec::new(), cap, next: 0, total: 0 }
+    }
+
+    fn push(&mut self, v: f64) {
+        self.total += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    /// Retained samples, oldest first.
+    fn window(&self) -> Vec<f64> {
+        if self.buf.len() < self.cap {
+            self.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(self.cap);
+            out.extend_from_slice(&self.buf[self.next..]);
+            out.extend_from_slice(&self.buf[..self.next]);
+            out
+        }
+    }
+
+    fn last(&self) -> Option<f64> {
+        if self.buf.is_empty() {
+            None
+        } else if self.buf.len() < self.cap {
+            self.buf.last().copied()
+        } else {
+            Some(self.buf[(self.next + self.cap - 1) % self.cap])
+        }
+    }
+}
+
+/// Default retained-sample bound for [`Series`] — large enough that a
+/// whole load-test run keeps exact percentiles, small enough that a
+/// per-step push path cannot grow without limit.
+pub const SERIES_DEFAULT_CAP: usize = 65_536;
+
 /// Raw-sample store for exact percentiles (latency distributions).
-/// Unbounded by design — serving runs are finite; long-running loops
-/// should prefer [`Histo`].
-#[derive(Debug, Clone, Default)]
-pub struct Series(Arc<Mutex<Vec<f64>>>);
+/// Bounded: ring semantics keep only the newest `capacity` samples
+/// (percentiles are computed over that window) while `count()` stays
+/// the monotonic total ever recorded. Long-running loops that only need
+/// coarse distributions should still prefer [`Histo`]; per-step window
+/// aggregates belong in [`TsRing`].
+#[derive(Debug, Clone)]
+pub struct Series(Arc<Mutex<RingBuf>>);
+
+impl Default for Series {
+    fn default() -> Series {
+        Series::with_capacity(SERIES_DEFAULT_CAP)
+    }
+}
 
 impl Series {
+    /// A series retaining at most `cap >= 1` samples.
+    pub fn with_capacity(cap: usize) -> Series {
+        Series(Arc::new(Mutex::new(RingBuf::new(cap))))
+    }
+
     pub fn record(&self, v: f64) {
         self.0.lock().unwrap().push(v);
     }
 
+    /// Retained samples (<= capacity).
     pub fn len(&self) -> usize {
-        self.0.lock().unwrap().len()
+        self.0.lock().unwrap().buf.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Total samples ever recorded (monotonic; survives ring overwrite).
+    pub fn count(&self) -> u64 {
+        self.0.lock().unwrap().total
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.0.lock().unwrap().cap
+    }
+
+    /// Retained samples, oldest first.
     pub fn values(&self) -> Vec<f64> {
-        self.0.lock().unwrap().clone()
+        self.0.lock().unwrap().window()
     }
 
     fn to_json(&self) -> Json {
+        let total = self.count();
         let xs = self.values();
         let max = xs.iter().fold(0.0f64, |a, &b| a.max(b));
         Json::Obj(vec![
-            ("count".to_string(), num(xs.len() as f64)),
+            ("count".to_string(), num(total as f64)),
             ("mean".to_string(), num(mean(&xs))),
             ("p50".to_string(), num(percentile(&xs, 50.0))),
             ("p95".to_string(), num(percentile(&xs, 95.0))),
             ("p99".to_string(), num(percentile(&xs, 99.0))),
             ("max".to_string(), num(max)),
+        ])
+    }
+}
+
+/// Windowed aggregates of a [`TsRing`]. `count` is the monotonic total
+/// pushed; `min`/`mean`/`max` cover the non-NaN samples of the retained
+/// window and `last` is the newest sample. NaN means "no finite sample
+/// yet" and serializes as `null` (same convention as an unset [`Gauge`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RingAgg {
+    pub count: u64,
+    pub min: f64,
+    pub mean: f64,
+    pub max: f64,
+    pub last: f64,
+}
+
+/// Bounded windowed time series: a fixed-capacity ring of the newest
+/// samples with O(window) memory and min/mean/max/last aggregates —
+/// the per-step recording primitive (trainer step times, fleet
+/// busy-ratios, queue-depth samples) that replaces unbounded [`Series`]
+/// pushes on hot paths. NaN samples are retained (they advance the
+/// window) but excluded from the min/mean/max aggregates.
+#[derive(Debug, Clone)]
+pub struct TsRing(Arc<Mutex<RingBuf>>);
+
+impl TsRing {
+    /// A ring retaining at most `cap >= 1` samples.
+    pub fn with_capacity(cap: usize) -> TsRing {
+        TsRing(Arc::new(Mutex::new(RingBuf::new(cap))))
+    }
+
+    pub fn push(&self, v: f64) {
+        self.0.lock().unwrap().push(v);
+    }
+
+    /// Total samples ever pushed (monotonic).
+    pub fn count(&self) -> u64 {
+        self.0.lock().unwrap().total
+    }
+
+    /// Retained samples (<= capacity).
+    pub fn len(&self) -> usize {
+        self.0.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.0.lock().unwrap().cap
+    }
+
+    /// Retained samples, oldest first.
+    pub fn window(&self) -> Vec<f64> {
+        self.0.lock().unwrap().window()
+    }
+
+    /// Newest sample, if any.
+    pub fn last(&self) -> Option<f64> {
+        self.0.lock().unwrap().last()
+    }
+
+    /// Window aggregates; empty / all-NaN windows yield NaN fields.
+    pub fn agg(&self) -> RingAgg {
+        let inner = self.0.lock().unwrap();
+        let mut min = f64::NAN;
+        let mut max = f64::NAN;
+        let (mut sum, mut n) = (0.0f64, 0u64);
+        for &v in &inner.buf {
+            if v.is_nan() {
+                continue;
+            }
+            if min.is_nan() || v < min {
+                min = v;
+            }
+            if max.is_nan() || v > max {
+                max = v;
+            }
+            sum += v;
+            n += 1;
+        }
+        RingAgg {
+            count: inner.total,
+            min,
+            mean: if n > 0 { sum / n as f64 } else { f64::NAN },
+            max,
+            last: inner.last().unwrap_or(f64::NAN),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let a = self.agg();
+        Json::Obj(vec![
+            ("count".to_string(), num(a.count as f64)),
+            ("min".to_string(), num(a.min)),
+            ("mean".to_string(), num(a.mean)),
+            ("max".to_string(), num(a.max)),
+            ("last".to_string(), num(a.last)),
         ])
     }
 }
@@ -214,6 +396,7 @@ enum Metric {
     Gauge(Gauge),
     Histo(Histo),
     Series(Series),
+    Ring(TsRing),
 }
 
 impl Metric {
@@ -224,6 +407,7 @@ impl Metric {
             Metric::Gauge(_) => "gauge",
             Metric::Histo(_) => "histogram",
             Metric::Series(_) => "series",
+            Metric::Ring(_) => "ring",
         }
     }
 }
@@ -284,11 +468,30 @@ impl MetricsRegistry {
         }
     }
 
-    /// Register (or re-resolve) a raw-sample series named `name`.
+    /// Register (or re-resolve) a raw-sample series named `name` with
+    /// the default capacity ([`SERIES_DEFAULT_CAP`]).
     pub fn series(&self, name: &str) -> Series {
         match self.get_or_insert(name, || Metric::Series(Series::default())) {
             Metric::Series(s) => s,
             m => panic!("metric {name:?} is a {}, not a series", m.kind()),
+        }
+    }
+
+    /// Register (or re-resolve) a raw-sample series named `name`.
+    /// `cap` is ignored when the name already exists.
+    pub fn series_with_capacity(&self, name: &str, cap: usize) -> Series {
+        match self.get_or_insert(name, || Metric::Series(Series::with_capacity(cap))) {
+            Metric::Series(s) => s,
+            m => panic!("metric {name:?} is a {}, not a series", m.kind()),
+        }
+    }
+
+    /// Register (or re-resolve) a windowed time-series ring named
+    /// `name`. `cap` is ignored when the name already exists.
+    pub fn ring(&self, name: &str, cap: usize) -> TsRing {
+        match self.get_or_insert(name, || Metric::Ring(TsRing::with_capacity(cap))) {
+            Metric::Ring(r) => r,
+            m => panic!("metric {name:?} is a {}, not a ring", m.kind()),
         }
     }
 
@@ -300,13 +503,14 @@ impl MetricsRegistry {
     }
 
     /// One JSON object with stable sections: `counters` (integer and
-    /// float counters), `gauges`, `hists`, `series`. Names are sorted,
-    /// unset gauges serialize as `null`.
+    /// float counters), `gauges`, `hists`, `series`, `rings`. Names are
+    /// sorted, unset gauges serialize as `null`.
     pub fn snapshot_json(&self) -> Json {
         let mut counters = Vec::new();
         let mut gauges = Vec::new();
         let mut hists = Vec::new();
         let mut series = Vec::new();
+        let mut rings = Vec::new();
         for (name, m) in self.sorted() {
             match m {
                 Metric::Counter(c) => counters.push((name, num(c.get() as f64))),
@@ -314,6 +518,7 @@ impl MetricsRegistry {
                 Metric::Gauge(g) => gauges.push((name, num(g.get()))),
                 Metric::Histo(h) => hists.push((name, h.to_json())),
                 Metric::Series(s) => series.push((name, s.to_json())),
+                Metric::Ring(r) => rings.push((name, r.to_json())),
             }
         }
         Json::Obj(vec![
@@ -321,12 +526,14 @@ impl MetricsRegistry {
             ("gauges".to_string(), Json::Obj(gauges)),
             ("hists".to_string(), Json::Obj(hists)),
             ("series".to_string(), Json::Obj(series)),
+            ("rings".to_string(), Json::Obj(rings)),
         ])
     }
 
     /// Plain-text exposition: `name value` per scalar, histogram bucket
     /// lines as `name_bucket{le="B"} count` plus `_count`/`_sum`, series
-    /// as `_count`/`_p50`/`_p95`/`_p99`/`_max`.
+    /// as `_count`/`_p50`/`_p95`/`_p99`/`_max`, rings as
+    /// `_count`/`_min`/`_mean`/`_max`/`_last`.
     pub fn text_exposition(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::new();
@@ -355,12 +562,20 @@ impl MetricsRegistry {
                 }
                 Metric::Series(s) => {
                     let xs = s.values();
-                    let _ = writeln!(out, "{name}_count {}", xs.len());
+                    let _ = writeln!(out, "{name}_count {}", s.count());
                     let _ = writeln!(out, "{name}_p50 {}", percentile(&xs, 50.0));
                     let _ = writeln!(out, "{name}_p95 {}", percentile(&xs, 95.0));
                     let _ = writeln!(out, "{name}_p99 {}", percentile(&xs, 99.0));
                     let _ =
                         writeln!(out, "{name}_max {}", xs.iter().fold(0.0f64, |a, &b| a.max(b)));
+                }
+                Metric::Ring(r) => {
+                    let a = r.agg();
+                    let _ = writeln!(out, "{name}_count {}", a.count);
+                    let _ = writeln!(out, "{name}_min {}", a.min);
+                    let _ = writeln!(out, "{name}_mean {}", a.mean);
+                    let _ = writeln!(out, "{name}_max {}", a.max);
+                    let _ = writeln!(out, "{name}_last {}", a.last);
                 }
             }
         }
@@ -489,6 +704,116 @@ mod tests {
         assert!(text.contains("fleet.batch_images_bucket{le=\"1\"} 1"), "{text}");
         assert!(text.contains("fleet.batch_images_bucket{le=\"+Inf\"} 2"), "{text}");
         assert!(text.contains("fleet.batch_images_count 2"), "{text}");
+    }
+
+    #[test]
+    fn series_is_bounded_but_counts_everything() {
+        let s = Series::with_capacity(4);
+        for v in 0..10 {
+            s.record(v as f64);
+        }
+        assert_eq!(s.count(), 10, "total is monotonic");
+        assert_eq!(s.len(), 4, "retention is capped");
+        assert_eq!(s.capacity(), 4);
+        // Window keeps the newest samples, oldest first.
+        assert_eq!(s.values(), vec![6.0, 7.0, 8.0, 9.0]);
+        // Snapshot `count` reports the total, not the retained window.
+        let reg = MetricsRegistry::new();
+        let s2 = reg.series_with_capacity("b.lat", 2);
+        for v in [1.0, 2.0, 3.0] {
+            s2.record(v);
+        }
+        let j = reg.snapshot_json();
+        let lat = j.get("series").unwrap().get("b.lat").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_i64().unwrap(), 3);
+        assert!((lat.get("p50").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_window_and_aggregates() {
+        let reg = MetricsRegistry::new();
+        let r = reg.ring("t.step_ms", 3);
+        assert_eq!(reg.ring("t.step_ms", 99).capacity(), 3, "cap fixed at first registration");
+
+        // Empty window: count 0, NaN aggregates -> null in JSON.
+        let a = r.agg();
+        assert_eq!(a.count, 0);
+        assert!(a.min.is_nan() && a.mean.is_nan() && a.max.is_nan() && a.last.is_nan());
+        let j = reg.snapshot_json();
+        let rj = j.get("rings").unwrap().get("t.step_ms").unwrap();
+        assert!(matches!(rj.get("mean"), Some(Json::Null)), "NaN mean serializes as null");
+
+        // Single sample: all aggregates collapse to it.
+        r.push(2.0);
+        let a = r.agg();
+        assert_eq!((a.count, a.min, a.mean, a.max, a.last), (1, 2.0, 2.0, 2.0, 2.0));
+
+        // Overflow: window slides, count keeps the total.
+        for v in [4.0, 6.0, 8.0] {
+            r.push(v);
+        }
+        assert_eq!(r.window(), vec![4.0, 6.0, 8.0]);
+        assert_eq!(r.len(), 3);
+        let a = r.agg();
+        assert_eq!((a.count, a.min, a.mean, a.max, a.last), (4, 4.0, 6.0, 8.0, 8.0));
+
+        let text = reg.text_exposition();
+        assert!(text.contains("t.step_ms_count 4"), "{text}");
+        assert!(text.contains("t.step_ms_mean 6"), "{text}");
+        assert!(text.contains("t.step_ms_last 8"), "{text}");
+    }
+
+    #[test]
+    fn capacity_one_ring_tracks_last_sample_only() {
+        let r = TsRing::with_capacity(1);
+        for v in [5.0, 1.0, 3.0] {
+            r.push(v);
+        }
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.window(), vec![3.0]);
+        let a = r.agg();
+        assert_eq!((a.count, a.min, a.mean, a.max, a.last), (3, 3.0, 3.0, 3.0, 3.0));
+    }
+
+    #[test]
+    fn nan_samples_advance_window_but_skip_aggregates() {
+        let r = TsRing::with_capacity(4);
+        r.push(1.0);
+        r.push(f64::NAN);
+        r.push(3.0);
+        let a = r.agg();
+        assert_eq!(a.count, 3);
+        assert_eq!((a.min, a.mean, a.max, a.last), (1.0, 2.0, 3.0, 3.0));
+        // All-NaN window: aggregates are unset again.
+        let r2 = TsRing::with_capacity(2);
+        r2.push(f64::NAN);
+        r2.push(f64::NAN);
+        let a2 = r2.agg();
+        assert_eq!(a2.count, 2);
+        assert!(a2.min.is_nan() && a2.mean.is_nan() && a2.max.is_nan() && a2.last.is_nan());
+    }
+
+    #[test]
+    fn percentiles_monotone_under_seeded_random_fills() {
+        let mut rng = crate::util::rng::Rng::new(0x0b5e_7ab1e);
+        let s = Series::with_capacity(256);
+        for _ in 0..1000 {
+            s.record(rng.uniform() * 100.0);
+        }
+        assert_eq!(s.count(), 1000);
+        assert_eq!(s.len(), 256);
+        let xs = s.values();
+        let (p50, p95, p99) =
+            (percentile(&xs, 50.0), percentile(&xs, 95.0), percentile(&xs, 99.0));
+        let max = xs.iter().fold(f64::MIN, |a, &b| a.max(b));
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= max, "{p50} {p95} {p99} {max}");
+        // Window min/max bound every retained sample.
+        let r = TsRing::with_capacity(256);
+        for &v in &xs {
+            r.push(v);
+        }
+        let a = r.agg();
+        assert!(xs.iter().all(|&v| a.min <= v && v <= a.max));
     }
 
     #[test]

@@ -18,6 +18,10 @@
 //! - [`export`] — [`spawn_metrics_endpoint`], a std::net text
 //!   exposition endpoint for `serve --metrics-addr`, plus the periodic
 //!   one-line `METRICS {...}` snapshots the fleet loop prints.
+//! - [`osclog`] — the `OSCLOG01` oscillation-telemetry artifact:
+//!   segment naming ([`OscSegment`], [`split_segments`]) and the
+//!   digest-carrying JSONL writer ([`OscLogWriter`]) used by
+//!   `train --osc-out` and replayed by `tetrajet report`.
 //!
 //! Request lifecycle as traced (tid 0 = scheduler/request events,
 //! tid 1 = fleet execution):
@@ -29,12 +33,15 @@
 
 pub mod export;
 pub mod metrics;
+pub mod osclog;
 pub mod trace;
 
 pub use export::spawn_metrics_endpoint;
 pub use metrics::{
-    Counter, FCounter, Gauge, Histo, KernelMetrics, LAYER_NAMES, MetricsRegistry, Series,
+    Counter, FCounter, Gauge, Histo, KernelMetrics, LAYER_NAMES, MetricsRegistry, RingAgg, Series,
+    TsRing, SERIES_DEFAULT_CAP,
 };
+pub use osclog::{split_segments, OscLogWriter, OscSegment, OSCLOG_FORMAT};
 pub use trace::{TraceDigest, TraceSink};
 
 /// Log verbosity, ordered: `Quiet` < `Warn` < `Info`. Routed through

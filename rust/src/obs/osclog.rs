@@ -1,0 +1,228 @@
+//! `OSCLOG01` — versioned JSONL artifact for per-segment oscillation
+//! telemetry (`train --osc-out PATH`).
+//!
+//! Layout (one JSON object per line):
+//!
+//! ```text
+//! {"format":"OSCLOG01","variant":...,"mirror":...,"group_size":...,
+//!  "scale_enc":...,"threshold":...,"osc_window":...,"seed":...,
+//!  "total":N,"segments":[{seg},...]}            <- header, line 1
+//! {"t":S,"flips":[..],"conf":[..],"wdist":[..]} <- one per step
+//! {"window_end":S,"len":W,"osc":[..],"osc_total":K}
+//!                                               <- one per osc window
+//! ```
+//!
+//! Per-step arrays are indexed by the header's `segments` order. The
+//! writer folds every emitted byte (newline included) into the same
+//! FNV-1a [`TraceDigest`] the trace sink uses, so a fixed (seed,
+//! config) run is witnessed by one 16-hex-digit digest; `tetrajet
+//! report` and `obs-validate --osclog` recompute it from the file.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{num, s, Json};
+
+use super::trace::TraceDigest;
+
+/// Format tag carried in the header line of every artifact.
+pub const OSCLOG_FORMAT: &str = "OSCLOG01";
+
+/// One observed slice of the quantized weight vector: a manifest
+/// segment, split per transformer depth when the segment is
+/// depth-stacked (shape `[d, r, c]`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OscSegment {
+    /// `blocks.qkv_w.d3` for depth 3 of a stacked segment, else the
+    /// manifest name itself.
+    pub name: String,
+    /// Layer kind: `qkv` / `proj` / `fc1` / `fc2` / `other`.
+    pub kind: String,
+    /// Transformer depth, or -1 when the segment is not depth-stacked.
+    pub depth: i64,
+    /// Element offset into the concatenated quantized weight vector.
+    pub offset: usize,
+    /// Element count of this slice.
+    pub size: usize,
+    /// Row width (the quantization group axis), inherited from the
+    /// manifest segment.
+    pub cols: usize,
+}
+
+impl OscSegment {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("name".to_string(), s(&self.name)),
+            ("kind".to_string(), s(&self.kind)),
+            ("depth".to_string(), num(self.depth as f64)),
+            ("offset".to_string(), num(self.offset as f64)),
+            ("size".to_string(), num(self.size as f64)),
+            ("cols".to_string(), num(self.cols as f64)),
+        ])
+    }
+}
+
+/// Classify a segment name into the four quantized ViT layer kinds.
+pub fn layer_kind(name: &str) -> &'static str {
+    for k in super::metrics::LAYER_NAMES {
+        if name.contains(k) {
+            return k;
+        }
+    }
+    "other"
+}
+
+/// Split one manifest segment (name, tensor shape, element offset into
+/// the quantized weight vector) into [`OscSegment`]s: depth-stacked
+/// tensors (`[d, r, c]`) become one slice per depth, anything else is
+/// a single slice. Slices tile the segment exactly in offset order.
+pub fn split_segments(name: &str, shape: &[usize], offset: usize) -> Vec<OscSegment> {
+    let kind = layer_kind(name).to_string();
+    if shape.len() == 3 {
+        let (d, rows, cols) = (shape[0], shape[1], shape[2]);
+        let per = rows * cols;
+        (0..d)
+            .map(|i| OscSegment {
+                name: format!("{name}.d{i}"),
+                kind: kind.clone(),
+                depth: i as i64,
+                offset: offset + i * per,
+                size: per,
+                cols,
+            })
+            .collect()
+    } else {
+        let size: usize = shape.iter().product();
+        let cols = shape.last().copied().unwrap_or(1).max(1);
+        vec![OscSegment { name: name.to_string(), kind, depth: -1, offset, size, cols }]
+    }
+}
+
+/// Writes OSCLOG lines to an optional file while hashing them —
+/// the oscillation analogue of [`super::TraceSink`].
+pub struct OscLogWriter {
+    out: Option<Box<dyn Write + Send>>,
+    digest: TraceDigest,
+    lines: u64,
+}
+
+impl std::fmt::Debug for OscLogWriter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OscLogWriter")
+            .field("lines", &self.lines)
+            .field("digest", &self.digest.hex())
+            .finish()
+    }
+}
+
+impl OscLogWriter {
+    /// Buffered file sink at `path` (parent directories are created).
+    pub fn to_file(path: &Path) -> Result<OscLogWriter> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating osclog file {}", path.display()))?;
+        Ok(OscLogWriter {
+            out: Some(Box::new(std::io::BufWriter::new(f))),
+            digest: TraceDigest::new(),
+            lines: 0,
+        })
+    }
+
+    /// Digest-only sink: lines are hashed but written nowhere (tests,
+    /// determinism checks without artifacts).
+    pub fn in_memory() -> OscLogWriter {
+        OscLogWriter { out: None, digest: TraceDigest::new(), lines: 0 }
+    }
+
+    /// Emit one JSONL line.
+    pub fn line(&mut self, j: &Json) {
+        let line = j.to_string();
+        self.digest.update(line.as_bytes());
+        self.digest.update(b"\n");
+        self.lines += 1;
+        if let Some(out) = &mut self.out {
+            let _ = writeln!(out, "{line}");
+        }
+    }
+
+    pub fn lines(&self) -> u64 {
+        self.lines
+    }
+
+    /// 16-hex-digit FNV-1a digest over all emitted bytes.
+    pub fn digest(&self) -> String {
+        self.digest.hex()
+    }
+
+    /// Flush the underlying writer (call before reading the file).
+    pub fn finish(&mut self) -> Result<()> {
+        if let Some(out) = &mut self.out {
+            out.flush().context("flushing osclog sink")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_tiles_depth_stacked_segments_exactly() {
+        let segs = split_segments("blocks.qkv_w", &[3, 96, 32], 128);
+        assert_eq!(segs.len(), 3);
+        for (i, seg) in segs.iter().enumerate() {
+            assert_eq!(seg.name, format!("blocks.qkv_w.d{i}"));
+            assert_eq!(seg.kind, "qkv");
+            assert_eq!(seg.depth, i as i64);
+            assert_eq!(seg.size, 96 * 32);
+            assert_eq!(seg.cols, 32);
+        }
+        // Contiguous tiling from the segment offset.
+        assert_eq!(segs[0].offset, 128);
+        for w in segs.windows(2) {
+            assert_eq!(w[0].offset + w[0].size, w[1].offset);
+        }
+
+        let flat = split_segments("head_w", &[10, 64], 0);
+        assert_eq!(flat.len(), 1);
+        assert_eq!(flat[0].kind, "other");
+        assert_eq!(flat[0].depth, -1);
+        assert_eq!(flat[0].size, 640);
+        assert_eq!(flat[0].cols, 64);
+    }
+
+    #[test]
+    fn layer_kinds_cover_the_block_names() {
+        assert_eq!(layer_kind("blocks.qkv_w"), "qkv");
+        assert_eq!(layer_kind("blocks.proj_w"), "proj");
+        assert_eq!(layer_kind("blocks.fc1_w"), "fc1");
+        assert_eq!(layer_kind("blocks.fc2_w"), "fc2");
+        assert_eq!(layer_kind("embed.patch_w"), "other");
+    }
+
+    #[test]
+    fn writer_digest_matches_reference_fold() {
+        let mut w = OscLogWriter::in_memory();
+        let j = Json::Obj(vec![("t".to_string(), num(0.0))]);
+        w.line(&j);
+        let mut d = TraceDigest::new();
+        d.update(j.to_string().as_bytes());
+        d.update(b"\n");
+        assert_eq!(w.digest(), d.hex());
+        assert_eq!(w.lines(), 1);
+        // Identical streams share a digest; any perturbation moves it.
+        let mut w2 = OscLogWriter::in_memory();
+        w2.line(&j);
+        assert_eq!(w2.digest(), w.digest());
+        w2.line(&j);
+        assert_ne!(w2.digest(), w.digest());
+    }
+}

@@ -1,0 +1,510 @@
+//! Offline OSCLOG01 analyzer (`tetrajet report`): replays an
+//! oscillation-telemetry artifact and reproduces the paper's
+//! per-layer diagnostics as deterministic markdown + `OSCREPORT01`
+//! JSON.
+//!
+//! Everything is a pure function of the artifact bytes: the loader
+//! recomputes the FNV-1a digest while parsing (the same fold the
+//! writer applied), aggregation is serial f64 arithmetic in segment
+//! order, and floats are printed with fixed precision — two `report`
+//! runs over one OSCLOG are byte-identical.
+//!
+//! The headline number, `osc_fraction`, is recovered from the last
+//! window's `osc_total` with the *same* expression the trainer uses
+//! for its `train.osc.ratio` gauge (`count as f64 / total as f64`),
+//! so artifact and live gauge agree bit-exactly.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::obs::osclog::{OscSegment, OSCLOG_FORMAT};
+use crate::obs::TraceDigest;
+use crate::util::json::{num, s, Json};
+
+/// Format tag of the JSON report.
+pub const REPORT_FORMAT: &str = "OSCREPORT01";
+
+/// One per-step telemetry record.
+#[derive(Debug, Clone)]
+pub struct StepRec {
+    pub t: usize,
+    pub flips: Vec<u64>,
+    pub conf: Vec<f64>,
+    pub wdist: Vec<f64>,
+}
+
+/// One window-close record.
+#[derive(Debug, Clone)]
+pub struct WindowRec {
+    pub step: usize,
+    pub len: usize,
+    pub osc: Vec<u64>,
+    pub osc_total: usize,
+}
+
+/// A fully parsed OSCLOG01 artifact.
+#[derive(Debug, Clone)]
+pub struct OscLog {
+    pub variant: String,
+    pub mirror: String,
+    pub group_size: usize,
+    pub scale_enc: String,
+    pub threshold: f64,
+    pub osc_window: usize,
+    pub seed: u64,
+    pub total: usize,
+    pub segments: Vec<OscSegment>,
+    pub steps: Vec<StepRec>,
+    pub windows: Vec<WindowRec>,
+    /// Recomputed FNV-1a digest over the file bytes.
+    pub digest: String,
+    pub lines: u64,
+}
+
+fn f64_or_nan(j: &Json) -> f64 {
+    match j {
+        Json::Null => f64::NAN,
+        _ => j.as_f64().unwrap_or(f64::NAN),
+    }
+}
+
+fn u64_arr(j: &Json, key: &str) -> Result<Vec<u64>> {
+    j.req(key)?.as_arr()?.iter().map(|v| v.as_usize().map(|x| x as u64)).collect()
+}
+
+fn parse_segment(j: &Json) -> Result<OscSegment> {
+    Ok(OscSegment {
+        name: j.req("name")?.as_str()?.to_string(),
+        kind: j.req("kind")?.as_str()?.to_string(),
+        depth: j.req("depth")?.as_i64()?,
+        offset: j.req("offset")?.as_usize()?,
+        size: j.req("size")?.as_usize()?,
+        cols: j.req("cols")?.as_usize()?,
+    })
+}
+
+/// Parse `path` as OSCLOG01, recomputing the content digest. Validates
+/// the header schema, the contiguous segment tiling, and that every
+/// record's arrays match the segment count.
+pub fn load_osclog(path: &Path) -> Result<OscLog> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading osclog {}", path.display()))?;
+    let mut digest = TraceDigest::new();
+    let mut lines_it = text.lines();
+    let header_line = lines_it.next().context("osclog is empty")?;
+    digest.update(header_line.as_bytes());
+    digest.update(b"\n");
+    let header = Json::parse(header_line).context("parsing osclog header")?;
+    let fmt = header.req("format")?.as_str()?;
+    if fmt != OSCLOG_FORMAT {
+        bail!("unsupported osclog format {fmt:?} (want {OSCLOG_FORMAT:?})");
+    }
+    let total = header.req("total")?.as_usize()?;
+    let segments: Vec<OscSegment> = header
+        .req("segments")?
+        .as_arr()?
+        .iter()
+        .map(parse_segment)
+        .collect::<Result<_>>()?;
+    let mut covered = 0usize;
+    for seg in &segments {
+        if seg.offset != covered {
+            bail!("segment {:?} breaks the contiguous tiling at {}", seg.name, covered);
+        }
+        covered += seg.size;
+    }
+    if covered != total {
+        bail!("segments cover {covered} elements, header total is {total}");
+    }
+    let n = segments.len();
+
+    let mut steps = Vec::new();
+    let mut windows = Vec::new();
+    let mut lines = 1u64;
+    for line in lines_it {
+        digest.update(line.as_bytes());
+        digest.update(b"\n");
+        lines += 1;
+        let j = Json::parse(line).with_context(|| format!("parsing osclog line {lines}"))?;
+        if let Some(t) = j.get("t") {
+            let flips = u64_arr(&j, "flips")?;
+            let conf: Vec<f64> = j.req("conf")?.as_arr()?.iter().map(f64_or_nan).collect();
+            let wdist: Vec<f64> = j.req("wdist")?.as_arr()?.iter().map(f64_or_nan).collect();
+            if flips.len() != n || conf.len() != n || wdist.len() != n {
+                bail!("step line {lines}: array lengths != {n} segments");
+            }
+            steps.push(StepRec { t: t.as_usize()?, flips, conf, wdist });
+        } else if let Some(we) = j.get("window_end") {
+            let osc = u64_arr(&j, "osc")?;
+            if osc.len() != n {
+                bail!("window line {lines}: osc length != {n} segments");
+            }
+            let osc_total = j.req("osc_total")?.as_usize()?;
+            if osc.iter().map(|&x| x as usize).sum::<usize>() != osc_total {
+                bail!("window line {lines}: osc array does not sum to osc_total");
+            }
+            windows.push(WindowRec {
+                step: we.as_usize()?,
+                len: j.req("len")?.as_usize()?,
+                osc,
+                osc_total,
+            });
+        } else {
+            bail!("osclog line {lines} is neither a step nor a window record");
+        }
+    }
+
+    Ok(OscLog {
+        variant: header.req("variant")?.as_str()?.to_string(),
+        mirror: header.req("mirror")?.as_str()?.to_string(),
+        group_size: header.req("group_size")?.as_usize()?,
+        scale_enc: header.req("scale_enc")?.as_str()?.to_string(),
+        threshold: header.req("threshold")?.as_f64()?,
+        osc_window: header.req("osc_window")?.as_usize()?,
+        seed: header.req("seed")?.as_usize()? as u64,
+        total,
+        segments,
+        steps,
+        windows,
+        digest: digest.hex(),
+        lines,
+    })
+}
+
+/// Per-segment aggregates over a whole log.
+#[derive(Debug, Clone)]
+pub struct SegStats {
+    pub seg: OscSegment,
+    /// Flips per element per step.
+    pub flip_rate: f64,
+    pub total_flips: u64,
+    pub mean_conf: f64,
+    pub mean_wdist: f64,
+    /// Oscillating-element fraction of the last closed window (NaN if
+    /// no window closed).
+    pub osc_frac: f64,
+}
+
+/// The analyzed report.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub log_digest: String,
+    pub variant: String,
+    pub mirror: String,
+    pub threshold: f64,
+    pub osc_window: usize,
+    pub steps: usize,
+    pub windows: usize,
+    pub total: usize,
+    /// Aggregate oscillating fraction of the last closed window —
+    /// bit-exact to the trainer's `train.osc.ratio` gauge.
+    pub osc_fraction: f64,
+    pub osc_count: usize,
+    /// All segments in artifact order.
+    pub segs: Vec<SegStats>,
+    /// Indices into `segs`, sorted by flip rate descending (top-K).
+    pub top: Vec<usize>,
+    /// (depth, weighted flip rate) — depth −1 collects non-stacked segs.
+    pub by_depth: Vec<(i64, f64)>,
+    /// (kind, weighted flip rate) in qkv/proj/fc1/fc2/other order.
+    pub by_kind: Vec<(String, f64)>,
+}
+
+/// Aggregate `log` into per-segment, per-depth and per-kind flip-rate
+/// views plus the headline oscillation fraction.
+pub fn analyze(log: &OscLog, top_k: usize) -> Report {
+    let nsteps = log.steps.len();
+    let denom_steps = nsteps.max(1) as f64;
+    let mut segs = Vec::with_capacity(log.segments.len());
+    for (i, seg) in log.segments.iter().enumerate() {
+        let total_flips: u64 = log.steps.iter().map(|st| st.flips[i]).sum();
+        let mean = |f: &dyn Fn(&StepRec) -> f64| -> f64 {
+            if nsteps == 0 {
+                f64::NAN
+            } else {
+                log.steps.iter().map(|st| f(st)).sum::<f64>() / denom_steps
+            }
+        };
+        let mean_conf = mean(&|st: &StepRec| st.conf[i]);
+        let mean_wdist = mean(&|st: &StepRec| st.wdist[i]);
+        let osc_frac = match log.windows.last() {
+            Some(w) => w.osc[i] as f64 / seg.size.max(1) as f64,
+            None => f64::NAN,
+        };
+        segs.push(SegStats {
+            seg: seg.clone(),
+            flip_rate: total_flips as f64 / (denom_steps * seg.size.max(1) as f64),
+            total_flips,
+            mean_conf,
+            mean_wdist,
+            osc_frac,
+        });
+    }
+
+    let mut top: Vec<usize> = (0..segs.len()).collect();
+    // Deterministic order: rate descending, then artifact order.
+    top.sort_by(|&a, &b| {
+        let ord = segs[b].flip_rate.partial_cmp(&segs[a].flip_rate);
+        ord.unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    top.truncate(top_k);
+
+    // Size-weighted flip-rate distributions.
+    let weighted = |key: &dyn Fn(&SegStats) -> bool| -> f64 {
+        let (mut flips, mut elems) = (0u64, 0u64);
+        for st in segs.iter().filter(|st| key(st)) {
+            flips += st.total_flips;
+            elems += st.seg.size as u64;
+        }
+        flips as f64 / (denom_steps * (elems.max(1)) as f64)
+    };
+    let mut depths: Vec<i64> = segs.iter().map(|s| s.seg.depth).collect();
+    depths.sort_unstable();
+    depths.dedup();
+    let by_depth: Vec<(i64, f64)> =
+        depths.into_iter().map(|d| (d, weighted(&|s: &SegStats| s.seg.depth == d))).collect();
+    let mut kinds: Vec<String> = Vec::new();
+    for k in ["qkv", "proj", "fc1", "fc2", "other"] {
+        if segs.iter().any(|s| s.seg.kind == k) {
+            kinds.push(k.to_string());
+        }
+    }
+    let by_kind: Vec<(String, f64)> =
+        kinds.into_iter().map(|k| (k.clone(), weighted(&|s: &SegStats| s.seg.kind == k))).collect();
+
+    let (osc_count, osc_fraction) = match log.windows.last() {
+        // The trainer's gauge expression, verbatim: count / total.
+        Some(w) => (w.osc_total, w.osc_total as f64 / log.total.max(1) as f64),
+        None => (0, f64::NAN),
+    };
+
+    Report {
+        log_digest: log.digest.clone(),
+        variant: log.variant.clone(),
+        mirror: log.mirror.clone(),
+        threshold: log.threshold,
+        osc_window: log.osc_window,
+        steps: nsteps,
+        windows: log.windows.len(),
+        total: log.total,
+        osc_fraction,
+        osc_count,
+        segs,
+        top,
+        by_depth,
+        by_kind,
+    }
+}
+
+fn seg_json(st: &SegStats) -> Json {
+    Json::Obj(vec![
+        ("name".to_string(), s(&st.seg.name)),
+        ("kind".to_string(), s(&st.seg.kind)),
+        ("depth".to_string(), num(st.seg.depth as f64)),
+        ("size".to_string(), num(st.seg.size as f64)),
+        ("flip_rate".to_string(), num(st.flip_rate)),
+        ("total_flips".to_string(), num(st.total_flips as f64)),
+        ("mean_conf".to_string(), num(st.mean_conf)),
+        ("mean_wdist".to_string(), num(st.mean_wdist)),
+        ("osc_frac".to_string(), num(st.osc_frac)),
+    ])
+}
+
+impl Report {
+    /// Stable OSCREPORT01 JSON.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("format".to_string(), s(REPORT_FORMAT)),
+            ("log_digest".to_string(), s(&self.log_digest)),
+            ("variant".to_string(), s(&self.variant)),
+            ("mirror".to_string(), s(&self.mirror)),
+            ("threshold".to_string(), num(self.threshold)),
+            ("osc_window".to_string(), num(self.osc_window as f64)),
+            ("steps".to_string(), num(self.steps as f64)),
+            ("windows".to_string(), num(self.windows as f64)),
+            ("total".to_string(), num(self.total as f64)),
+            ("osc_count".to_string(), num(self.osc_count as f64)),
+            ("osc_fraction".to_string(), num(self.osc_fraction)),
+            (
+                "top".to_string(),
+                Json::Arr(self.top.iter().map(|&i| seg_json(&self.segs[i])).collect()),
+            ),
+            (
+                "by_depth".to_string(),
+                Json::Obj(
+                    self.by_depth.iter().map(|(d, r)| (format!("{d}"), num(*r))).collect(),
+                ),
+            ),
+            (
+                "by_kind".to_string(),
+                Json::Obj(self.by_kind.iter().map(|(k, r)| (k.clone(), num(*r))).collect()),
+            ),
+            (
+                "segments".to_string(),
+                Json::Arr(self.segs.iter().map(seg_json).collect()),
+            ),
+        ])
+    }
+
+    /// Deterministic markdown rendering (fixed float precision).
+    pub fn to_markdown(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "# Oscillation report — {} ({})", self.variant, self.mirror);
+        let _ = writeln!(out);
+        let _ = writeln!(
+            out,
+            "- steps: {} · windows: {} (len {}) · threshold R_w > {}",
+            self.steps, self.windows, self.osc_window, self.threshold
+        );
+        let _ = writeln!(
+            out,
+            "- oscillating: {} / {} weights ({:.6} of the quantized prefix, last window)",
+            self.osc_count, self.total, self.osc_fraction
+        );
+        let _ = writeln!(out, "- artifact digest: `{}`", self.log_digest);
+        let _ = writeln!(out);
+        let _ = writeln!(out, "## Top oscillating segments");
+        let _ = writeln!(out);
+        let _ = writeln!(out, "| segment | kind | depth | flip rate | osc frac | conf | |W−Wq| |");
+        let _ = writeln!(out, "|---|---|---:|---:|---:|---:|---:|");
+        for &i in &self.top {
+            let st = &self.segs[i];
+            let _ = writeln!(
+                out,
+                "| {} | {} | {} | {:.6} | {:.6} | {:.6} | {:.6} |",
+                st.seg.name,
+                st.seg.kind,
+                st.seg.depth,
+                st.flip_rate,
+                st.osc_frac,
+                st.mean_conf,
+                st.mean_wdist
+            );
+        }
+        let _ = writeln!(out);
+        let _ = writeln!(out, "## Flip rate by depth");
+        let _ = writeln!(out);
+        let _ = writeln!(out, "| depth | flip rate |");
+        let _ = writeln!(out, "|---:|---:|");
+        for (d, r) in &self.by_depth {
+            let _ = writeln!(out, "| {d} | {r:.6} |");
+        }
+        let _ = writeln!(out);
+        let _ = writeln!(out, "## Flip rate by layer kind");
+        let _ = writeln!(out);
+        let _ = writeln!(out, "| kind | flip rate |");
+        let _ = writeln!(out, "|---|---:|");
+        for (k, r) in &self.by_kind {
+            let _ = writeln!(out, "| {k} | {r:.6} |");
+        }
+        out
+    }
+}
+
+/// Controller-effect comparison of two logs (e.g. `mx_baseline` vs
+/// `tetrajet`): segments aligned by name, flip-rate deltas, and the
+/// aggregate fraction shift. Deterministic markdown table.
+pub fn compare_markdown(a: &Report, b: &Report) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "## Controller effect — {} vs {}", a.variant, b.variant);
+    let _ = writeln!(out);
+    let _ = writeln!(
+        out,
+        "- oscillating fraction: {:.6} → {:.6} (Δ {:+.6})",
+        a.osc_fraction,
+        b.osc_fraction,
+        b.osc_fraction - a.osc_fraction
+    );
+    let _ = writeln!(out);
+    let _ = writeln!(out, "| segment | {} flip rate | {} flip rate | Δ |", a.variant, b.variant);
+    let _ = writeln!(out, "|---|---:|---:|---:|");
+    for sa in &a.segs {
+        let Some(sb) = b.segs.iter().find(|s| s.seg.name == sa.seg.name) else {
+            continue;
+        };
+        let _ = writeln!(
+            out,
+            "| {} | {:.6} | {:.6} | {:+.6} |",
+            sa.seg.name,
+            sa.flip_rate,
+            sb.flip_rate,
+            sb.flip_rate - sa.flip_rate
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MetricsCfg;
+    use crate::coordinator::SynthTrainer;
+    use crate::obs::osclog::OscLogWriter;
+
+    fn write_log(variant: &str, seed: u64, steps: usize, path: &Path) -> (u64, String) {
+        let metrics = MetricsCfg {
+            rate_window: 0,
+            probe_every: 0,
+            osc_window: 10,
+            rw_threshold: 16.0,
+            conf_every: 0,
+        };
+        let mut t = SynthTrainer::new("tiny", variant, seed, metrics).unwrap();
+        t.attach_osclog(OscLogWriter::to_file(path).unwrap());
+        t.run(steps).unwrap().osclog.unwrap()
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("tj-report-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn loader_recovers_writer_digest_and_structure() {
+        let path = tmp("load.osclog");
+        let (lines, digest) = write_log("mx", 5, 25, &path);
+        let log = load_osclog(&path).unwrap();
+        assert_eq!(log.lines, lines);
+        assert_eq!(log.digest, digest, "recomputed digest must match the writer's");
+        assert_eq!(log.variant, "synthetic-tiny");
+        assert_eq!(log.mirror, "mx");
+        assert_eq!(log.osc_window, 10);
+        // 25 steps: first creates the tracker, 24 record; 2 windows.
+        assert_eq!(log.steps.len(), 24);
+        assert_eq!(log.windows.len(), 2);
+        assert_eq!(log.segments.len(), 8, "tiny = 4 tensors x depth 2");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn report_fraction_matches_the_gauge_expression() {
+        let path = tmp("frac.osclog");
+        write_log("nvfp4", 9, 25, &path);
+        let log = load_osclog(&path).unwrap();
+        let rep = analyze(&log, 5);
+        let w = log.windows.last().unwrap();
+        assert_eq!(rep.osc_fraction, w.osc_total as f64 / log.total.max(1) as f64);
+        assert_eq!(rep.top.len(), 5);
+        // Markdown and JSON are deterministic for one artifact.
+        let rep2 = analyze(&load_osclog(&path).unwrap(), 5);
+        assert_eq!(rep.to_markdown(), rep2.to_markdown());
+        assert_eq!(rep.to_json().to_string(), rep2.to_json().to_string());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compare_lists_aligned_segments() {
+        let (pa, pb) = (tmp("cmp-a.osclog"), tmp("cmp-b.osclog"));
+        write_log("mx", 11, 22, &pa);
+        write_log("nvfp4", 11, 22, &pb);
+        let ra = analyze(&load_osclog(&pa).unwrap(), 3);
+        let rb = analyze(&load_osclog(&pb).unwrap(), 3);
+        let md = compare_markdown(&ra, &rb);
+        assert!(md.contains("Controller effect"), "{md}");
+        assert!(md.contains("blocks.qkv_w.d0"), "{md}");
+        let _ = std::fs::remove_file(&pa);
+        let _ = std::fs::remove_file(&pb);
+    }
+}

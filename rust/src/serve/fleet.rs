@@ -28,7 +28,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::obs::{
-    Counter, FCounter, Histo, KernelMetrics, MetricsRegistry, TraceSink,
+    Counter, FCounter, Histo, KernelMetrics, MetricsRegistry, TraceSink, TsRing,
 };
 use crate::serve::act::ActQuantCache;
 use crate::serve::engine::ServeConfig;
@@ -41,6 +41,11 @@ use crate::util::json::num;
 const TID_REQUEST: u64 = 0;
 const TID_EXEC: u64 = 1;
 
+/// Window of the per-engine busy-ratio rings: recent batches only, so
+/// the surface stays O(engines × window) no matter how long the fleet
+/// runs.
+const BUSY_RING_CAP: usize = 256;
+
 /// Fleet-level instrumentation handles.
 #[derive(Debug, Clone)]
 pub struct FleetMetrics {
@@ -52,6 +57,10 @@ pub struct FleetMetrics {
     pub steps: Counter,
     /// Per-engine forward time (`fleet.engine{e}.busy_ms`).
     pub engine_busy_ms: Vec<FCounter>,
+    /// Rolling per-batch busy ratio — the slice of each executed
+    /// batch's compute time this engine spent in its kernel
+    /// (`fleet.engine{e}.busy_ratio`, last [`BUSY_RING_CAP`] batches).
+    pub engine_busy_ratio: Vec<TsRing>,
     /// Per-layer fused-GEMM calls/time (`kernel.{layer}.*`).
     pub kernel: KernelMetrics,
 }
@@ -65,6 +74,9 @@ impl FleetMetrics {
             steps: reg.counter("fleet.steps"),
             engine_busy_ms: (0..engines)
                 .map(|e| reg.fcounter(&format!("fleet.engine{e}.busy_ms")))
+                .collect(),
+            engine_busy_ratio: (0..engines)
+                .map(|e| reg.ring(&format!("fleet.engine{e}.busy_ratio"), BUSY_RING_CAP))
                 .collect(),
             kernel: KernelMetrics::in_registry(reg),
         }
@@ -125,6 +137,9 @@ pub struct ServeFleet {
     /// batches (0 = off).
     snapshot_every: u64,
     batch_seq: u64,
+    /// `fleet.engine{e}.busy_ms` as of the previous executed batch, so
+    /// each batch's busy-ratio sample is a delta, not a running total.
+    last_busy: Vec<f64>,
 }
 
 impl ServeFleet {
@@ -179,6 +194,7 @@ impl ServeFleet {
             trace: None,
             snapshot_every: 0,
             batch_seq: 0,
+            last_busy: vec![0.0; cfg.engines],
         })
     }
 
@@ -359,6 +375,13 @@ impl ServeFleet {
         self.done.on_batch(&plan, &logits, done_ms, compute_ms);
         self.obs.steps.inc();
         self.obs.batch_images.observe(plan.m as f64);
+        for (e, ring) in self.obs.engine_busy_ratio.iter().enumerate() {
+            let busy = self.obs.engine_busy_ms[e].get();
+            let ratio =
+                if compute_ms > 0.0 { (busy - self.last_busy[e]) / compute_ms } else { 0.0 };
+            self.last_busy[e] = busy;
+            ring.push(ratio);
+        }
         if let Some(trace) = &mut self.trace {
             // Under a virtual clock (deterministic sink) the trace must
             // be a pure function of (seed, config): the shard-forward
@@ -625,6 +648,12 @@ mod tests {
         assert_eq!(reg.counter("sched.admits").get(), 1);
         // depth=2 blocks x 2 batches = 4 qkv GEMMs.
         assert_eq!(reg.counter("kernel.qkv.calls").get(), 4);
+        // One busy-ratio sample per engine per executed batch, bounded.
+        for e in 0..2 {
+            let ring = reg.ring(&format!("fleet.engine{e}.busy_ratio"), BUSY_RING_CAP);
+            assert_eq!(ring.count(), 2);
+            assert!(ring.window().iter().all(|r| r.is_finite() && *r >= 0.0));
+        }
         // stats() is a view over the same registry cells.
         assert_eq!(fleet.stats(), LatencySummary::from_registry(&reg, "serve"));
         // Lifecycle: admit + 2x(queued+batched) + 2x(fwd+gather) + redeemed.

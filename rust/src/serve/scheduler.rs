@@ -15,15 +15,22 @@
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 
-use crate::obs::{Counter, Gauge, MetricsRegistry};
+use crate::obs::{Counter, Gauge, MetricsRegistry, TsRing};
 use crate::serve::engine::argmax_rows;
 use crate::serve::stats::LatencyRecorder;
+
+/// Window of the queue-depth ring: the gauge keeps the instantaneous
+/// value, the ring keeps the last N observations for min/mean/max.
+const DEPTH_RING_CAP: usize = 256;
 
 /// Scheduler instrumentation handles: queue depth (in images) plus
 /// admit/reject/expiry counters.
 #[derive(Debug, Clone)]
 pub struct SchedMetrics {
     pub queue_depth: Gauge,
+    /// Recent queue-depth samples (`sched.queue_depth.recent`), one per
+    /// admission or batch-formation event.
+    pub queue_depth_recent: TsRing,
     pub admits: Counter,
     pub rejects: Counter,
     pub expiries: Counter,
@@ -35,6 +42,7 @@ impl SchedMetrics {
     pub fn in_registry(reg: &MetricsRegistry) -> SchedMetrics {
         SchedMetrics {
             queue_depth: reg.gauge("sched.queue_depth"),
+            queue_depth_recent: reg.ring("sched.queue_depth.recent", DEPTH_RING_CAP),
             admits: reg.counter("sched.admits"),
             rejects: reg.counter("sched.rejects"),
             expiries: reg.counter("sched.expiries"),
@@ -231,6 +239,7 @@ impl Scheduler {
         });
         self.obs.admits.inc();
         self.obs.queue_depth.set(self.queued_images as f64);
+        self.obs.queue_depth_recent.push(self.queued_images as f64);
         Ok(Ticket { id })
     }
 
@@ -284,6 +293,7 @@ impl Scheduler {
         }
         self.obs.expiries.add(expired.len() as u64);
         self.obs.queue_depth.set(self.queued_images as f64);
+        self.obs.queue_depth_recent.push(self.queued_images as f64);
         let plan = (m > 0).then_some(BatchPlan { images, m, spans });
         (expired, plan)
     }
@@ -461,6 +471,11 @@ mod tests {
         assert_eq!(reg.counter("sched.rejects").get(), 1);
         assert_eq!(reg.counter("sched.expiries").get(), 1);
         assert_eq!(reg.gauge("sched.queue_depth").get_opt(), Some(0.0));
+        // The recent-depth ring saw both admits and the batch formation
+        // (rejects don't change the depth, so they don't sample it).
+        let ring = reg.ring("sched.queue_depth.recent", DEPTH_RING_CAP);
+        assert_eq!(ring.window(), vec![2.0, 4.0, 0.0]);
+        assert_eq!(ring.agg().max, 4.0);
     }
 
     #[test]

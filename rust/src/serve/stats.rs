@@ -42,11 +42,14 @@ impl LatencySummary {
     /// seam that makes session/fleet/bench stats one view of the
     /// registry. Metrics that were never registered read as zero.
     pub fn from_registry(reg: &MetricsRegistry, prefix: &str) -> LatencySummary {
-        let xs = reg.series(&format!("{prefix}.latency_ms")).values();
+        let lat = reg.series(&format!("{prefix}.latency_ms"));
+        // The series is a bounded ring: `count` is the total ever
+        // recorded, the percentiles run over the retained window.
+        let xs = lat.values();
         let first = reg.gauge(&format!("{prefix}.first_arrival_ms")).get_opt();
         let last = reg.gauge(&format!("{prefix}.last_done_ms")).get_opt();
         LatencySummary {
-            count: xs.len(),
+            count: lat.count() as usize,
             images: reg.counter(&format!("{prefix}.images")).get() as usize,
             batches: reg.counter(&format!("{prefix}.batches")).get() as usize,
             rejected: reg.counter(&format!("{prefix}.rejected")).get() as usize,
@@ -183,9 +186,9 @@ impl LatencyRecorder {
         self.expired.inc();
     }
 
-    /// Requests completed so far.
+    /// Requests completed so far (total, not just the retained window).
     pub fn completed(&self) -> usize {
-        self.latencies.len()
+        self.latencies.count() as usize
     }
 
     pub fn summary(&self) -> LatencySummary {

@@ -103,7 +103,7 @@ fn registry_snapshot_has_the_stable_obs_validate_schema() {
     fleet.infer_logits(vec![0.1; 3 * px], 3).unwrap();
 
     let snap = fleet.registry().snapshot_json();
-    for section in ["counters", "gauges", "hists", "series"] {
+    for section in ["counters", "gauges", "hists", "series", "rings"] {
         assert!(snap.get(section).is_some(), "snapshot missing {section}");
     }
     // The names `tetrajet obs-validate --snapshot` requires.
@@ -124,6 +124,9 @@ fn registry_snapshot_has_the_stable_obs_validate_schema() {
     assert!(snap.get("gauges").unwrap().get("sched.queue_depth").is_some());
     assert!(snap.get("hists").unwrap().get("fleet.batch_images").is_some());
     assert!(snap.get("series").unwrap().get("serve.latency_ms").is_some());
+    let rings = snap.get("rings").unwrap();
+    assert!(rings.get("fleet.engine0.busy_ratio").is_some());
+    assert!(rings.get("sched.queue_depth.recent").is_some());
     // And the summary view over those cells agrees with fleet.stats().
     assert_eq!(fleet.stats(), LatencySummary::from_registry(fleet.registry(), "serve"));
 }

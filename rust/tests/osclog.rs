@@ -1,0 +1,111 @@
+//! Integration tests for the oscillation observatory: OSCLOG01
+//! artifacts written through the synthetic trainer, the offline
+//! `report` analyzer recovering the trainer's gauges bit-exactly, and
+//! boundedness of the telemetry surface over long runs.
+
+use std::path::{Path, PathBuf};
+
+use tetrajet::config::MetricsCfg;
+use tetrajet::coordinator::SynthTrainer;
+use tetrajet::obs::osclog::OscLogWriter;
+use tetrajet::obs::{MetricsRegistry, SERIES_DEFAULT_CAP};
+use tetrajet::report;
+
+fn metrics(window: usize) -> MetricsCfg {
+    MetricsCfg {
+        rate_window: 0,
+        probe_every: 0,
+        osc_window: window,
+        rw_threshold: 16.0,
+        conf_every: 0,
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("tj-osclog-it-{}-{name}", std::process::id()))
+}
+
+#[test]
+fn osclog_artifact_is_byte_identical_across_reruns_for_both_mirrors() {
+    for variant in ["mx", "nvfp4"] {
+        let run = |path: &Path| {
+            let mut t = SynthTrainer::new("tiny", variant, 42, metrics(10)).unwrap();
+            t.attach_osclog(OscLogWriter::to_file(path).unwrap());
+            t.run(30).unwrap().osclog.unwrap()
+        };
+        let (pa, pb) = (tmp(&format!("{variant}-a.osclog")), tmp(&format!("{variant}-b.osclog")));
+        let (la, da) = run(&pa);
+        let (lb, db) = run(&pb);
+        assert_eq!((la, &da), (lb, &db), "{variant}: fixed (seed, config) must be stable");
+        assert_eq!(
+            std::fs::read(&pa).unwrap(),
+            std::fs::read(&pb).unwrap(),
+            "{variant}: the files themselves must be byte-identical"
+        );
+        // The offline loader recomputes the same digest from the bytes.
+        let log = report::load_osclog(&pa).unwrap();
+        assert_eq!(log.digest, da, "{variant}: loader digest must match the writer's");
+        assert_eq!(log.lines, la);
+        let _ = std::fs::remove_file(&pa);
+        let _ = std::fs::remove_file(&pb);
+    }
+}
+
+#[test]
+fn report_recovers_the_trainer_osc_ratio_bit_exactly() {
+    let path = tmp("ratio.osclog");
+    let mut t = SynthTrainer::new("tiny", "nvfp4", 7, metrics(10)).unwrap();
+    t.attach_osclog(OscLogWriter::to_file(&path).unwrap());
+    let run = t.run(35).unwrap();
+    assert!(!run.windows.is_empty(), "35 steps at window 10 must close windows");
+    let gauge = t.registry().gauge("train.osc.ratio").get();
+
+    let log = report::load_osclog(&path).unwrap();
+    let rep = report::analyze(&log, 4);
+    assert_eq!(rep.osc_fraction, gauge, "artifact replay must equal the live gauge bit-exactly");
+    assert_eq!(rep.windows, run.windows.len());
+    assert_eq!(rep.osc_count, run.windows.last().unwrap().1);
+    assert_eq!(rep.total, run.qw_total);
+    // The distributions partition the same flips: every segment is in
+    // exactly one depth and one kind bucket.
+    assert_eq!(rep.segs.len(), run.segments);
+    assert!(rep.by_depth.iter().map(|(d, _)| d).all(|&d| d >= 0));
+    assert!(!rep.by_kind.is_empty());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn observatory_keeps_step_flip_telemetry_in_a_bounded_ring() {
+    let mut t = SynthTrainer::new("tiny", "mx", 3, metrics(8)).unwrap();
+    t.attach_osclog(OscLogWriter::in_memory());
+    t.run(60).unwrap();
+    let ring = t.registry().ring("train.osc.step_flips", 1);
+    // Step 0 seeds the tracker; every later step records one sample.
+    assert_eq!(ring.count(), 59);
+    assert!(ring.len() <= ring.capacity());
+}
+
+#[test]
+fn telemetry_surface_does_not_grow_with_run_length() {
+    // The 10k-step boundedness gate: rings and series are fixed-size,
+    // so the registry snapshot stops growing once windows fill.
+    let reg = MetricsRegistry::new();
+    let ring = reg.ring("train.osc.step_flips", 256);
+    let series = reg.series("train.step_ms");
+    let mut mid = 0usize;
+    for i in 0..10_000u64 {
+        ring.push(i as f64);
+        series.record(i as f64);
+        if i == 4_999 {
+            mid = reg.snapshot_json().to_string().len();
+        }
+    }
+    assert_eq!(ring.count(), 10_000);
+    assert!(ring.len() <= 256);
+    assert!(series.len() <= SERIES_DEFAULT_CAP);
+    let end = reg.snapshot_json().to_string().len();
+    assert!(
+        end.abs_diff(mid) < 64,
+        "snapshot size must not scale with steps: {mid} bytes at 5k vs {end} at 10k"
+    );
+}
